@@ -1,0 +1,43 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: numbers validate
+CORRECTNESS cost only; TPU timings come from the roofline, not this host).
+Compares kernel vs pure-jnp oracle per call."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops, ref
+
+
+def run():
+    key = jax.random.key(0)
+    B, S, H, KH, hd = 1, 256, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(key, (B, S, KH, hd))
+    v = jax.random.normal(key, (B, S, KH, hd))
+    us_k = timeit(lambda: ops.attention(q, k, v, block_q=128, block_k=128))
+    ref_j = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v))
+    us_r = timeit(lambda: ref_j(q, k, v))
+    emit("kernel_flash_attn_interp", us_k, f"ref_us={us_r:.0f}")
+
+    dims = [211, 512, 512, 512, 256]
+    ws = [jax.random.normal(jax.random.fold_in(key, i),
+                            (dims[i], dims[i + 1])) * 0.05
+          for i in range(4)]
+    bs = [jnp.zeros((d,)) for d in dims[1:]]
+    x = jax.random.normal(key, (512, 211))
+    us_k = timeit(lambda: ops.policy_mlp(x, ws, bs))
+    ref_j = jax.jit(lambda x: ref.policy_mlp_ref(x, ws, bs))
+    us_r = timeit(lambda: ref_j(x))
+    emit("kernel_policy_mlp_interp", us_k, f"ref_us={us_r:.0f}")
+
+    B, H, S, dh = 1, 4, 256, 32
+    qm = jax.random.normal(key, (B, H, S, dh))
+    li = jax.random.normal(key, (B, H, S)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(key, (B, H, S)) + 2.0)
+    us_k = timeit(lambda: ops.mlstm(qm, qm, qm, li, lf, chunk=64))
+    ref_j = jax.jit(lambda: ref.mlstm_chunkwise_ref(qm, qm, qm, li, lf,
+                                                    chunk=64))
+    us_r = timeit(ref_j)
+    emit("kernel_mlstm_interp", us_k, f"ref_us={us_r:.0f}")

@@ -1,0 +1,79 @@
+"""Table 7: LGR vs the MPR baseline on the paper's three layouts
+(2G2T, 2G3T, 4G2T here — 8 fake host devices) and three policy sizes
+(AT ~1.1e5, HM ~2.9e5, SH ~1.5e6 parameters).
+
+Runs in a subprocess with 8 host devices so the main process keeps one.
+Reports measured reduction wall time and the Table-2 model's prediction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+from repro.core.cost_model import LGR_TIMES
+
+_CHILD = textwrap.dedent("""
+    import json, sys, time
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    sys.path.insert(0, "src")
+    from repro.core.lgr import lgr_allreduce, mpr_host
+    from repro.core.placement import select_reduction_strategy
+
+    SIZES = {"AT": 110_000, "HM": 290_000, "SH": 1_500_000}
+    LAYOUTS = {"2G2T": (2, 2), "2G3T": (2, 3), "4G2T": (4, 2)}
+    out = {}
+    for lname, (g, t) in LAYOUTS.items():
+        devs = np.array(jax.devices()[:g*t]).reshape(g, t)
+        mesh = Mesh(devs, ("gpu", "inst"))
+        mpl = [[gi*t + i for i in range(t)] for gi in range(g)]
+        strat = select_reduction_strategy(mpl)
+        for bench, n in SIZES.items():
+            grads = {"w": jax.random.normal(jax.random.key(0), (g, t, n))}
+            def run_lgr():
+                return lgr_allreduce(grads, mesh, strat)
+            r = run_lgr(); jax.block_until_ready(r)
+            t0 = time.perf_counter()
+            for _ in range(5):
+                r = run_lgr()
+            jax.block_until_ready(r)
+            us_lgr = (time.perf_counter() - t0) / 5 * 1e6
+            per_inst = [jax.tree.map(lambda x: x[i, j], grads)
+                        for i in range(g) for j in range(t)]
+            t0 = time.perf_counter()
+            for _ in range(3):
+                mpr_host(per_inst)
+            us_mpr = (time.perf_counter() - t0) / 3 * 1e6
+            out[f"{lname}_{bench}"] = {
+                "strategy": strat, "us_lgr": us_lgr, "us_mpr": us_mpr}
+    print(json.dumps(out))
+""")
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                          capture_output=True, text=True, timeout=900,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    if proc.returncode != 0:
+        emit("lgr_table7", 0.0, f"FAILED:{proc.stderr[-200:]}")
+        return
+    data = json.loads(proc.stdout.strip().splitlines()[-1])
+    B1, B2 = 5e9, 200e9
+    for key, rec in data.items():
+        lname, bench = key.split("_")
+        g, t = int(lname[0]), int(lname[2])
+        n = {"AT": 110_000, "HM": 290_000, "SH": 1_500_000}[bench] * 4
+        pred = {s: LGR_TIMES[s](g, t, n, B1, B2) * 1e6
+                for s in ("mpr", rec["strategy"])}
+        emit(f"lgr_{key}_{rec['strategy']}", rec["us_lgr"],
+             f"mpr_us={rec['us_mpr']:.0f}_speedup="
+             f"{rec['us_mpr'] / rec['us_lgr']:.2f}x_model_speedup="
+             f"{pred['mpr'] / pred[rec['strategy']]:.2f}x")

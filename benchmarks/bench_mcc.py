@@ -1,0 +1,74 @@
+"""Table 8: multi-channel (MCC) vs uni-channel (UCC) experience sharing on
+AY and FC — transfer counts, granularity, wall time, and the throughput
+proxies PPS (handled experience/s) and TTOP (samples delivered to
+trainers/s).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.channels import MultiChannelPipeline, UniChannelPipeline
+from repro.envs import make_env
+from repro.rl.a3c import Experience
+
+
+def _make_exp(spec, T=32, N=64, version=0):
+    key = jax.random.key(version)
+    return Experience(
+        obs=jax.random.normal(key, (T, N, spec.obs_dim)),
+        actions=jax.random.normal(key, (T, N, spec.act_dim)),
+        rewards=jax.random.normal(key, (T, N)),
+        dones=jnp.zeros((T, N)),
+        bootstrap=jnp.zeros((N,)),
+        actor_version=jnp.int32(version))
+
+
+def run(benches=("Anymal", "FrankaCabinet"), agents=4, rounds=6):
+    for bench in benches:
+        spec = make_env(bench).spec
+        exps = [[_make_exp(spec, version=r * agents + a)
+                 for a in range(agents)] for r in range(rounds)]
+
+        mcc = MultiChannelPipeline(list(range(agents)), [100, 101])
+        t0 = time.perf_counter()
+        delivered = 0
+        for r in range(rounds):
+            for a in range(agents):
+                mcc.push(a, exps[r][a])
+            for dst, batches in mcc.flush().items():
+                for b in batches:
+                    jax.block_until_ready(b.obs)
+                    delivered += b.rewards.size
+        dt_mcc = time.perf_counter() - t0
+
+        ucc = UniChannelPipeline([100, 101])
+        t0 = time.perf_counter()
+        delivered_u = 0
+        for r in range(rounds):
+            for a in range(agents):
+                # UCC: each tuple shipped separately at fine granularity,
+                # then materialized field-by-field at the trainer
+                exp = exps[r][a]
+                ucc.send(exp)
+                parts = [jnp.asarray(x) for x in
+                         (exp.obs, exp.actions, exp.rewards, exp.dones,
+                          exp.bootstrap)]
+                jax.block_until_ready(parts)
+                delivered_u += exp.rewards.size
+        dt_ucc = time.perf_counter() - t0
+
+        pps_m = delivered / dt_mcc
+        pps_u = delivered_u / dt_ucc
+        emit(f"mcc_{bench}", dt_mcc * 1e6 / rounds,
+             f"TTOP={pps_m:.0f}_transfers={mcc.stats.num_transfers}"
+             f"_B/transfer={mcc.stats.bytes_per_transfer:.0f}")
+        emit(f"ucc_{bench}", dt_ucc * 1e6 / rounds,
+             f"TTOP={pps_u:.0f}_transfers={ucc.stats.num_transfers}"
+             f"_B/transfer={ucc.stats.bytes_per_transfer:.0f}")
+        emit(f"mcc_over_ucc_{bench}", 0.0,
+             f"ttop_ratio={pps_m / pps_u:.2f}x_granularity_ratio="
+             f"{mcc.stats.bytes_per_transfer / ucc.stats.bytes_per_transfer:.1f}x")

@@ -1,0 +1,40 @@
+"""Fig 10: sync-training throughput and memory vs num_env (AT and HM) —
+the saturation behaviour that drives Algorithm 2's Sat metric."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.envs import make_env
+from repro.rl.ppo import PPOConfig, init_train, make_train_step
+
+
+def run(benches=("Ant", "Humanoid"), sweep=(128, 256, 512, 1024, 2048)):
+    cfg = PPOConfig(num_steps=8, num_epochs=1, num_minibatches=1)
+    for bench in benches:
+        env = make_env(bench)
+        spec = env.spec
+        prev_top = None
+        for ne in sweep:
+            params, opt, est, obs = init_train(
+                jax.random.key(0), env, spec.policy_dims, num_envs=ne)
+            step = make_train_step(env, cfg)
+            k = jax.random.PRNGKey(0)
+            state = [params, opt, est, obs, k]
+
+            def it():
+                state[0], state[1], state[2], state[3], state[4], m = \
+                    step(*state)
+                return m["loss"]
+
+            us = timeit(it, warmup=1, iters=2)
+            top = cfg.num_steps * ne / (us / 1e6)
+            # rollout + state memory model (bytes)
+            mem = 4 * ne * (spec.obs_dim * (cfg.num_steps + 1)
+                            + spec.act_dim * (cfg.num_steps + 2)
+                            + 4 * cfg.num_steps + spec.act_dim * 3 + 10)
+            sat = "" if prev_top is None else \
+                f"_dTOP={top / prev_top - 1:+.2f}"
+            prev_top = top
+            emit(f"numenv_{bench}_{ne}", us,
+                 f"steps_per_s={top:.0f}_mem_bytes={mem}{sat}")

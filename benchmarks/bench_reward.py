@@ -1,0 +1,53 @@
+"""Fig 9: reward accumulation over wall-clock training time — GMI layout
+(2 holistic instances with policy sync) vs single-instance baseline, on AT
+and AY (short CPU-budget runs; the TREND is the reproduction target)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.envs import make_env
+from repro.rl.ppo import PPOConfig, init_train, make_train_step
+
+
+def _train(bench, n_inst, num_env_total, budget_s):
+    env = make_env(bench)
+    cfg = PPOConfig(num_steps=16, num_epochs=2, num_minibatches=2, lr=1e-3)
+    insts = []
+    step = make_train_step(env, cfg)
+    for i in range(n_inst):
+        p, o, es, ob = init_train(jax.random.key(i), env,
+                                  env.spec.policy_dims,
+                                  num_env_total // n_inst)
+        insts.append([p, o, es, ob, jax.random.PRNGKey(i)])
+    # warm-up compile outside the budget
+    for s in insts:
+        s[0], s[1], s[2], s[3], s[4], _ = step(*s)
+    t0 = time.perf_counter()
+    acc = 0.0
+    while time.perf_counter() - t0 < budget_s:
+        ms = []
+        for s in insts:
+            s[0], s[1], s[2], s[3], s[4], m = step(*s)
+            ms.append(float(m["reward_sum"]))
+        acc += float(np.mean(ms))
+        if n_inst > 1:
+            mean_p = jax.tree.map(lambda *xs: sum(xs) / n_inst,
+                                  *[s[0] for s in insts])
+            for s in insts:
+                s[0] = mean_p
+    return acc
+
+
+def run(benches=("Ant", "Anymal"), budget_s: float = 6.0):
+    for bench in benches:
+        acc_gmi = _train(bench, 2, 256, budget_s)
+        acc_base = _train(bench, 1, 256, budget_s)
+        emit(f"reward_accum_gmi_{bench}", budget_s * 1e6,
+             f"acc_reward={acc_gmi:.1f}")
+        emit(f"reward_accum_base_{bench}", budget_s * 1e6,
+             f"acc_reward={acc_base:.1f}_gmi_ratio="
+             f"{acc_gmi / max(acc_base, 1e-9):.2f}x")

@@ -1,0 +1,73 @@
+"""Fig 7(a): DRL serving throughput — TCG (colocated simulator+agent, the
+paper's serving block) vs TDG (dedicated instances with a memory barrier
+between them).
+
+On this host the memory barrier of the TDG baseline is reproduced
+faithfully as a host round-trip (device_get/device_put) between the
+simulator instance and the agent instance — exactly the §5.1 argument for
+why TDG loses: 2S+A+W crosses the boundary every interaction round.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.cost_model import serving_speedup_tcg_over_tdg
+from repro.envs import make_env
+from repro.models.policy import init_policy, policy_apply, sample_action
+
+
+def run(num_env: int = 512, steps: int = 16, benches=("Ant", "Humanoid")):
+    for bench in benches:
+        env = make_env(bench)
+        params = init_policy(jax.random.key(0), env.spec.policy_dims)
+        est, obs = env.reset(jax.random.PRNGKey(0), num_envs=num_env)
+
+        # ---- TCG: one fused jitted serving block (COM = 0) --------------
+        @jax.jit
+        def tcg_rollout(params, est, obs, key):
+            def step(carry, _):
+                est, obs, key = carry
+                key, ak = jax.random.split(key)
+                mu, ls, _ = policy_apply(params, obs)
+                act = sample_action(ak, mu, ls)
+                est, obs, r, d = env.step(est, act)
+                return (est, obs, key), r
+            (est, obs, key), rs = jax.lax.scan(step, (est, obs, key), None,
+                                               length=steps)
+            return est, obs, key, rs.sum()
+
+        key = jax.random.PRNGKey(1)
+        us_tcg = timeit(lambda: tcg_rollout(params, est, obs, key))
+
+        # ---- TDG: simulator instance and agent instance with the GMI
+        # memory barrier (host staging) between every interaction ----------
+        sim_step = jax.jit(env.step)
+        agent_step = jax.jit(
+            lambda p, o, k: sample_action(
+                k, *policy_apply(p, o)[:2]))
+
+        def tdg_rollout():
+            nonlocal est, obs
+            e, o = est, obs
+            k = jax.random.PRNGKey(1)
+            for _ in range(steps):
+                # agent GMI: obs crosses the barrier (S), action returns (A)
+                o_host = np.asarray(o)                  # device -> host
+                k, ak = jax.random.split(k)
+                act = agent_step(params, jnp.asarray(o_host), ak)
+                a_host = np.asarray(act)                # host -> device
+                e, o, r, d = sim_step(e, jnp.asarray(a_host))
+            return o
+
+        us_tdg = timeit(tdg_rollout, warmup=1, iters=2)
+        sps_tcg = steps * num_env / (us_tcg / 1e6)
+        sps_tdg = steps * num_env / (us_tdg / 1e6)
+        emit(f"serving_tcg_{bench}", us_tcg, f"steps_per_s={sps_tcg:.0f}")
+        emit(f"serving_tdg_{bench}", us_tdg, f"steps_per_s={sps_tdg:.0f}")
+        emit(f"serving_speedup_{bench}", 0.0,
+             f"tcg_over_tdg={sps_tcg / sps_tdg:.2f}x_"
+             f"(cost_model={serving_speedup_tcg_over_tdg():.2f}x_"
+             f"paper~2.5x)")

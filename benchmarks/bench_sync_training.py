@@ -1,0 +1,70 @@
+"""Fig 7(b)(c): synchronized DRL training throughput — the holistic-GMI
+pipeline (TCG_EX: collect + train in one compiled program) vs the
+dedicated-trainer baseline (TDG_EX: experience crosses the instance
+barrier to a separate trainer step every iteration).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.cost_model import training_speedup_tcg_over_tdg
+from repro.envs import make_env
+from repro.rl.ppo import PPOConfig, init_train, make_train_step, ppo_loss
+from repro.rl.rollout import collect, gae
+from repro.optim import adam_update
+
+
+def run(num_env: int = 256, benches=("Ant", "ShadowHand")):
+    cfg = PPOConfig(num_steps=16, num_epochs=1, num_minibatches=2)
+    for bench in benches:
+        env = make_env(bench)
+        params, opt, est, obs = init_train(jax.random.key(0), env,
+                                           env.spec.policy_dims, num_env)
+        # ---- TCG_EX: one fused iteration ---------------------------------
+        step = make_train_step(env, cfg)
+        k = jax.random.PRNGKey(0)
+        params, opt, est, obs, k, _ = step(params, opt, est, obs, k)  # warm
+
+        def tcg_iter():
+            nonlocal params, opt, est, obs, k
+            params, opt, est, obs, k, m = step(params, opt, est, obs, k)
+            return m["loss"]
+
+        us_tcg = timeit(tcg_iter, warmup=0, iters=3)
+
+        # ---- TDG_EX: collection instance -> barrier -> trainer instance --
+        collect_j = jax.jit(lambda p, e, o, key: collect(p, env, e, o, key,
+                                                         cfg.num_steps))
+        grad_j = jax.jit(jax.value_and_grad(
+            lambda p, b: ppo_loss(p, b, cfg.clip_eps, cfg.vf_coef,
+                                  cfg.ent_coef)[0]))
+
+        def tdg_iter():
+            nonlocal params, opt, est, obs, k
+            traj, est, obs, lastv, k = collect_j(params, est, obs, k)
+            # experience crosses the GMI barrier: m*(S+A+W) through host
+            host = jax.tree.map(np.asarray, traj)
+            traj = jax.tree.map(jnp.asarray, host)
+            advs, rets = gae(traj.rewards, traj.values, traj.dones, lastv)
+            T, N = traj.rewards.shape
+            flat = jax.tree.map(
+                lambda x: x.reshape((T * N,) + x.shape[2:]),
+                (traj.obs, traj.actions, traj.log_probs, advs, rets))
+            loss, grads = grad_j(params, flat)
+            params, opt = adam_update(grads, opt, params, lr=cfg.lr)
+            return loss
+
+        us_tdg = timeit(tdg_iter, warmup=1, iters=3)
+        sps_tcg = cfg.num_steps * num_env / (us_tcg / 1e6)
+        sps_tdg = cfg.num_steps * num_env / (us_tdg / 1e6)
+        emit(f"sync_train_tcgex_{bench}", us_tcg,
+             f"steps_per_s={sps_tcg:.0f}")
+        emit(f"sync_train_tdgex_{bench}", us_tdg,
+             f"steps_per_s={sps_tdg:.0f}")
+        emit(f"sync_train_speedup_{bench}", 0.0,
+             f"tcgex_over_tdgex={sps_tcg / max(sps_tdg, 1e-9):.2f}x_"
+             f"(cost_model={training_speedup_tcg_over_tdg():.2f}x_"
+             f"paper~5x)")

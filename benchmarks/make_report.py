@@ -1,0 +1,75 @@
+"""Render §Dry-run and §Roofline tables from artifacts into EXPERIMENTS.md
+(replaces the <!-- DRYRUN_TABLE --> / <!-- ROOFLINE_TABLE --> markers).
+
+  PYTHONPATH=src:. python benchmarks/make_report.py
+"""
+from __future__ import annotations
+
+import re
+
+from benchmarks.roofline import analyze_record, load_records
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def dryrun_table() -> str:
+    rows = ["### Baseline compile records (lgr=har, act=dmodel)",
+            "",
+            "| arch | shape | mesh | compile s | mem/dev GiB | dot TF/dev |"
+            " coll GiB/dev | cross-pod GiB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    recs = load_records(lgr="har", act="dmodel")
+    recs = [r for r in recs if r.get("cache_layout", "heads") == "heads"
+            and not r.get("cfg_overrides")]
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]),
+                             r["mesh"]))
+    for r in recs:
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']} | {r['mem_per_device_bytes']/2**30:.2f} | "
+            f"{r['hlo_dot_flops']/1e12:.2f} | "
+            f"{r['collective_bytes']/2**30:.2f} | "
+            f"{r.get('cross_pod_bytes', 0)/2**30:.3f} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["### Per-chip roofline terms, single-pod 16×16 "
+            "(v5e: 197 TF bf16, 819 GB/s HBM, 50 GB/s ICI)",
+            "",
+            "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+            "dominant | MODEL/HLO FLOPs | mem GiB (16 GiB HBM) | "
+            "what would move the dominant term |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    recs = [r for r in load_records(lgr="har", act="dmodel")
+            if r["mesh"] == "16x16"
+            and r.get("cache_layout", "heads") == "heads"
+            and not r.get("cfg_overrides")]
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    for r in recs:
+        a = analyze_record(r)
+        over = " **(OOM)**" if a["mem_gib"] > 16 else ""
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {a['t_compute']:.2e} | "
+            f"{a['t_memory']:.2e} | {a['t_collective']:.2e} | "
+            f"{a['dominant']} | {a['useful_ratio']:.2f} | "
+            f"{a['mem_gib']:.1f}{over} | {a['advice']} |")
+    return "\n".join(rows)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = re.sub(r"<!-- DRYRUN_TABLE -->(.|\n)*?(?=## §Roofline)",
+                  "<!-- DRYRUN_TABLE -->\n" + dryrun_table() + "\n\n",
+                  text) if "<!-- DRYRUN_TABLE -->" in text else text
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->(.|\n)*?(?=## §Perf)",
+                  "<!-- ROOFLINE_TABLE -->\n" + roofline_table() + "\n\n",
+                  text) if "<!-- ROOFLINE_TABLE -->" in text else text
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.  Mapping to the paper:
+#   bench_serving        — Fig 7(a)  TCG vs TDG serving throughput
+#   bench_sync_training  — Fig 7(b,c) sync PPO: holistic GMI vs dedicated
+#   bench_lgr            — Table 7   LGR (MRR/HAR) vs MPR baseline
+#   bench_mcc            — Table 8   multi-channel vs uni-channel sharing
+#   bench_num_env        — Fig 10    throughput/memory vs num_env
+#   bench_async          — Fig 11    async PPS / TTOP
+#   bench_selection      — Alg 2     profiling-based GMI search
+#   bench_backend        — Fig 8     backend isolation comparison
+#   bench_reward         — Fig 9     reward accumulation over time
+#   bench_kernels        — Pallas kernels (interpret-mode correctness cost)
+#   roofline             — §Roofline terms from the dry-run artifacts
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_async, bench_backend, bench_kernels,
+                            bench_lgr, bench_mcc, bench_num_env,
+                            bench_reward, bench_selection, bench_serving,
+                            bench_sync_training, roofline)
+    from benchmarks.common import emit
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("serving", bench_serving.run),
+        ("sync_training", bench_sync_training.run),
+        ("lgr", bench_lgr.run),
+        ("mcc", bench_mcc.run),
+        ("num_env", bench_num_env.run),
+        ("async", bench_async.run),
+        ("selection", bench_selection.run),
+        ("backend", bench_backend.run),
+        ("reward", bench_reward.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", roofline.run),
+    ]
+    only = sys.argv[1].split(",") if len(sys.argv) > 1 else None
+    failed = []
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:
+            failed.append(name)
+            emit(f"{name}_SUITE_FAILED", 0.0, repr(e)[:120])
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        print(f"# FAILED SUITES: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

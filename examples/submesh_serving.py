@@ -1,0 +1,79 @@
+"""MIG-style serving: two models co-located on ONE device pool, each owning
+a hard-isolated sub-mesh (paper §3: MIG backend for serving; DESIGN.md §2
+maps MIG → disjoint Mesh objects).
+
+Each GMI gets its own devices, its own model, its own compiled program —
+no collectives can cross the boundary; experience/requests route through
+the host exactly as MIG forces on GPU.
+
+Run with multiple CPU devices to see real isolation:
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/submesh_serving.py
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_reduced
+from repro.core.gmi import GMIManager
+from repro.models import transformer as T
+
+
+def main():
+    devs = jax.devices()
+    per_gpu = max(len(devs) // 2, 1)
+    mgr = GMIManager(devices=devs, devices_per_gpu=per_gpu, backend="submesh")
+    # two serving instances, each on its own slice ("MIG" partition)
+    mgr.add_gmi(0, role="serving", resource_fraction=1.0)
+    mgr.set_gpu(0, 0)
+    mgr.add_gmi(1, role="serving", resource_fraction=1.0)
+    mgr.set_gpu(1, min(1, len(devs) - 1) if len(devs) > per_gpu else 0)
+    print(mgr.summary())
+
+    archs = ["internlm2-1.8b", "xlstm-1.3b"]
+    instances = []
+    for gmi_id, arch in zip([0, 1], archs):
+        mesh = mgr.submesh(gmi_id)
+        cfg = get_reduced(arch)
+        params = T.init_model(jax.random.key(gmi_id), cfg)
+        # place the replica entirely inside the instance's sub-mesh
+        sharding = NamedSharding(mesh, P())
+        params = jax.device_put(params, sharding)
+        step = jax.jit(
+            lambda p, t, pos, c, cfg=cfg: T.decode_step(p, cfg, t, pos, c))
+        prefill = jax.jit(
+            lambda p, b, cfg=cfg: T.prefill(p, cfg, b, max_seq=48))
+        instances.append((gmi_id, arch, cfg, params, prefill, step, mesh))
+        print(f"GMI {gmi_id}: {arch} on devices "
+              f"{[d.id for d in mesh.devices.flatten()]}")
+
+    # batched requests served round-robin across isolated instances
+    for gmi_id, arch, cfg, params, prefill, step, mesh in instances:
+        B, Plen = 4, 24
+        toks = jax.random.randint(jax.random.key(7), (B, Plen), 0,
+                                  cfg.vocab_size)
+        toks = jax.device_put(toks, NamedSharding(mesh, P()))
+        t0 = time.time()
+        logits, caches = prefill(params, {"tokens": toks})
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs = [tok]
+        for i in range(12):
+            pos = jnp.full((B,), Plen + i, jnp.int32)
+            pos = jax.device_put(pos, NamedSharding(mesh, P()))
+            logits, caches = step(params, tok, pos, caches)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs.append(tok)
+        jax.block_until_ready(tok)
+        # the result leaves the instance through the host (MIG barrier)
+        host_tokens = np.stack([np.asarray(t) for t in outs], 1)
+        print(f"GMI {gmi_id} [{arch}] served {B} reqs x 13 tokens in "
+              f"{1e3 * (time.time() - t0):.0f} ms; "
+              f"sample: {host_tokens[0][:8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

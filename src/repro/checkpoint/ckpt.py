@@ -1,0 +1,74 @@
+"""Pytree checkpointing: flattened-keypath .npz + JSON treedef manifest.
+
+Sharding-aware restore: pass a sharding pytree and leaves are device_put
+shard-by-shard (host-side slicing would be needed for true multi-host; on a
+single controller device_put with a NamedSharding suffices).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save(path: str, tree, step: Optional[int] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {f"arr_{i}": np.asarray(jax.device_get(v))
+              for i, v in enumerate(flat.values())}
+    manifest = {"keys": list(flat.keys()), "step": step}
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree template)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    by_key = {jax.tree_util.keystr(p): i for i, (p, _) in
+              enumerate(flat_like)}
+    leaves = [None] * len(flat_like)
+    for i, key in enumerate(manifest["keys"]):
+        if key not in by_key:
+            raise KeyError(f"checkpoint key {key} not in template")
+        leaves[by_key[key]] = data[f"arr_{i}"]
+    if any(x is None for x in leaves):
+        missing = [k for k, i in by_key.items() if leaves[i] is None]
+        raise KeyError(f"template keys missing from checkpoint: {missing}")
+    tmpl_leaves = [l for _, l in flat_like]
+    leaves = [np.asarray(x, dtype=t.dtype) for x, t in
+              zip(leaves, tmpl_leaves)]
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: hasattr(x, "device_set"))[0]
+        leaves = [jax.device_put(x, s) for x, s in zip(leaves, sh_leaves)]
+    else:
+        leaves = [jnp.asarray(x) for x in leaves]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = []
+    if not os.path.isdir(directory):
+        return None
+    for name in os.listdir(directory):
+        if name.startswith("ckpt_") and name.endswith(".json"):
+            try:
+                steps.append(int(name[5:-5]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None

@@ -1,0 +1,195 @@
+"""Channel-based experience sharing — MCC (paper §4.2).
+
+Four services connect agent instances to trainer instances in async DRL:
+
+* Dispenser (per agent)  — categorizes experience into per-field channels
+  (state / action / reward / done / bootstrap) at collection granularity.
+* Compressor (system)    — concatenates per-channel payloads across agents
+  to raise transfer granularity (bandwidth-friendly large moves).
+* Migrator (system)      — routes channel payloads to trainers: direct
+  forward when agent and trainer share a device group; gather-then-least-
+  loaded distribution otherwise.
+* Batcher (per trainer)  — slices (small-batch, high update frequency) or
+  stacks (large-batch, noise reduction) into training batches.
+
+The uni-channel (UCC) baseline ships whole experience tuples one by one —
+the comparison of Table 8.  Both paths count transfers and bytes so the
+benchmark can report transfer efficiency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.a3c import Experience
+
+CHANNELS = ("obs", "actions", "rewards", "dones", "bootstrap",
+            "actor_version")
+
+
+@dataclass
+class TransferStats:
+    num_transfers: int = 0
+    total_bytes: int = 0
+    ops: int = 0
+
+    def record(self, tree):
+        leaves = jax.tree.leaves(tree)
+        self.num_transfers += 1
+        self.ops += len(leaves)
+        self.total_bytes += sum(
+            int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)
+
+    @property
+    def bytes_per_transfer(self) -> float:
+        return self.total_bytes / max(self.num_transfers, 1)
+
+
+# ---------------------------------------------------------------- services -
+class Dispenser:
+    """Per-agent: split experience into typed channels (§4.2 first svc)."""
+
+    def __init__(self, agent_gmi: int):
+        self.agent_gmi = agent_gmi
+        self.out: Dict[str, List] = {c: [] for c in CHANNELS}
+
+    def push(self, exp: Experience):
+        for c in CHANNELS:
+            self.out[c].append(getattr(exp, c))
+
+    def drain(self) -> Dict[str, List]:
+        out, self.out = self.out, {c: [] for c in CHANNELS}
+        return out
+
+
+class Compressor:
+    """System-wide: batch channel payloads into large transfers."""
+
+    def __init__(self, min_batch: int = 1):
+        self.min_batch = min_batch
+        self.stats = TransferStats()
+
+    def compress(self, per_agent: Sequence[Dict[str, List]]) \
+            -> Dict[str, jax.Array]:
+        merged: Dict[str, jax.Array] = {}
+        for c in CHANNELS:
+            items = [x for d in per_agent for x in d[c]]
+            if not items:
+                continue
+            arrs = [jnp.asarray(x) for x in items]
+            if arrs[0].ndim == 0:
+                merged[c] = jnp.stack(arrs)
+            else:
+                # concat along the env axis (axis 1 for (T,N,...) payloads,
+                # axis 0 for (N,) bootstraps)
+                axis = 1 if arrs[0].ndim >= 2 else 0
+                merged[c] = jnp.concatenate(arrs, axis=axis)
+            self.stats.record(merged[c])      # ONE transfer per channel
+        return merged
+
+
+class Migrator:
+    """System-wide: route compressed channels to trainer instances."""
+
+    def __init__(self, trainer_gmis: Sequence[int],
+                 gmi_gpu: Optional[Dict[int, int]] = None):
+        self.trainer_gmis = list(trainer_gmis)
+        self.gmi_gpu = gmi_gpu or {}
+        self.load = {t: 0 for t in self.trainer_gmis}
+
+    def route(self, channels: Dict[str, jax.Array],
+              agent_gpu: Optional[int] = None) -> int:
+        """Pick the destination trainer: same-GPU direct forward if any,
+        otherwise least-loaded (paper §4.2 migrator policy)."""
+        same = [t for t in self.trainer_gmis
+                if agent_gpu is not None
+                and self.gmi_gpu.get(t) == agent_gpu]
+        pool = same or self.trainer_gmis
+        dst = min(pool, key=lambda t: self.load[t])
+        n = channels["rewards"].shape[1] if "rewards" in channels else 1
+        self.load[dst] += int(n)
+        return dst
+
+
+class Batcher:
+    """Per-trainer: slice or stack into training batches."""
+
+    def __init__(self, mode: str = "stack", batch_envs: Optional[int] = None):
+        assert mode in ("stack", "slice")
+        self.mode = mode
+        self.batch_envs = batch_envs
+
+    def prepare(self, channels: Dict[str, jax.Array]) -> List[Experience]:
+        exp = Experience(
+            obs=channels["obs"], actions=channels["actions"],
+            rewards=channels["rewards"], dones=channels["dones"],
+            bootstrap=channels["bootstrap"],
+            actor_version=jnp.max(channels["actor_version"])
+            if channels["actor_version"].ndim else channels["actor_version"])
+        if self.mode == "stack" or self.batch_envs is None:
+            return [exp]
+        N = exp.rewards.shape[1]
+        b = self.batch_envs
+        out = []
+        for s in range(0, N, b):
+            sl = slice(s, min(s + b, N))
+            out.append(Experience(
+                obs=exp.obs[:, sl], actions=exp.actions[:, sl],
+                rewards=exp.rewards[:, sl], dones=exp.dones[:, sl],
+                bootstrap=exp.bootstrap[sl],
+                actor_version=exp.actor_version))
+        return out
+
+
+# ---------------------------------------------------------------- pipelines -
+class MultiChannelPipeline:
+    """Dispenser -> Compressor -> Migrator -> Batcher (the paper's MCC)."""
+
+    def __init__(self, agent_gmis: Sequence[int], trainer_gmis: Sequence[int],
+                 gmi_gpu: Optional[Dict[int, int]] = None,
+                 batch_mode: str = "stack",
+                 batch_envs: Optional[int] = None):
+        self.dispensers = {a: Dispenser(a) for a in agent_gmis}
+        self.compressor = Compressor()
+        self.migrator = Migrator(trainer_gmis, gmi_gpu)
+        self.batchers = {t: Batcher(batch_mode, batch_envs)
+                         for t in trainer_gmis}
+
+    def push(self, agent_gmi: int, exp: Experience):
+        self.dispensers[agent_gmi].push(exp)
+
+    def flush(self) -> Dict[int, List[Experience]]:
+        """Move everything agents produced to trainer batches."""
+        per_agent = [d.drain() for d in self.dispensers.values()]
+        per_agent = [d for d in per_agent if any(d[c] for c in CHANNELS)]
+        if not per_agent:
+            return {}
+        channels = self.compressor.compress(per_agent)
+        dst = self.migrator.route(channels)
+        return {dst: self.batchers[dst].prepare(channels)}
+
+    @property
+    def stats(self) -> TransferStats:
+        return self.compressor.stats
+
+
+class UniChannelPipeline:
+    """UCC baseline: every experience tuple is its own fine-grained
+    transfer (one op per field per agent per round — Table 8's loser)."""
+
+    def __init__(self, trainer_gmis: Sequence[int]):
+        self.trainer_gmis = list(trainer_gmis)
+        self.stats = TransferStats()
+        self._rr = 0
+
+    def send(self, exp: Experience) -> int:
+        for c in CHANNELS:
+            self.stats.record(getattr(exp, c))  # one transfer PER FIELD
+        dst = self.trainer_gmis[self._rr % len(self.trainer_gmis)]
+        self._rr += 1
+        return dst

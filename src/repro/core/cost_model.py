@@ -1,0 +1,119 @@
+"""Analytical cost models from the paper (Tables 2, 4, 5; Eqs. 1-3).
+
+These models drive template selection (TCG vs TDG), predict the paper's
+headline speedups (~2.5x serving, ~5x sync training), and provide the
+LGR time-complexity comparison used by the benchmark for Table 7.
+
+Paper empirical constants (§5.1): alpha ~= 0.2, beta ~= 0.3,
+R_s ~= 10 R_a ~= 5 R_t, T_s ~= 6 T_a ~= 3 T_t.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class WorkloadProfile:
+    """Per-role dominant-resource sizes and per-iteration times (Table 3)."""
+    R_s: float = 10.0     # simulator resource
+    R_a: float = 1.0      # agent resource
+    R_t: float = 2.0      # trainer resource  (R_s ≈ 5 R_t)
+    T_s: float = 6.0      # simulator time
+    T_a: float = 1.0      # agent time        (T_s ≈ 6 T_a)
+    T_t: float = 2.0      # trainer time      (T_s ≈ 3 T_t)
+    alpha: float = 0.2    # sharing ratio: many sims per agent
+    beta: float = 0.3     # sharing ratio: many sims per trainer
+    R_all: float = 80.0   # total resource pool (e.g. 8 GPUs x 10 units)
+
+
+# --------------------------------------------------- Table 2: LGR times ----
+def lgr_time_mpr(g: int, t: int, M_p: float, B1: float, B2: float) -> float:
+    return 2 * (g * t - 1) * M_p / (g * t * B1)
+
+
+def lgr_time_mrr(g: int, t: int, M_p: float, B1: float, B2: float) -> float:
+    return 2 * (g - 1) * (t + 1) * M_p / (g * B2)
+
+
+def lgr_time_har(g: int, t: int, M_p: float, B1: float, B2: float) -> float:
+    return 2 * (g - 1) * M_p / (g * B2) + 2 * (t - 1) * M_p / (t * B1)
+
+
+LGR_TIMES = {"mpr": lgr_time_mpr, "mrr": lgr_time_mrr, "har": lgr_time_har}
+
+
+def best_lgr(g: int, t: int, M_p: float, B1: float, B2: float) -> str:
+    feasible = {"mpr", "har"} | ({"mrr"} if t <= g else set())
+    return min(feasible, key=lambda s: LGR_TIMES[s](g, t, M_p, B1, B2))
+
+
+# ------------------------------------------- Table 4: serving templates ----
+def serving_resource_tdg(w: WorkloadProfile) -> float:
+    return (w.T_s * w.R_s + w.T_a * w.alpha * w.R_a) / (w.T_s + w.T_a)
+
+
+def serving_resource_tcg(w: WorkloadProfile) -> float:
+    return (w.T_s + w.T_a) * max(w.R_s, w.R_a) / (w.T_s + w.T_a)
+
+
+def serving_com_tdg(S: float, A: float, W: float) -> float:
+    return 2 * S + A + W
+
+
+def serving_throughput(w: WorkloadProfile, R: float, com_over_bw: float) \
+        -> float:
+    """Eq. 2: TOP = (R_all / R) * 1 / (T_s + T_a + COM/BW)."""
+    return (w.R_all / R) / (w.T_s + w.T_a + com_over_bw)
+
+
+def serving_speedup_tcg_over_tdg(w: WorkloadProfile = WorkloadProfile()) \
+        -> float:
+    """Paper §5.1: ~2.5x, with COM/BW ≈ 2·(T_s+T_a) for TDG."""
+    r_tdg = serving_resource_tdg(w)
+    r_tcg = serving_resource_tcg(w)
+    top_tdg = serving_throughput(w, r_tdg, 2.0 * (w.T_s + w.T_a))
+    top_tcg = serving_throughput(w, r_tcg, 0.0)
+    return top_tcg / top_tdg
+
+
+# ------------------------------------------ Table 5: training templates ----
+def training_resource_tdg_ex(w: WorkloadProfile) -> float:
+    return (w.T_s * w.R_s + w.T_a * w.alpha * w.R_a
+            + w.T_t * w.beta * w.R_t) / (w.T_s + w.T_a + w.T_t)
+
+
+def training_resource_tcg_ex(w: WorkloadProfile) -> float:
+    return max(w.R_s, w.R_a, w.R_t)
+
+
+def training_com_tdg_ex(m: int, S: float, A: float, W: float, M_p: float,
+                        n: int) -> float:
+    return m * (S + A + W) + M_p + 2 * (n - 1) * M_p / n
+
+
+def training_com_tcg_ex(M_p: float, n: int) -> float:
+    return 2 * (n - 1) * M_p / n
+
+
+def training_throughput(w: WorkloadProfile, R: float, com_over_bw: float) \
+        -> float:
+    """Eq. 3."""
+    return (w.R_all / R) / (w.T_s + w.T_a + w.T_t + com_over_bw)
+
+
+def training_speedup_tcg_over_tdg(w: WorkloadProfile = WorkloadProfile()) \
+        -> float:
+    """Paper §5.1: ~5x, with COM/BW ≈ 7·(T_s+T_a+T_t) for TDG_EX and the
+    gradient-ring only for TCG_EX (≈ 0.35·cycle on the paper's profile)."""
+    r_tdg = training_resource_tdg_ex(w)
+    r_tcg = training_resource_tcg_ex(w)
+    cyc = w.T_s + w.T_a + w.T_t
+    top_tdg = training_throughput(w, r_tdg, 7.0 * cyc)
+    top_tcg = training_throughput(w, r_tcg, 0.35 * cyc)
+    return top_tcg / top_tdg
+
+
+# ------------------------------------------------------- Eq. 1: resource ---
+def dominant_resource(R_sm: float, sm_per_gpu: float, R_mem: float,
+                      mem_per_gpu: float) -> str:
+    return "SM" if R_sm / sm_per_gpu >= R_mem / mem_per_gpu else "Memory"

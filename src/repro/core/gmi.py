@@ -1,0 +1,145 @@
+"""GMI — GPU/TPU Multiplexing Instance (paper §3).
+
+On TPU a GMI is a named, resource-budgeted slice of the device mesh:
+``n_devices`` chips assigned to one DRL role.  Two backends mirror the
+paper's MPS/MIG duality:
+
+* ``axis``    (MPS-like): instances are index ranges along a shared mesh
+  axis inside ONE SPMD program — collectives between instances are possible
+  (needed for training); isolation is logical.
+* ``submesh`` (MIG-like): instances own disjoint ``jax.sharding.Mesh``
+  objects — hard isolation, no direct collectives; cross-instance data must
+  stage through the host (the "memory barrier" of §1 that LGR/MCC exist to
+  work around).
+
+``GMIManager`` mirrors Listing 1's ``GMI_DRL.GMI_manager``: registration,
+device attachment, communication groups.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclass
+class GMI:
+    gmi_id: int
+    role: str                       # "simulator" | "agent" | "trainer" | "holistic"
+    device_ids: List[int]           # global device indices owned
+    gpu_id: int                     # which physical device group (paper: GPU)
+    backend: str = "axis"           # "axis" | "submesh"
+    resource_fraction: float = 1.0  # paper: SM fraction / MIG slice size
+    group: Optional[str] = None
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.device_ids)
+
+
+class GMIManager:
+    """Global registry of instances and their layout (Listing 1)."""
+
+    def __init__(self, devices: Optional[Sequence] = None,
+                 devices_per_gpu: Optional[int] = None,
+                 backend: str = "axis"):
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.devices_per_gpu = devices_per_gpu or len(self.devices)
+        self.backend = backend
+        self.gmis: Dict[int, GMI] = {}
+        self.groups: Dict[str, List[int]] = {}
+
+    # -- Listing 1 API ---------------------------------------------------
+    def add_gmi(self, gmi_id: int, role: str = "holistic",
+                resource_fraction: float = 1.0) -> GMI:
+        if gmi_id in self.gmis:
+            raise ValueError(f"GMI {gmi_id} already registered")
+        g = GMI(gmi_id, role, [], -1, self.backend, resource_fraction)
+        self.gmis[gmi_id] = g
+        return g
+
+    def set_gpu(self, gmi_id: int, gpu_id: int):
+        """Attach a GMI to a physical device group and carve its slice."""
+        g = self.gmis[gmi_id]
+        start = gpu_id * self.devices_per_gpu
+        pool = list(range(start, start + self.devices_per_gpu))
+        taken = [d for other in self.gmis.values()
+                 if other.gpu_id == gpu_id for d in other.device_ids]
+        free = [d for d in pool if d not in taken]
+        want = max(int(round(self.devices_per_gpu * g.resource_fraction)), 1)
+        if len(free) < want:
+            raise ValueError(
+                f"GPU {gpu_id}: need {want} devices, {len(free)} free "
+                f"(resource overcommit — paper Alg.2 'not runnable')")
+        g.gpu_id = gpu_id
+        g.device_ids = free[:want]
+
+    def get_group(self, gmi_id: int, name: str = "default") -> str:
+        self.groups.setdefault(name, [])
+        if gmi_id not in self.groups[name]:
+            self.groups[name].append(gmi_id)
+        self.gmis[gmi_id].group = name
+        return name
+
+    # -- layout queries ----------------------------------------------------
+    def gmi_to_gpu_mapping(self, role: Optional[str] = None) -> List[List[int]]:
+        """The MPL list of Algorithm 1: MPL[g] = GMI ids on GPU g."""
+        sel = [g for g in self.gmis.values()
+               if role is None or g.role == role]
+        gpus = sorted({g.gpu_id for g in sel})
+        return [[g.gmi_id for g in sel if g.gpu_id == gid] for gid in gpus]
+
+    def submesh(self, gmi_id: int, axis_name: str = "devices") -> Mesh:
+        """MIG-like backend: a dedicated Mesh over the instance's devices."""
+        g = self.gmis[gmi_id]
+        devs = np.array([self.devices[i] for i in g.device_ids])
+        return Mesh(devs, (axis_name,))
+
+    def instance_mesh(self, role: str, axes=("gpu", "inst")) -> Mesh:
+        """Axis backend: one shared mesh (gpu × instance) over all GMIs of a
+        role — instances are coordinates along ``inst``; LGR collectives run
+        over these axes."""
+        mpl = self.gmi_to_gpu_mapping(role)
+        if not mpl:
+            raise ValueError(f"no GMIs with role {role}")
+        t = len(mpl[0])
+        if any(len(row) != t for row in mpl):
+            raise ValueError("axis backend needs a rectangular GMI layout")
+        dev_grid = np.empty((len(mpl), t), dtype=object)
+        for gi, row in enumerate(mpl):
+            for ii, gmi_id in enumerate(row):
+                dev_grid[gi, ii] = self.devices[
+                    self.gmis[gmi_id].device_ids[0]]
+        return Mesh(dev_grid, axes)
+
+    def summary(self) -> str:
+        lines = [f"GMIManager(backend={self.backend}, "
+                 f"devices={len(self.devices)}, "
+                 f"per_gpu={self.devices_per_gpu})"]
+        for g in sorted(self.gmis.values(), key=lambda x: x.gmi_id):
+            lines.append(
+                f"  GMI {g.gmi_id}: role={g.role} gpu={g.gpu_id} "
+                f"devices={g.device_ids} frac={g.resource_fraction}")
+        return "\n".join(lines)
+
+
+class DRLRole:
+    """Process-based GMI programming base class (paper Listing 1)."""
+
+    def __init__(self, manager: GMIManager, gmi_id: int, role: str,
+                 gpu_id: int, resource_fraction: float = 1.0):
+        self.gmi_id = gmi_id
+        self.role = role
+        self.mgr = manager
+        self.mgr.add_gmi(gmi_id, role, resource_fraction)
+        self.mgr.set_gpu(gmi_id, gpu_id)
+        self.group = self.mgr.get_group(gmi_id, role)
+
+    # communication primitives are provided by repro.core.channels /
+    # repro.core.lgr; subclasses implement the execution routine:
+    def gmi_run(self, *args, **kwargs):
+        raise NotImplementedError

@@ -1,0 +1,1 @@
+from repro.data.tokens import batch_iterator, make_batch  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.envs.base import EnvSpec, EnvState, VectorEnv  # noqa: F401
+from repro.envs.suite import SPECS, all_env_names, make_env  # noqa: F401

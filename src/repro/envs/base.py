@@ -1,0 +1,69 @@
+"""Vectorized environment API.
+
+Environments are pure functions over explicit state pytrees so thousands of
+instances run in parallel under ``vmap`` + ``jit`` — the JAX analogue of
+Isaac Gym's massively-parallel GPU simulation (the paper's workload).
+
+Env keys are legacy uint32 PRNG vectors so states stay plain-array pytrees
+(selectable with ``jnp.where`` during auto-reset).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EnvState(NamedTuple):
+    q: jax.Array          # (J,) joint angles
+    qd: jax.Array         # (J,) joint velocities
+    root: jax.Array       # (6,) x, y, z, vx, vy, vz
+    prev_action: jax.Array
+    t: jax.Array          # scalar int32 step counter
+    key: jax.Array        # (2,) uint32 legacy PRNG key
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    abbr: str
+    obs_dim: int
+    act_dim: int
+    env_type: str                 # L (locomotion) | F (franka) | R (robotic hand)
+    policy_dims: tuple            # paper Table 6
+    max_episode_len: int = 1000
+    substeps: int = 4
+    dt: float = 1.0 / 60.0
+
+
+class VectorEnv:
+    """Batched env: all methods operate on (N, ...) stacked states."""
+
+    def __init__(self, spec: EnvSpec, reset_fn: Callable, step_fn: Callable,
+                 obs_fn: Callable):
+        self.spec = spec
+        self._reset = jax.vmap(reset_fn)
+        self._obs = jax.vmap(obs_fn)
+
+        def step_one(state, action):
+            new_state, reward, done = step_fn(state, action)
+            rkey, nkey = jax.random.split(new_state.key)
+            fresh = reset_fn(rkey)._replace(key=nkey)
+            # scalar `done` broadcasts against every leaf shape
+            out = jax.tree.map(lambda a, b: jnp.where(done, b, a),
+                               new_state, fresh)
+            return out, reward, done
+
+        self._step = jax.vmap(step_one)
+
+    def reset(self, key, num_envs: int):
+        keys = jax.random.split(key, num_envs)
+        state = self._reset(keys)
+        return state, self._obs(state)
+
+    def step(self, state, action):
+        """-> (state, obs, reward, done)."""
+        state, reward, done = self._step(state, action)
+        return state, self._obs(state), reward, done

@@ -1,0 +1,124 @@
+"""Flash attention Pallas TPU kernel: blocked online softmax with GQA,
+causal / sliding-window masking, and logit softcap.
+
+TPU adaptation (DESIGN.md §2/§4): VMEM-tiled q/k/v blocks with MXU-aligned
+(multiples-of-128) block shapes; the innermost grid axis (kv blocks) is
+sequential on TPU, so the running max / denominator / accumulator live in
+VMEM scratch across that axis — the same algorithm as
+``repro.models.attention._chunked_attention``, tiled for the hardware.
+
+Grid: (batch * q_heads, num_q_blocks, num_kv_blocks)
+  q block:   (block_q, head_dim)      VMEM
+  k/v block: (block_k, head_dim)      VMEM   (kv row = b*KH + q_head//G)
+  scratch:   acc (block_q, head_dim) f32, m/l (block_q,) f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, softcap, block_q, block_k, num_kb,
+            seq_q, seq_kv):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = (qpos < seq_q) & (kpos < seq_kv)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    v = v_ref[0].astype(jnp.float32)
+    # zero padded kv rows: p is 0 there, but 0 * NaN-padding = NaN
+    vmask = (kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k, 1), 0)) < seq_kv
+    v = jnp.where(vmask, v, 0.0)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == num_kb - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    softcap=None, scale=None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KH, hd).  Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    assert H % KH == 0, "GQA requires q heads to be a multiple of kv heads"
+    G = H // KH
+    scale = scale if scale is not None else hd ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    nq = pl.cdiv(Sq, bq)
+    nk = pl.cdiv(Skv, bk)
+
+    # layout: fold (B, heads) into the first grid axis
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KH, Skv, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KH, Skv, hd)
+
+    def kv_row(h, i, j):
+        # grid row h = b * H + q_head  ->  kv row = b * KH + q_head // G
+        return (h // H) * KH + (h % H) // G, j, 0
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, num_kb=nk, seq_q=Sq, seq_kv=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), kv_row),
+            pl.BlockSpec((1, bk, hd), kv_row),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,65 @@
+"""Fused policy-MLP Pallas TPU kernel.
+
+The paper's agent-inference hot spot is a chain of SMALL GEMMs
+(e.g. ShadowHand 211:512:512:512:256) interleaved with simulation — each
+layer individually underutilizes the device and round-trips activations
+through HBM.  The GPU fix is spatial multiplexing; the TPU-native rethink
+is FUSION: the whole trunk runs in ONE pallas_call with every weight matrix
+resident in VMEM (a few MB), grid only over batch blocks — zero HBM traffic
+between layers, one kernel launch per action batch.
+
+Grid: (num_batch_blocks,)
+  x block: (block_n, in_dim) VMEM; weights/biases: full, VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(*refs, num_layers):
+    x_ref = refs[0]
+    o_ref = refs[-1]
+    ws = refs[1:1 + num_layers]
+    bs = refs[1 + num_layers:1 + 2 * num_layers]
+    h = x_ref[...].astype(jnp.float32)
+    for w_ref, b_ref in zip(ws, bs):
+        h = jax.lax.dot(h, w_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        h = jnp.tanh(h + b_ref[...].astype(jnp.float32))
+    o_ref[...] = h.astype(o_ref.dtype)
+
+
+def fused_policy_mlp(x, weights: Sequence, biases: Sequence, *,
+                     block_n: int = 256, interpret: bool = False):
+    """x: (N, in_dim); weights[i]: (d_i, d_{i+1}); tanh after every layer.
+
+    Returns (N, out_dim).  The whole weight set must fit VMEM (true for all
+    Table-6 policies: ShadowHand is the largest at ~2.6 MB f32).
+    """
+    N, d_in = x.shape
+    L = len(weights)
+    assert len(biases) == L
+    d_out = weights[-1].shape[1]
+    bn = min(block_n, N)
+    grid = (pl.cdiv(N, bn),)
+
+    in_specs = [pl.BlockSpec((bn, d_in), lambda i: (i, 0))]
+    for w in weights:
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+    for b in biases:
+        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_layers=L),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bn, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, d_out), x.dtype),
+        interpret=interpret,
+    )(x, *weights, *biases)
+    return out

@@ -1,0 +1,109 @@
+"""Chunkwise mLSTM Pallas TPU kernel (xLSTM matrix-memory recurrence).
+
+The mLSTM chunkwise form is "masked linear attention inside a chunk +
+recurrent (C, n, m) state across chunks".  On TPU the chunk axis is the
+sequential innermost grid dimension; the matrix memory C (dh × dh), the
+normalizer n and the log-space stabilizer m persist in VMEM scratch across
+it, and each chunk's intra work is MXU matmuls.
+
+Grid: (batch * heads, num_chunks)
+  q/k/v block: (chunk, dh) VMEM;  log_i/log_f block: (chunk,) VMEM
+  scratch: C (dh, dh) f32, n (dh,) f32, m (1,) f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LOG_EPS = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+            C_ref, n_ref, m_ref, *, chunk, dh):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    q = q_ref[0].astype(jnp.float32) * dh ** -0.5      # (L, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    log_i = li_ref[0].astype(jnp.float32)              # (L,)
+    log_f = lf_ref[0].astype(jnp.float32)
+    C_prev, n_prev, m_prev = C_ref[...], n_ref[...], m_ref[0]
+
+    b = jnp.cumsum(log_f)                              # (L,)
+    lw = b[:, None] - b[None, :] + log_i[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lw = jnp.where(causal, lw, LOG_EPS)
+    inter = m_prev + b                                 # (L,)
+    m_t = jnp.maximum(inter, jnp.max(lw, axis=-1))
+    w_intra = jnp.exp(lw - m_t[:, None])
+    w_inter = jnp.exp(inter - m_t)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * w_intra
+    h_num = jax.lax.dot(scores, v, preferred_element_type=jnp.float32) + \
+        w_inter[:, None] * jax.lax.dot(q, C_prev.T,
+                                       preferred_element_type=jnp.float32)
+    n_t = jax.lax.dot(w_intra, k, preferred_element_type=jnp.float32) + \
+        w_inter[:, None] * n_prev[None, :]
+    denom = jnp.maximum(jnp.abs(jnp.sum(q * n_t, axis=-1)), jnp.exp(-m_t))
+    o_ref[0] = (h_num / denom[:, None]).astype(o_ref.dtype)
+
+    # carry state to chunk end
+    bl = b[-1]
+    m_new = jnp.maximum(m_prev + bl, jnp.max(log_i + bl - b))
+    w_c = jnp.exp(log_i + bl - b - m_new)              # (L,)
+    decay = jnp.exp(m_prev + bl - m_new)
+    C_ref[...] = decay * C_prev + jax.lax.dot_general(
+        v * w_c[:, None], k, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = decay * n_prev + jnp.sum(k * w_c[:, None], axis=0)
+    m_ref[0] = m_new
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, *, chunk: int = 128,
+                    interpret: bool = False):
+    """q/k/v: (B, H, S, dh); log_i/log_f: (B, H, S) -> h (B, H, S, dh).
+
+    C is stored as v⊗k (C[d,e] = v_d k_e); the read contracts q with the
+    k-dim, matching ``repro.models.ssm`` exactly.
+    """
+    B, H, S, dh = q.shape
+    L = min(chunk, S)
+    assert S % L == 0, "seq must divide the chunk size"
+    nc = S // L
+    fold = lambda t: t.reshape(B * H, S, t.shape[-1]) if t.ndim == 4 \
+        else t.reshape(B * H, S)
+    qh, kh, vh = fold(q), fold(k), fold(v)
+    lih, lfh = fold(log_i), fold(log_f)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=L, dh=dh),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, L, dh), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, L, dh), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, L, dh), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, L), lambda h, c: (h, c)),
+            pl.BlockSpec((1, L), lambda h, c: (h, c)),
+        ],
+        out_specs=pl.BlockSpec((1, L, dh), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh, lih, lfh)
+    return out.reshape(B, H, S, dh)

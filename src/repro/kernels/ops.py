@@ -1,0 +1,42 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs in Python per grid cell, validating the exact TPU program
+against the ``ref.py`` oracles.  On TPU backends the same calls compile to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _fa
+from repro.kernels.fused_policy_mlp import fused_policy_mlp as _mlp
+from repro.kernels.mlstm_scan import mlstm_chunkwise as _mlstm
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              block_q=128, block_k=128, interpret=None):
+    interp = _interpret_default() if interpret is None else interpret
+    return _fa(q, k, v, causal=causal, window=window, softcap=softcap,
+               block_q=block_q, block_k=block_k, interpret=interp)
+
+
+def policy_mlp(x, weights, biases, *, block_n=256, interpret=None):
+    interp = _interpret_default() if interpret is None else interpret
+    fn = jax.jit(functools.partial(_mlp, block_n=block_n, interpret=interp))
+    return fn(x, list(weights), list(biases))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm(q, k, v, log_i, log_f, *, chunk=128, interpret=None):
+    interp = _interpret_default() if interpret is None else interpret
+    return _mlstm(q, k, v, log_i, log_f, chunk=chunk, interpret=interp)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  scale=None):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KH, hd) with H % KH == 0."""
+    B, Sq, H, hd = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KH, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def policy_mlp_ref(x, weights, biases):
+    """x: (N, in); tanh MLP trunk: h = tanh(h @ w + b) per layer."""
+    h = x.astype(jnp.float32)
+    for w, b in zip(weights, biases):
+        h = jnp.tanh(h @ w.astype(jnp.float32) + b.astype(jnp.float32))
+    return h.astype(x.dtype)
+
+
+def mlstm_chunkwise_ref(q, k, v, log_i, log_f, chunk: int = 64):
+    """q/k/v: (B, H, S, dh); log_i/log_f: (B, H, S).  Chunkwise-parallel
+    stabilized mLSTM, zero initial state.  Returns h: (B, H, S, dh)."""
+    from repro.models.ssm import _mlstm_chunk
+    B, H, S, dh = q.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    C = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n = jnp.zeros((B, H, dh), jnp.float32)
+    m = jnp.zeros((B, H), jnp.float32)
+    outs = []
+    for c in range(nc):
+        sl = slice(c * L, (c + 1) * L)
+        h, C, n, m = _mlstm_chunk(
+            q[:, :, sl].astype(jnp.float32), k[:, :, sl].astype(jnp.float32),
+            v[:, :, sl].astype(jnp.float32), log_i[:, :, sl], log_f[:, :, sl],
+            C, n, m)
+        outs.append(h)
+    return jnp.concatenate(outs, axis=2).astype(q.dtype)

@@ -1,0 +1,6 @@
+# Launch layer: mesh.py (production mesh), dryrun.py (multi-pod lower+
+# compile), train.py / serve.py (CLI drivers), steps.py (sharded step
+# builders), hlo_analysis.py (roofline accounting).
+#
+# NOTE: do not import dryrun from here — it sets XLA_FLAGS at import time.
+from repro.launch.mesh import make_production_mesh  # noqa: F401

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run; smoke tests
+# and benchmarks see the real single device.
+
+# Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+# mesh) combination against the production mesh and record the roofline
+# inputs (FLOPs / bytes / collective traffic / memory analysis).
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+#       --mesh both --out artifacts/dryrun
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+#       --shape train_4k --mesh single --lgr har
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCHS, INPUT_SHAPES, get_config,
+                           long_context_window, shape_skips)
+from repro.configs.base import TrainConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import analyze
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, lgr: str = "har",
+            act_sharding: str = "dmodel", save_hlo: str = "",
+            cache_layout: str = "heads", serve_fsdp: bool = False,
+            cfg_overrides: dict = None, moe_spec: str = "contract",
+            decode_unroll: bool = False, microbatches: int = 1,
+            per_layer_cache: bool = False) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "lgr": lgr, "act_sharding": act_sharding,
+           "cache_layout": cache_layout, "moe_spec": moe_spec,
+           "status": "skip"}
+    if cfg_overrides:
+        rec["cfg_overrides"] = cfg_overrides
+    skips = shape_skips(arch)
+    if shape_name in skips:
+        rec["reason"] = skips[shape_name]
+        return rec
+    window = long_context_window(arch) if shape_name == "long_500k" else None
+    if window:
+        rec["window_override"] = window
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        if shape.mode == "train":
+            fn, sds = make_train_step(
+                cfg, mesh, shape, TrainConfig(microbatches=microbatches),
+                lgr=lgr, act_sharding=act_sharding, moe_spec=moe_spec)
+        elif shape.mode == "prefill":
+            fn, sds = make_prefill_step(cfg, mesh, shape, window,
+                                        act_sharding=act_sharding)
+        else:
+            fn, sds = make_serve_step(cfg, mesh, shape, window,
+                                      cache_layout=cache_layout,
+                                      params_fsdp=serve_fsdp,
+                                      unroll=decode_unroll,
+                                      per_layer_cache=per_layer_cache)
+        lowered = fn.lower(*sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    hl = analyze(hlo, total_devices=mesh.devices.size)
+    if save_hlo:
+        import gzip
+        with gzip.open(save_hlo, "wt") as f:
+            f.write(hlo)
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "chips": mesh.devices.size,
+        # per-device numbers (post-SPMD module)
+        "hlo_flops_costan": float(ca.get("flops", 0.0)),
+        "hlo_dot_flops": hl["dot_flops"],
+        "hlo_traffic_bytes": hl["traffic_bytes"],
+        "collective_bytes": hl["collective_bytes"],
+        "coll_by_op": hl["coll_by_op"],
+        "coll_counts": hl["coll_counts"],
+        "mem_argument_bytes": ma.argument_size_in_bytes,
+        "mem_output_bytes": ma.output_size_in_bytes,
+        "mem_temp_bytes": ma.temp_size_in_bytes,
+        "mem_alias_bytes": ma.alias_size_in_bytes,
+    })
+    # live bytes per device: args + temps (aliased outputs reuse arg space)
+    rec["mem_per_device_bytes"] = (ma.argument_size_in_bytes
+                                   + ma.temp_size_in_bytes)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--lgr", default="har", choices=["har", "mrr"])
+    ap.add_argument("--act-sharding", default="dmodel",
+                    choices=["dmodel", "seq", "none"])
+    ap.add_argument("--cache-layout", default="heads",
+                    choices=["heads", "seq"])
+    ap.add_argument("--serve-fsdp", action="store_true")
+    ap.add_argument("--moe-spec", default="contract",
+                    choices=["contract", "expert", "tp_both"])
+    ap.add_argument("--decode-unroll", action="store_true")
+    ap.add_argument("--per-layer-cache", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--cfg-override", default="",
+                    help="JSON dict of ModelConfig overrides (perf exps)")
+    ap.add_argument("--preset", action="store_true",
+                    help="use the best-known knobs per (arch x shape)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+    overrides = json.loads(args.cfg_override) if args.cfg_override else None
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" \
+        else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    ok = failed = skipped = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape}_{'multi' if multi else 'single'}" \
+                      f"_{args.lgr}_{args.act_sharding}"
+                if args.preset:
+                    tag = (f"{arch}_{shape}_"
+                           f"{'multi' if multi else 'single'}_preset")
+                if args.cache_layout != "heads":
+                    tag += f"_cache{args.cache_layout}"
+                if args.serve_fsdp:
+                    tag += "_sfsdp"
+                if args.moe_spec != "contract":
+                    tag += f"_moe{args.moe_spec}"
+                if args.decode_unroll:
+                    tag += "_unroll"
+                if args.per_layer_cache:
+                    tag += "_plc"
+                if args.microbatches > 1:
+                    tag += f"_mb{args.microbatches}"
+                if overrides:
+                    tag += "_ovr" + "".join(sorted(overrides))[:24]
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[cached] {tag}")
+                    ok += 1
+                    continue
+                try:
+                    if args.preset:
+                        from repro.configs.presets import preset
+                        kw = preset(arch, shape)
+                        rec = run_one(arch, shape, multi,
+                                      kw["lgr"], kw["act_sharding"],
+                                      args.save_hlo, kw["cache_layout"],
+                                      False, overrides, kw["moe_spec"],
+                                      kw["decode_unroll"],
+                                      kw["microbatches"],
+                                      kw.get("per_layer_cache", False))
+                        rec["preset"] = True
+                    else:
+                        rec = run_one(arch, shape, multi, args.lgr,
+                                      args.act_sharding, args.save_hlo,
+                                      args.cache_layout, args.serve_fsdp,
+                                      overrides, args.moe_spec,
+                                      args.decode_unroll, args.microbatches,
+                                      args.per_layer_cache)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    ok += 1
+                    print(f"[ok] {tag}: compile={rec['compile_s']}s "
+                          f"mem/dev={rec['mem_per_device_bytes']/2**30:.2f}GiB "
+                          f"dotTF={rec['hlo_dot_flops']/1e12:.2f} "
+                          f"collGB={rec['collective_bytes']/2**30:.3f}")
+                elif rec["status"] == "skip":
+                    skipped += 1
+                    print(f"[skip] {tag}: {rec['reason']}")
+                else:
+                    failed += 1
+                    print(f"[FAIL] {tag}: {rec['error']}")
+    print(f"\ndry-run summary: ok={ok} skipped={skipped} failed={failed}")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction (TPU v5e target).
+
+Defined as FUNCTIONS — importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+# hardware constants used by the roofline analysis (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes the global batch shards over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def num_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,51 @@
+"""Recompute HLO-derived fields of dry-run records from the saved
+(gzipped) HLO text — lets the roofline parser evolve without recompiling.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze \
+      --dryrun artifacts/dryrun --hlo artifacts/hlo
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.hlo_analysis import analyze
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="artifacts/dryrun")
+    ap.add_argument("--hlo", default="artifacts/hlo")
+    args = ap.parse_args()
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(args.dryrun, "*.json"))):
+        with open(jpath) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        mesh_tag = "multi" if rec["mesh"] == "2x16x16" else "single"
+        hpath = os.path.join(
+            args.hlo, f"{rec['arch']}_{rec['shape']}_{mesh_tag}.hlo.gz")
+        if not os.path.exists(hpath):
+            continue
+        with gzip.open(hpath, "rt") as f:
+            hl = analyze(f.read(), total_devices=rec.get("chips", 0))
+        rec.update({
+            "hlo_dot_flops": hl["dot_flops"],
+            "hlo_traffic_bytes": hl["traffic_bytes"],
+            "collective_bytes": hl["collective_bytes"],
+            "cross_pod_bytes": hl["cross_pod_bytes"],
+            "coll_by_op": hl["coll_by_op"],
+            "coll_counts": hl["coll_counts"],
+        })
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

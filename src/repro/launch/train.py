@@ -1,0 +1,147 @@
+"""Training launcher.
+
+Two modes:
+* ``--workload drl``  — the paper's workload: multi-instance PPO with GMI
+  layout templates and LGR gradient sync across instances (runs for real on
+  this host's devices).
+* ``--workload lm``   — LLM-architecture training on a local mesh with the
+  reduced config (for full-size production meshes use
+  ``repro.launch.dryrun``).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --workload drl --env Ant \
+      --num-gpus 2 --gmi-per-gpu 2 --iters 20
+  PYTHONPATH=src python -m repro.launch.train --workload lm \
+      --arch mixtral-8x7b --steps 10 --batch 4 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def run_drl(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.placement import plan_tcg_ex_training
+    from repro.envs import make_env
+    from repro.rl.ppo import PPOConfig, init_train, make_train_step
+
+    n_dev = len(jax.devices())
+    layout = plan_tcg_ex_training(
+        args.num_gpus, args.gmi_per_gpu,
+        devices=list(range(max(n_dev, args.num_gpus * args.gmi_per_gpu))),
+        devices_per_gpu=args.gmi_per_gpu)
+    strat = layout.reduction_strategy()
+    print(layout.manager.summary())
+    print(f"LGR strategy (Algorithm 1): {strat}")
+
+    env = make_env(args.env)
+    cfg = PPOConfig(num_steps=args.rollout, lr=3e-4)
+    n_inst = args.num_gpus * args.gmi_per_gpu
+    # data-parallel holistic instances: vmapped instance dimension, gradient
+    # sync = mean across instances (the LGR schedules reduce to tree-mean on
+    # a single host device; multi-device runs use repro.core.lgr)
+    import functools
+
+    key = jax.random.key(args.seed)
+    keys = jax.random.split(key, n_inst)
+    states = []
+    step_fns = []
+    grad_sync = (lambda g: g) if n_inst == 1 else None
+    for i in range(n_inst):
+        p, o, es, ob = init_train(keys[i], env, env.spec.policy_dims,
+                                  num_envs=args.num_env // n_inst)
+        states.append([p, o, es, ob, jax.random.PRNGKey(args.seed + i)])
+        step_fns.append(make_train_step(env, cfg, grad_sync_fn=grad_sync))
+
+    t0 = time.time()
+    total_steps = 0
+    for it in range(args.iters):
+        metrics = []
+        for i in range(n_inst):
+            p, o, es, ob, k = states[i]
+            p, o, es, ob, k, m = step_fns[i](p, o, es, ob, k)
+            states[i] = [p, o, es, ob, k]
+            metrics.append(m)
+        # cross-instance gradient consistency: average params (equivalent to
+        # averaged gradients for identical optimizer states)
+        if n_inst > 1:
+            mean_p = jax.tree.map(lambda *xs: sum(xs) / n_inst,
+                                  *[s[0] for s in states])
+            for s in states:
+                s[0] = mean_p
+        total_steps += cfg.num_steps * args.num_env
+        if it % max(args.iters // 10, 1) == 0:
+            rm = float(np.mean([m["reward_mean"] for m in metrics]))
+            print(f"iter {it:4d} reward_mean={rm:8.3f} "
+                  f"steps/s={total_steps / (time.time() - t0):,.0f}")
+    print(f"done: {total_steps:,} env steps in {time.time()-t0:.1f}s "
+          f"({total_steps/(time.time()-t0):,.0f} steps/s)")
+
+
+def run_lm(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.configs.base import InputShape, TrainConfig
+    from repro.data import make_batch
+    from repro.models import transformer as T
+    from repro.optim import adam_init, adam_update
+    from repro.checkpoint import save
+
+    cfg = get_reduced(args.arch)
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    key = jax.random.key(args.seed)
+    params = T.init_model(key, cfg)
+    opt = adam_init(params)
+    tc = TrainConfig(learning_rate=args.lr)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch, remat=False))(params)
+        params, opt = adam_update(grads, opt, params, lr=tc.learning_rate,
+                                  grad_clip=tc.grad_clip)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = make_batch(cfg, shape, seed=args.seed + i)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, loss = step(params, opt, batch)
+        if i % max(args.steps // 10, 1) == 0:
+            print(f"step {i:4d} loss={float(loss):.4f}")
+    print(f"done in {time.time()-t0:.1f}s; final loss {float(loss):.4f}")
+    if args.ckpt:
+        save(args.ckpt, {"params": params, "opt": opt}, step=args.steps)
+        print("checkpoint saved to", args.ckpt)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=["drl", "lm"], default="drl")
+    ap.add_argument("--env", default="Ant")
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--num-gpus", type=int, default=2)
+    ap.add_argument("--gmi-per-gpu", type=int, default=2)
+    ap.add_argument("--num-env", type=int, default=256)
+    ap.add_argument("--rollout", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+    if args.workload == "drl":
+        run_drl(args)
+    else:
+        run_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import attention, layers, moe, policy, ssm, transformer  # noqa: F401

@@ -1,0 +1,213 @@
+"""GQA attention with sliding-window, logit softcap, QKV-bias, KV caches.
+
+Two execution paths:
+  * ``direct``  — materializes (…, Sq, Skv) scores; used for small sequences
+    and as the oracle.
+  * ``chunked`` — flash-style double-blocked online softmax expressed with
+    ``jax.lax.scan`` (O(block²) live scores); used for long sequences so the
+    32k/500k dry-run shapes fit HBM.  The Pallas kernel in
+    ``repro.kernels.flash_attention`` is the TPU-tiled version of the same
+    algorithm.
+
+Caches:
+  * full cache  — (B, S, n_kv, hd) k/v with write index = absolute position.
+  * ring cache  — (B, W, n_kv, hd) sliding-window ring buffer plus a
+    ``slot_pos`` (B, W) absolute-position map, for ``long_500k`` decode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, init_linear, linear, softcap
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """KV cache; ring-buffer and linear caches are unified: writes always go
+    to slot ``pos % W`` and masking always reads absolute positions from
+    ``slot_pos`` (for a full-length cache pos % W == pos)."""
+    k: jax.Array          # (B, S_or_W, n_kv, hd)
+    v: jax.Array
+    slot_pos: jax.Array   # (B, S_or_W) absolute position in each slot (-1 empty)
+
+
+def init_attention_params(key, d_model: int, num_heads: int, num_kv_heads: int,
+                          head_dim: int, qkv_bias: bool = False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(kq, d_model, num_heads * head_dim, qkv_bias),
+        "wk": init_linear(kk, d_model, num_kv_heads * head_dim, qkv_bias),
+        "wv": init_linear(kv, d_model, num_kv_heads * head_dim, qkv_bias),
+        "wo": init_linear(ko, num_heads * head_dim, d_model, False),
+    }
+
+
+def make_cache(batch: int, seq: int, n_kv: int, head_dim: int,
+               window: Optional[int] = None, dtype=jnp.float32) -> KVCache:
+    size = min(seq, window) if window else seq
+    return KVCache(
+        k=jnp.zeros((batch, size, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, size, n_kv, head_dim), dtype),
+        slot_pos=jnp.full((batch, size), -1, jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+def _mask(qpos, kpos, causal: bool, window):
+    """qpos: (..., Sq), kpos: (..., Skv) -> bool (..., Sq, Skv)."""
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    valid = k >= 0
+    if causal:
+        valid &= k <= q
+    if window is not None:
+        valid &= k > q - window
+    return valid
+
+
+def _direct_attention(q, k, v, qpos, kpos, causal, window, cap, scale):
+    """q: (B,Sq,H,hd)  k/v: (B,Skv,KH,hd).
+
+    k/v stay in their storage dtype (casting a 32k-deep KV cache to f32
+    costs GiBs of HBM per layer); the MXU accumulates in f32 via
+    ``preferred_element_type``."""
+    B, Sq, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qf = (q * scale).astype(k.dtype).reshape(B, Sq, KH, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, k,
+                        preferred_element_type=jnp.float32)
+    scores = softcap(scores, cap)
+    m = _mask(qpos, kpos, causal, window)              # (B?,Sq,Skv)
+    m = m[:, None, None] if m.ndim == 3 else m[None, None, None]
+    scores = jnp.where(m, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, qpos, kpos, causal, window, cap, scale,
+                       q_block: int = 512, kv_block: int = 1024):
+    """Flash-style blocked attention with online softmax (pure lax.scan)."""
+    B, Sq, H, hd = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    nq = -(-Sq // qb)
+    nk = -(-Skv // kb)
+    pq = nq * qb - Sq
+    pk = nk * kb - Skv
+    # pad; padded key slots get kpos = -1 so the mask kills them
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qposp = jnp.pad(qpos, [(0, 0)] * (qpos.ndim - 1) + [(0, pq)])
+    kposp = jnp.pad(kpos, [(0, 0)] * (kpos.ndim - 1) + [(0, pk)],
+                    constant_values=-1)
+    qp = qp.reshape(B, nq, qb, H, hd).transpose(1, 0, 2, 3, 4)
+    kp = kp.reshape(B, nk, kb, KH, hd).transpose(1, 0, 2, 3, 4)
+    vp = vp.reshape(B, nk, kb, KH, hd).transpose(1, 0, 2, 3, 4)
+    qposp = jnp.broadcast_to(qposp, (B, nq * qb)).reshape(B, nq, qb).transpose(1, 0, 2)
+    kposp = jnp.broadcast_to(kposp, (B, nk * kb)).reshape(B, nk, kb).transpose(1, 0, 2)
+
+    def q_step(_, qc):
+        qi, qpi = qc                                    # (B,qb,H,hd), (B,qb)
+        qf = (qi * scale).astype(k.dtype).reshape(B, qb, KH, G, hd)
+
+        def kv_step(carry, kc):
+            m_prev, l_prev, acc = carry
+            ki, vi, kpi = kc
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qf, ki,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, cap)
+            msk = _mask(qpi, kpi, causal, window)[:, None, None]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, KH, G, qb), NEG_INF, jnp.float32),
+                jnp.zeros((B, KH, G, qb), jnp.float32),
+                jnp.zeros((B, KH, G, qb, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (kp, vp, kposp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4).reshape(B, qb, H, hd)
+
+    _, outs = jax.lax.scan(q_step, None, (qp, qposp))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * qb, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+def attention(params, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
+              positions, causal: bool = True, window: Optional[int] = None,
+              attn_cap: Optional[float] = None, rope_theta: float = 10_000.0,
+              cache: Optional[KVCache] = None,
+              chunked_threshold: int = 4096,
+              use_rope: bool = True):
+    """Full attention block.  x: (B, S, D); positions: (B, S) or (S,).
+
+    If ``cache`` is given and S == 1 this is a decode step: write k/v into the
+    cache at ``positions`` and attend over the cache.  If cache is given with
+    S > 1 (prefill) the cache is filled and returned.
+    Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (B, S))
+    q = linear(params["wq"], x).reshape(B, S, num_heads, head_dim)
+    k = linear(params["wk"], x).reshape(B, S, num_kv_heads, head_dim)
+    v = linear(params["wv"], x).reshape(B, S, num_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    scale = head_dim ** -0.5
+
+    new_cache = cache
+    if cache is not None and S == 1:
+        # decode: write this step's k/v into its ring slot, attend over cache
+        W = cache.k.shape[1]
+        slots = positions % W                                # (B,1)
+        bidx = jnp.arange(B)[:, None]
+        ck = cache.k.at[bidx, slots].set(k.astype(cache.k.dtype))
+        cv = cache.v.at[bidx, slots].set(v.astype(cache.v.dtype))
+        cp = cache.slot_pos.at[bidx, slots].set(positions)
+        new_cache = KVCache(ck, cv, cp)
+        k_all, v_all, kpos = ck, cv, cp
+    elif cache is not None:
+        # prefill: attend over the fresh in-context k/v (a ring cache cannot
+        # hold S > W simultaneous writes); persist only the last W positions,
+        # which is exactly what windowed decode will ever read.
+        W = cache.k.shape[1]
+        n = min(S, W)
+        k_tail, v_tail, p_tail = k[:, -n:], v[:, -n:], positions[:, -n:]
+        slots = p_tail % W
+        bidx = jnp.arange(B)[:, None]
+        ck = cache.k.at[bidx, slots].set(k_tail.astype(cache.k.dtype))
+        cv = cache.v.at[bidx, slots].set(v_tail.astype(cache.v.dtype))
+        cp = cache.slot_pos.at[bidx, slots].set(p_tail)
+        new_cache = KVCache(ck, cv, cp)
+        k_all, v_all, kpos = k, v, positions
+    else:
+        k_all, v_all, kpos = k, v, positions
+
+    Skv = k_all.shape[1]
+    if max(S, Skv) > chunked_threshold and S > 1:
+        out = _chunked_attention(q, k_all, v_all, positions, kpos,
+                                 causal, window, attn_cap, scale)
+    else:
+        out = _direct_attention(q, k_all, v_all, positions, kpos,
+                                causal, window, attn_cap, scale)
+    out = linear(params["wo"], out.reshape(B, S, num_heads * head_dim))
+    return out, new_cache

@@ -1,0 +1,115 @@
+"""Core NN layers: RMSNorm, RoPE, embeddings, MLPs (pure-functional JAX).
+
+Params are plain nested dicts of jnp arrays; every layer is an
+``init_*(key, ...) -> params`` / ``apply(params, x, ...)`` pair so stacks can
+be built with ``jax.lax.scan`` over stacked parameter pytrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import lecun_init
+
+
+# ---------------------------------------------------------------- norms ----
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., seq, hd/2)
+    sin = jnp.sin(ang)[..., None, :]                  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ softcap ------
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ------------------------------------------------------------ linear -------
+def init_linear(key, d_in: int, d_out: int, bias: bool = False):
+    p = {"w": lecun_init(key, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- mlp ------
+def init_mlp(key, d: int, d_ff: int, act: str = "silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("silu", "swiglu"):
+        return {"wi": lecun_init(k1, (d, d_ff)),
+                "wg": lecun_init(k2, (d, d_ff)),
+                "wo": lecun_init(k3, (d_ff, d))}
+    return {"wi": lecun_init(k1, (d, d_ff)),
+            "wo": lecun_init(k3, (d_ff, d))}
+
+
+def mlp(params, x, act: str = "silu"):
+    dt = x.dtype
+    h = x @ params["wi"].astype(dt)
+    if "wg" in params:
+        g = x @ params["wg"].astype(dt)
+        h = jax.nn.silu(g) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.silu(h)
+    return h @ params["wo"].astype(dt)
+
+
+# ------------------------------------------------------- embeddings --------
+def init_embedding(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d)) * 0.02}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    return x @ params["table"].T.astype(x.dtype)

@@ -1,0 +1,65 @@
+"""DRL policy networks — the paper's Table 6 MLP policies.
+
+Each benchmark uses an MLP ``in_dim:hidden...:out_dim`` actor with a value
+head off the last hidden layer (standard PPO actor-critic).  The actor
+outputs a diagonal-Gaussian action distribution (continuous control, as in
+Isaac Gym).  The fused Pallas kernel in ``repro.kernels.fused_policy_mlp``
+executes the same trunk in one VMEM-resident pass.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import he_init
+
+
+def init_policy(key, dims: Sequence[int]):
+    """dims = [in, h1, ..., hk, act_dim] (paper Table 6 format)."""
+    keys = jax.random.split(key, len(dims))
+    layers = []
+    for i in range(len(dims) - 2):
+        layers.append({"w": he_init(keys[i], (dims[i], dims[i + 1])),
+                       "b": jnp.zeros((dims[i + 1],), jnp.float32)})
+    p = {
+        "trunk": layers,
+        "mu": {"w": he_init(keys[-2], (dims[-2], dims[-1])) * 0.01,
+               "b": jnp.zeros((dims[-1],), jnp.float32)},
+        "log_std": jnp.zeros((dims[-1],), jnp.float32),
+        "value": {"w": he_init(keys[-1], (dims[-2], 1)),
+                  "b": jnp.zeros((1,), jnp.float32)},
+    }
+    return p
+
+
+def policy_trunk(params, obs):
+    h = obs
+    for lyr in params["trunk"]:
+        h = jnp.tanh(h @ lyr["w"] + lyr["b"])
+    return h
+
+
+def policy_apply(params, obs) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """obs (..., in_dim) -> (mu, log_std, value)."""
+    h = policy_trunk(params, obs)
+    mu = h @ params["mu"]["w"] + params["mu"]["b"]
+    value = (h @ params["value"]["w"] + params["value"]["b"])[..., 0]
+    log_std = jnp.broadcast_to(params["log_std"], mu.shape)
+    return mu, log_std, value
+
+
+def sample_action(key, mu, log_std):
+    return mu + jnp.exp(log_std) * jax.random.normal(key, mu.shape)
+
+
+def log_prob(mu, log_std, action):
+    var = jnp.exp(2 * log_std)
+    lp = -0.5 * (jnp.square(action - mu) / var
+                 + 2 * log_std + jnp.log(2 * jnp.pi))
+    return jnp.sum(lp, axis=-1)
+
+
+def entropy(log_std):
+    return jnp.sum(log_std + 0.5 * jnp.log(2 * jnp.pi * jnp.e), axis=-1)

@@ -1,0 +1,402 @@
+"""Recurrent blocks: mLSTM / sLSTM (xLSTM, arXiv:2405.04517) and Mamba2
+(SSD, used by zamba2, arXiv:2411.15242).
+
+Both mLSTM and Mamba2 share a chunkwise-parallel skeleton ("masked linear
+attention inside a chunk + recurrent state across chunks"), giving O(S·L)
+memory instead of O(S²).  Decode uses the exact recurrent update; tests
+assert chunkwise == recurrent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import lecun_init
+
+LOG_EPS = -1e30
+
+
+# ---------------------------------------------------------------- conv -----
+def init_conv1d(key, channels: int, width: int):
+    return {"w": lecun_init(key, (width, channels), fan_in=width),
+            "b": jnp.zeros((channels,), jnp.float32)}
+
+
+def causal_conv1d(params, x, state=None):
+    """Depthwise causal conv.  x: (B,S,C).  state: (B,W-1,C) prior inputs.
+
+    Returns (y, new_state) where new_state holds the last W-1 inputs.
+    """
+    W = params["w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    # depthwise: y[t] = sum_j w[j] * xp[t+j]
+    y = sum(xp[:, j:j + x.shape[1]] * params["w"][j].astype(x.dtype)
+            for j in range(W))
+    y = y + params["b"].astype(x.dtype)
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+# ================================================================= mLSTM ===
+class MLSTMState(NamedTuple):
+    C: jax.Array      # (B,H,dh,dh) matrix memory
+    n: jax.Array      # (B,H,dh)
+    m: jax.Array      # (B,H) log-space stabilizer
+    conv: jax.Array   # (B,W-1,Di) conv state
+
+
+def init_mlstm(key, d_model: int, num_heads: int, expansion: int = 2,
+               conv_width: int = 4):
+    di = d_model * expansion
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": {"scale": jnp.ones((d_model,), jnp.float32)},
+        "w_up": lecun_init(ks[0], (d_model, 2 * di)),          # x path + z gate
+        "conv": init_conv1d(ks[1], di, conv_width),
+        "wq": lecun_init(ks[2], (di, di)),
+        "wk": lecun_init(ks[3], (di, di)),
+        "wv": lecun_init(ks[4], (di, di)),
+        "w_if": lecun_init(ks[5], (di, 2 * num_heads)),        # i,f gate preacts
+        "b_if": jnp.zeros((2 * num_heads,), jnp.float32),
+        "gnorm": {"scale": jnp.ones((di,), jnp.float32)},
+        "w_down": lecun_init(ks[6], (di, d_model)),
+    }
+
+
+def mlstm_init_state(batch: int, num_heads: int, dh: int, di: int,
+                     conv_width: int = 4, dtype=jnp.float32) -> MLSTMState:
+    return MLSTMState(
+        C=jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, num_heads, dh), jnp.float32),
+        m=jnp.full((batch, num_heads), 0.0, jnp.float32),
+        conv=jnp.zeros((batch, conv_width - 1, di), dtype))
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state_C, state_n, state_m):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,L,dh); log_i/log_f: (B,H,L).
+    Returns (h (B,H,L,dh), C', n', m').
+    """
+    B, H, L, dh = q.shape
+    b = jnp.cumsum(log_f, axis=-1)                            # (B,H,L) inclusive
+    # intra-chunk log weights: D[t,s] = b_t - b_s + log_i_s  (s <= t)
+    lw = b[..., :, None] - b[..., None, :] + log_i[..., None, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    lw = jnp.where(causal, lw, LOG_EPS)
+    # inter-chunk log weight for reading the carried state
+    inter = state_m[..., None] + b                             # (B,H,L)
+    m_t = jnp.maximum(inter, jnp.max(lw, axis=-1))             # (B,H,L)
+    w_intra = jnp.exp(lw - m_t[..., None])                     # (B,H,L,L)
+    w_inter = jnp.exp(inter - m_t)                             # (B,H,L)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale * w_intra
+    # C stores v⊗k (C[d,e] = v_d k_e); reading contracts q with the k-dim (e)
+    h_num = jnp.einsum("bhts,bhsd->bhtd", scores, v) \
+        + w_inter[..., None] * jnp.einsum("bhte,bhde->bhtd", q * scale, state_C)
+    n_t = jnp.einsum("bhts,bhsd->bhtd", w_intra, k) \
+        + w_inter[..., None] * state_n[..., None, :]
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", q * scale, n_t)),
+                        jnp.exp(-m_t))
+    h = h_num / denom[..., None]
+    # carry state to chunk end (position L-1, inclusive decay b[...,-1])
+    bl = b[..., -1]                                            # (B,H)
+    m_new = jnp.maximum(state_m + bl, jnp.max(log_i + (bl[..., None] - b),
+                                              axis=-1))
+    w_c = jnp.exp(log_i + bl[..., None] - b - m_new[..., None])   # (B,H,L)
+    C_new = jnp.exp(state_m + bl - m_new)[..., None, None] * state_C + \
+        jnp.einsum("bhs,bhsd,bhse->bhde", w_c, v, k)
+    n_new = jnp.exp(state_m + bl - m_new)[..., None] * state_n + \
+        jnp.einsum("bhs,bhsd->bhd", w_c, k)
+    return h, C_new, n_new, m_new
+
+
+def mlstm_apply(params, x, *, num_heads: int, state: MLSTMState = None,
+                chunk: int = 256, expansion: int = 2):
+    """mLSTM block.  x: (B,S,D) -> (out, new_state)."""
+    B, S, D = x.shape
+    from repro.models.layers import rms_norm
+    di = D * expansion
+    dh = di // num_heads
+    h_in = rms_norm(params["norm"], x)
+    up = h_in @ params["w_up"].astype(x.dtype)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    conv_state = state.conv if state is not None else None
+    x_c, conv_new = causal_conv1d(params["conv"], x_in, conv_state)
+
+    def heads(t, w):
+        return (t @ w.astype(t.dtype)).reshape(B, S, num_heads, dh).transpose(0, 2, 1, 3)
+
+    q = heads(x_c, params["wq"]).astype(jnp.float32)
+    k = heads(x_c, params["wk"]).astype(jnp.float32)
+    v = heads(x_in, params["wv"]).astype(jnp.float32)
+    if_pre = (x_c @ params["w_if"].astype(x.dtype)) + params["b_if"].astype(x.dtype)
+    if_pre = if_pre.reshape(B, S, 2, num_heads).transpose(0, 3, 1, 2).astype(jnp.float32)
+    log_i = if_pre[..., 0]                                     # (B,H,S)
+    log_f = jax.nn.log_sigmoid(if_pre[..., 1])
+
+    if state is None:
+        state = mlstm_init_state(B, num_heads, dh, di, params["conv"]["w"].shape[0],
+                                 x.dtype)
+
+    L = min(chunk, S)
+    if S % L:
+        raise ValueError(f"seq {S} not divisible by chunk {L}")
+    nc = S // L
+
+    def step(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, lic, lfc = xs
+        h, C, n, m = _mlstm_chunk(qc, kc, vc, lic, lfc, C, n, m)
+        return (C, n, m), h
+
+    xs = tuple(t.reshape(B, num_heads, nc, L, -1).transpose(2, 0, 1, 3, 4)
+               for t in (q, k, v)) + tuple(
+        t.reshape(B, num_heads, nc, L).transpose(2, 0, 1, 3)
+        for t in (log_i, log_f))
+    (C, n, m), hs = jax.lax.scan(step, (state.C, state.n, state.m), xs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, num_heads, S, dh)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
+    h = rms_norm(params["gnorm"], h)
+    out = (h * jax.nn.silu(z)) @ params["w_down"].astype(x.dtype)
+    return x + out, MLSTMState(C, n, m, conv_new)
+
+
+def mlstm_decode_step(params, x, state: MLSTMState, *, num_heads: int,
+                      expansion: int = 2):
+    """Exact recurrent single step.  x: (B,1,D)."""
+    B, _, D = x.shape
+    from repro.models.layers import rms_norm
+    di = D * expansion
+    dh = di // num_heads
+    h_in = rms_norm(params["norm"], x)
+    up = h_in @ params["w_up"].astype(x.dtype)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    x_c, conv_new = causal_conv1d(params["conv"], x_in, state.conv)
+
+    def head(t, w):
+        return (t @ w.astype(t.dtype)).reshape(B, num_heads, dh)
+
+    q = head(x_c[:, 0], params["wq"]).astype(jnp.float32) * dh ** -0.5
+    k = head(x_c[:, 0], params["wk"]).astype(jnp.float32)
+    v = head(x_in[:, 0], params["wv"]).astype(jnp.float32)
+    if_pre = (x_c[:, 0] @ params["w_if"].astype(x.dtype)) + params["b_if"].astype(x.dtype)
+    if_pre = if_pre.reshape(B, 2, num_heads).astype(jnp.float32)
+    log_i, log_f = if_pre[:, 0], jax.nn.log_sigmoid(if_pre[:, 1])
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state.m - m_new)
+    C = f_s[..., None, None] * state.C + i_s[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", v, k)
+    n = f_s[..., None] * state.n + i_s[..., None] * k
+    num = jnp.einsum("bhe,bhde->bhd", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    h = rms_norm(params["gnorm"], h)
+    out = (h * jax.nn.silu(z)) @ params["w_down"].astype(x.dtype)
+    return x + out, MLSTMState(C, n, m_new, conv_new)
+
+
+# ================================================================= sLSTM ===
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B,H,dh)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array   # (B,H,dh)
+
+
+def init_slstm(key, d_model: int, num_heads: int):
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": {"scale": jnp.ones((d_model,), jnp.float32)},
+        "w": lecun_init(ks[0], (d_model, 4 * d_model)),        # i,f,z,o preacts
+        "r": lecun_init(ks[1], (num_heads, dh, 4 * dh), fan_in=dh),  # recurrent
+        "b": jnp.zeros((4 * d_model,), jnp.float32),
+        "gnorm": {"scale": jnp.ones((d_model,), jnp.float32)},
+        "w_up": lecun_init(ks[2], (d_model, 2 * d_model)),
+        "w_down": lecun_init(ks[3], (d_model, d_model)),
+    }
+
+
+def slstm_init_state(batch: int, num_heads: int, dh: int) -> SLSTMState:
+    z = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return SLSTMState(z, z, z, z)
+
+
+def _slstm_cell(params, x_pre, state: SLSTMState, num_heads: int):
+    """x_pre: (B, 4*D) input preactivations for one timestep."""
+    B = x_pre.shape[0]
+    D4 = x_pre.shape[-1]
+    dh = D4 // 4 // num_heads
+    rec = jnp.einsum("bhd,hde->bhe", state.h, params["r"].astype(jnp.float32))
+    pre = x_pre.astype(jnp.float32).reshape(B, num_heads, 4 * dh) + rec
+    i_p, f_p, z_p, o_p = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_p) + state.m, i_p)
+    i_g = jnp.exp(i_p - m_new)
+    f_g = jnp.exp(jax.nn.log_sigmoid(f_p) + state.m - m_new)
+    c = f_g * state.c + i_g * jnp.tanh(z_p)
+    n = f_g * state.n + i_g
+    h = jax.nn.sigmoid(o_p) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, h, m_new)
+
+
+def slstm_apply(params, x, *, num_heads: int, state: SLSTMState = None):
+    """sLSTM block (inherently sequential).  x: (B,S,D) -> (out, state)."""
+    B, S, D = x.shape
+    from repro.models.layers import rms_norm
+    dh = D // num_heads
+    if state is None:
+        state = slstm_init_state(B, num_heads, dh)
+    h_in = rms_norm(params["norm"], x)
+    x_pre = h_in @ params["w"].astype(x.dtype) + params["b"].astype(x.dtype)
+
+    def step(st, xp):
+        st = _slstm_cell(params, xp, st, num_heads)
+        return st, st.h
+
+    state, hs = jax.lax.scan(step, state, x_pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    h = rms_norm(params["gnorm"], h)
+    up, gate = jnp.split(h @ params["w_up"].astype(x.dtype), 2, axis=-1)
+    out = (up * jax.nn.gelu(gate)) @ params["w_down"].astype(x.dtype)
+    return x + out, state
+
+
+# ================================================================= Mamba2 ==
+class Mamba2State(NamedTuple):
+    h: jax.Array      # (B,H,dh,N) ssm state
+    conv: jax.Array   # (B,W-1,C) conv state
+
+
+def init_mamba2(key, d_model: int, state_dim: int, *, expansion: int = 2,
+                head_dim: int = 64, conv_width: int = 4):
+    di = d_model * expansion
+    nheads = di // head_dim
+    ks = jax.random.split(key, 5)
+    conv_ch = di + 2 * state_dim
+    return {
+        "norm": {"scale": jnp.ones((d_model,), jnp.float32)},
+        # projects to [z(di), x(di), B(N), C(N), dt(nheads)]
+        "w_in": lecun_init(ks[0], (d_model, 2 * di + 2 * state_dim + nheads)),
+        "conv": init_conv1d(ks[1], conv_ch, conv_width),
+        "A_log": jnp.zeros((nheads,), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "gnorm": {"scale": jnp.ones((di,), jnp.float32)},
+        "w_out": lecun_init(ks[2], (di, d_model)),
+    }
+
+
+def mamba2_init_state(batch: int, di: int, state_dim: int, head_dim: int = 64,
+                      conv_width: int = 4, dtype=jnp.float32) -> Mamba2State:
+    nheads = di // head_dim
+    return Mamba2State(
+        h=jnp.zeros((batch, nheads, head_dim, state_dim), jnp.float32),
+        conv=jnp.zeros((batch, conv_width - 1, di + 2 * state_dim), dtype))
+
+
+def _mamba2_proj(params, x, di, state_dim, nheads):
+    h_in_norm = x
+    zxbcdt = h_in_norm @ params["w_in"].astype(x.dtype)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * state_dim]
+    dt_pre = zxbcdt[..., -nheads:]
+    return z, xbc, dt_pre
+
+
+def mamba2_apply(params, x, *, state_dim: int, state: Mamba2State = None,
+                 expansion: int = 2, head_dim: int = 64, chunk: int = 256):
+    """Mamba2 (SSD) block.  x: (B,S,D) -> (out, new_state)."""
+    B, S, D = x.shape
+    from repro.models.layers import rms_norm
+    di = D * expansion
+    nheads = di // head_dim
+    N = state_dim
+    h_in = rms_norm(params["norm"], x)
+    z, xbc, dt_pre = _mamba2_proj(params, h_in, di, N, nheads)
+    conv_state = state.conv if state is not None else None
+    xbc_c, conv_new = causal_conv1d(params["conv"], xbc, conv_state)
+    xs = xbc_c[..., :di].astype(jnp.float32)
+    Bmat = xbc_c[..., di:di + N].astype(jnp.float32)           # (B,S,N)
+    Cmat = xbc_c[..., di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) +
+                         params["dt_bias"])                     # (B,S,H)
+    A = -jnp.exp(params["A_log"])                               # (H,)
+    log_decay = (dt * A).transpose(0, 2, 1)                     # (B,H,S)
+    xh = xs.reshape(B, S, nheads, head_dim).transpose(0, 2, 1, 3)  # (B,H,S,dh)
+    xh_dt = xh * dt.transpose(0, 2, 1)[..., None]
+
+    if state is None:
+        state = mamba2_init_state(B, di, N, head_dim,
+                                  params["conv"]["w"].shape[0], x.dtype)
+
+    L = min(chunk, S)
+    if S % L:
+        raise ValueError(f"seq {S} not divisible by chunk {L}")
+    nc = S // L
+
+    def step(h_prev, xs_c):
+        xc, bc, cc, ld = xs_c          # (B,H,L,dh),(B,L,N),(B,L,N),(B,H,L)
+        b = jnp.cumsum(ld, axis=-1)                             # (B,H,L)
+        # intra: scores[t,s] = C_t·B_s * exp(b_t - b_s), s<=t
+        lw = b[..., :, None] - b[..., None, :]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(causal, jnp.exp(lw), 0.0)                 # (B,H,L,L)
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)                 # (B,L,L)
+        y_intra = jnp.einsum("bhts,bts,bhsd->bhtd", w, cb, xc)
+        # inter: read carried state
+        y_inter = jnp.exp(b)[..., None] * jnp.einsum(
+            "bhdn,btn->bhtd", h_prev, cc)
+        y = y_intra + y_inter
+        # state update
+        bl = b[..., -1:]                                        # (B,H,1)
+        w_state = jnp.exp(bl - b)                               # decay s->L
+        h_new = jnp.exp(bl)[..., None] * h_prev + jnp.einsum(
+            "bhs,bhsd,bsn->bhdn", w_state, xc, bc)
+        return h_new, y
+
+    xs_chunks = (
+        xh_dt.reshape(B, nheads, nc, L, head_dim).transpose(2, 0, 1, 3, 4),
+        Bmat.reshape(B, nc, L, N).transpose(1, 0, 2, 3),
+        Cmat.reshape(B, nc, L, N).transpose(1, 0, 2, 3),
+        log_decay.reshape(B, nheads, nc, L).transpose(2, 0, 1, 3),
+    )
+    h_state, ys = jax.lax.scan(step, state.h, xs_chunks)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, nheads, S, head_dim)
+    y = y + params["D"][None, :, None, None] * xh
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(params["gnorm"], y)
+    out = (y * jax.nn.silu(z)) @ params["w_out"].astype(x.dtype)
+    return x + out, Mamba2State(h_state, conv_new)
+
+
+def mamba2_decode_step(params, x, state: Mamba2State, *, state_dim: int,
+                       expansion: int = 2, head_dim: int = 64):
+    """Exact recurrent single step.  x: (B,1,D)."""
+    B, _, D = x.shape
+    from repro.models.layers import rms_norm
+    di = D * expansion
+    nheads = di // head_dim
+    N = state_dim
+    h_in = rms_norm(params["norm"], x)
+    z, xbc, dt_pre = _mamba2_proj(params, h_in, di, N, nheads)
+    xbc_c, conv_new = causal_conv1d(params["conv"], xbc, state.conv)
+    xs = xbc_c[:, 0, :di].astype(jnp.float32)
+    Bv = xbc_c[:, 0, di:di + N].astype(jnp.float32)
+    Cv = xbc_c[:, 0, di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                     # (B,H)
+    xh = xs.reshape(B, nheads, head_dim)
+    h_new = decay[..., None, None] * state.h + jnp.einsum(
+        "bhd,bn->bhdn", xh * dt[..., None], Bv)
+    y = jnp.einsum("bhdn,bn->bhd", h_new, Cv) + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(params["gnorm"], y)
+    out = (y * jax.nn.silu(z)) @ params["w_out"].astype(x.dtype)
+    return x + out, Mamba2State(h_new, conv_new)

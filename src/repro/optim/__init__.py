@@ -1,0 +1,2 @@
+from repro.optim.adam import (AdamState, SGDState, adam_init, adam_update,
+                              cosine_warmup, sgd_init, sgd_update)  # noqa: F401

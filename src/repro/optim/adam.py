@@ -1,0 +1,100 @@
+"""Pure-JAX optimizers (no optax dependency): Adam/AdamW/SGD + schedules +
+global-norm clipping, pytree-native so states shard like params under pjit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import global_norm
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+def adam_init(params) -> AdamState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                     nu=zeros(params))
+
+
+def adam_update(grads, state: AdamState, params, *, lr, beta1: float = 0.9,
+                beta2: float = 0.95, eps: float = 1e-8,
+                weight_decay: float = 0.0, grad_clip: float = 0.0):
+    """Returns (new_params, new_state).  ``lr`` may be a scalar or callable
+    of the step."""
+    step = state.step + 1
+    if callable(lr):
+        lr_t = lr(step)
+    else:
+        lr_t = lr
+    if grad_clip:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = beta1 * m + (1 - beta1) * g32
+        v = beta2 * v + (1 - beta2) * jnp.square(g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step, new_m, new_v)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    mom: object
+
+
+def sgd_init(params) -> SGDState:
+    return SGDState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                 params))
+
+
+def sgd_update(grads, state: SGDState, params, *, lr, momentum: float = 0.9):
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+
+    def upd(g, m, p):
+        m = momentum * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+    pairs = jax.tree.map(upd, grads, state.mom, params)
+    new_p = jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, SGDState(step, new_m)
+
+
+def cosine_warmup(base_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return sched

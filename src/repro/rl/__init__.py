@@ -1,0 +1,1 @@
+from repro.rl import a3c, ppo, rollout  # noqa: F401

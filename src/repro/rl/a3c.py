@@ -1,0 +1,80 @@
+"""A3C-style asynchronized DRL training (Mnih et al., ICML'16; GA3C).
+
+The paper's async mode decouples *serving* (experience collection on agent
+GMIs) from *training* (policy update on trainer GMIs), connected by the
+channel-based experience pipeline (§4.2).  In single-controller JAX the
+asynchrony is modeled as round-interleaved execution with an explicit
+parameter-staleness counter: actors hold a possibly-stale snapshot of the
+policy; trainers consume experience batches in arrival order.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.policy import entropy, log_prob, policy_apply
+from repro.optim import adam_update
+from repro.rl.rollout import collect
+
+
+class Experience(NamedTuple):
+    """One actor-produced experience batch (the unit shipped over channels)."""
+    obs: jax.Array        # (T, N, obs_dim)
+    actions: jax.Array    # (T, N, act_dim)
+    rewards: jax.Array    # (T, N)
+    dones: jax.Array      # (T, N)
+    bootstrap: jax.Array  # (N,) value of last obs under the actor's params
+    actor_version: jax.Array  # scalar: params version used to act
+
+
+def actor_collect(params, version, env, env_state, obs, key,
+                  num_steps: int) -> tuple:
+    """Experience collection on an agent instance (policy serving)."""
+    traj, env_state, obs, last_value, key = collect(
+        params, env, env_state, obs, key, num_steps)
+    exp = Experience(obs=traj.obs, actions=traj.actions, rewards=traj.rewards,
+                     dones=traj.dones, bootstrap=last_value,
+                     actor_version=version)
+    return exp, env_state, obs, key
+
+
+def nstep_returns(rewards, dones, bootstrap, gamma: float = 0.99):
+    def step(carry, xs):
+        r, d = xs
+        g = r + gamma * carry * (1.0 - d)
+        return g, g
+    _, rets = jax.lax.scan(step, bootstrap, (rewards, dones), reverse=True)
+    return rets
+
+
+def a3c_loss(params, exp: Experience, gamma: float, vf_coef: float,
+             ent_coef: float):
+    rets = nstep_returns(exp.rewards, exp.dones, exp.bootstrap, gamma)
+    mu, log_std, value = policy_apply(params, exp.obs)
+    adv = rets - value
+    lp = log_prob(mu, log_std, exp.actions)
+    pg = -(lp * jax.lax.stop_gradient(adv)).mean()
+    vf = 0.5 * jnp.square(adv).mean()
+    ent = entropy(log_std).mean()
+    return pg + vf_coef * vf - ent_coef * ent, (pg, vf, ent)
+
+
+def trainer_update(params, opt_state, exp: Experience, *, lr=3e-4,
+                   gamma=0.99, vf_coef=0.5, ent_coef=0.01, grad_sync_fn=None,
+                   max_grad_norm=1.0):
+    """Policy update on a trainer instance from one experience batch."""
+    (loss, aux), grads = jax.value_and_grad(a3c_loss, has_aux=True)(
+        params, exp, gamma, vf_coef, ent_coef)
+    if grad_sync_fn is not None:
+        grads = grad_sync_fn(grads)
+    params, opt_state = adam_update(grads, opt_state, params, lr=lr,
+                                    beta1=0.9, beta2=0.999,
+                                    grad_clip=max_grad_norm)
+    return params, opt_state, loss
+
+
+def staleness(current_version, exp: Experience):
+    """Paper §5.1: async training trades throughput for parameter staleness."""
+    return current_version - exp.actor_version

@@ -1,0 +1,126 @@
+"""PPO (Schulman et al., arXiv:1707.06347) — the paper's synchronized DRL
+training workload (Isaac Gym's official algorithm).
+
+One ``train_iteration`` = experience collection (m simulator-agent rounds)
++ minibatched clipped-surrogate updates — the two sequential stages of §5.1.
+Gradient synchronization across trainer GMIs plugs in via ``grad_sync_fn``
+(identity on a single instance; an LGR schedule from ``repro.core.lgr`` on a
+multi-instance layout).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.policy import entropy, log_prob, policy_apply
+from repro.optim import AdamState, adam_init, adam_update
+from repro.rl.rollout import Trajectory, collect, gae
+
+
+class PPOConfig(NamedTuple):
+    num_steps: int = 32          # m: simulator-agent rounds per iteration
+    num_epochs: int = 4
+    num_minibatches: int = 4
+    gamma: float = 0.99
+    lam: float = 0.95
+    clip_eps: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+    lr: float = 3e-4
+    max_grad_norm: float = 1.0
+
+
+def ppo_loss(params, batch, clip_eps, vf_coef, ent_coef,
+             policy_fn=policy_apply):
+    obs, actions, old_lp, advs, returns = batch
+    mu, log_std, value = policy_fn(params, obs)
+    lp = log_prob(mu, log_std, actions)
+    ratio = jnp.exp(lp - old_lp)
+    advs_n = (advs - advs.mean()) / (advs.std() + 1e-8)
+    pg = -jnp.minimum(ratio * advs_n,
+                      jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * advs_n)
+    vf = 0.5 * jnp.square(value - returns)
+    ent = entropy(log_std)
+    loss = pg.mean() + vf_coef * vf.mean() - ent_coef * ent.mean()
+    return loss, (pg.mean(), vf.mean(), ent.mean())
+
+
+def train_iteration(params, opt_state: AdamState, env, env_state, obs, key,
+                    cfg: PPOConfig, grad_sync_fn: Optional[Callable] = None,
+                    policy_fn=policy_apply):
+    """One full PPO iteration.  Returns (params, opt_state, env_state, obs,
+    key, metrics)."""
+    traj, env_state, obs, last_value, key = collect(
+        params, env, env_state, obs, key, cfg.num_steps, policy_fn)
+    advs, returns = gae(traj.rewards, traj.values, traj.dones, last_value,
+                        cfg.gamma, cfg.lam)
+
+    T, N = traj.rewards.shape
+    flat = jax.tree.map(lambda x: x.reshape((T * N,) + x.shape[2:]),
+                        (traj.obs, traj.actions, traj.log_probs, advs,
+                         returns))
+
+    def epoch(carry, _):
+        params, opt_state, key = carry
+        key, pkey = jax.random.split(key)
+        perm = jax.random.permutation(pkey, T * N)
+        shuf = jax.tree.map(lambda x: x[perm], flat)
+        mb = jax.tree.map(
+            lambda x: x.reshape((cfg.num_minibatches,
+                                 (T * N) // cfg.num_minibatches)
+                                + x.shape[1:]), shuf)
+
+        def minibatch(carry, batch):
+            params, opt_state = carry
+            (loss, aux), grads = jax.value_and_grad(
+                ppo_loss, has_aux=True)(params, batch, cfg.clip_eps,
+                                        cfg.vf_coef, cfg.ent_coef, policy_fn)
+            if grad_sync_fn is not None:
+                grads = grad_sync_fn(grads)
+            params, opt_state = adam_update(
+                grads, opt_state, params, lr=cfg.lr, beta1=0.9, beta2=0.999,
+                grad_clip=cfg.max_grad_norm)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(minibatch,
+                                                   (params, opt_state), mb)
+        return (params, opt_state, key), losses.mean()
+
+    (params, opt_state, key), losses = jax.lax.scan(
+        epoch, (params, opt_state, key), None, length=cfg.num_epochs)
+
+    metrics = {
+        "loss": losses.mean(),
+        "reward_mean": traj.rewards.mean(),
+        "reward_sum": traj.rewards.sum(0).mean(),
+        "episode_done_frac": traj.dones.mean(),
+        "steps": jnp.float32(T * N),
+    }
+    return params, opt_state, env_state, obs, key, metrics
+
+
+def make_train_step(env, cfg: PPOConfig, grad_sync_fn=None,
+                    policy_fn=policy_apply):
+    """jit-compiled PPO iteration bound to an env instance."""
+
+    # donate only the env state: params may be SHARED between GMI instances
+    # right after a global policy sync (donating would delete the shared
+    # buffer under the other instances)
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def step(params, opt_state, env_state, obs, key):
+        return train_iteration(params, opt_state, env, env_state, obs, key,
+                               cfg, grad_sync_fn, policy_fn)
+
+    return step
+
+
+def init_train(key, env, policy_dims, num_envs: int):
+    from repro.models.policy import init_policy
+    kp, ke = jax.random.split(key)
+    params = init_policy(kp, policy_dims)
+    opt_state = adam_init(params)
+    env_state, obs = env.reset(ke, num_envs)
+    return params, opt_state, env_state, obs

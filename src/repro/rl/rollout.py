@@ -1,0 +1,67 @@
+"""Experience collection: the serving loop (simulator <-> agent interaction).
+
+``collect`` is the paper's "DRL serving block": the simulator and the agent
+execute sequentially inside one jitted scan — the TCG (task-colocated GMI)
+template, where state/action sharing is an intra-instance memory access
+(COM = 0, Table 4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.policy import log_prob, policy_apply, sample_action
+
+
+class Trajectory(NamedTuple):
+    obs: jax.Array       # (T, N, obs_dim)
+    actions: jax.Array   # (T, N, act_dim)
+    log_probs: jax.Array # (T, N)
+    rewards: jax.Array   # (T, N)
+    dones: jax.Array     # (T, N)
+    values: jax.Array    # (T, N)
+
+
+def collect(policy_params, env, env_state, obs, key, num_steps: int,
+            policy_fn=policy_apply):
+    """Roll the policy for ``num_steps`` across all vectorized envs.
+
+    Returns (traj, env_state, last_obs, last_value, key).
+    """
+
+    def step(carry, _):
+        env_state, obs, key = carry
+        key, akey = jax.random.split(key)
+        mu, log_std, value = policy_fn(policy_params, obs)
+        action = sample_action(akey, mu, log_std)
+        lp = log_prob(mu, log_std, action)
+        env_state, next_obs, reward, done = env.step(env_state, action)
+        out = (obs, action, lp, reward, done.astype(jnp.float32), value)
+        return (env_state, next_obs, key), out
+
+    (env_state, obs, key), outs = jax.lax.scan(
+        step, (env_state, obs, key), None, length=num_steps)
+    traj = Trajectory(*outs)
+    _, _, last_value = policy_fn(policy_params, obs)
+    return traj, env_state, obs, last_value, key
+
+
+def gae(rewards, values, dones, last_value, gamma: float = 0.99,
+        lam: float = 0.95):
+    """Generalized advantage estimation.  All inputs (T, N)."""
+
+    def step(carry, xs):
+        adv_next, v_next = carry
+        r, v, d = xs
+        nonterm = 1.0 - d
+        delta = r + gamma * v_next * nonterm - v
+        adv = delta + gamma * lam * nonterm * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = jax.lax.scan(
+        step, (jnp.zeros_like(last_value), last_value),
+        (rewards, values, dones), reverse=True)
+    returns = advs + values
+    return advs, returns

@@ -1,0 +1,52 @@
+"""Small shared utilities (pytree helpers, rng, dtype policy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of array elements in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def count_params(params) -> int:
+    return tree_size(params)
+
+
+def assert_finite(tree, name: str = "tree"):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if not bool(jnp.all(jnp.isfinite(leaf))):
+            raise AssertionError(f"non-finite values in {name}{jax.tree_util.keystr(path)}")
+
+
+def he_init(key, shape, dtype=jnp.float32, fan_in=None):
+    fan = fan_in or shape[0]
+    return jax.random.normal(key, shape, dtype) * (2.0 / fan) ** 0.5
+
+
+def lecun_init(key, shape, dtype=jnp.float32, fan_in=None):
+    fan = fan_in or shape[0]
+    return jax.random.normal(key, shape, dtype) * (1.0 / fan) ** 0.5

@@ -1,0 +1,92 @@
+"""Multi-device checks, run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (never in the main
+pytest process — smoke tests must see one device)."""
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count=8" in \
+    os.environ.get("XLA_FLAGS", ""), "run via test_dist_multidev.py"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.lgr import lgr_allreduce, mpr_host  # noqa: E402
+
+
+def check_lgr_equivalence():
+    devs = np.array(jax.devices()).reshape(2, 4)
+    mesh = Mesh(devs, ("gpu", "inst"))
+    key = jax.random.key(0)
+    grads = {"w": jax.random.normal(key, (2, 4, 33, 7)),   # odd sizes: pad path
+             "b": jax.random.normal(key, (2, 4, 11))}
+    expect = jax.tree.map(lambda g: np.broadcast_to(
+        np.asarray(g).mean(axis=(0, 1)), g.shape), grads)
+    for strat in ("mrr", "har", "mpr"):
+        out = lgr_allreduce(grads, mesh, strat)
+        for k in grads:
+            np.testing.assert_allclose(np.asarray(out[k]), expect[k],
+                                       rtol=1e-5, atol=1e-5)
+    print("lgr equivalence ok")
+
+
+def check_mpr_host():
+    key = jax.random.key(1)
+    gs = [{"w": jax.random.normal(jax.random.fold_in(key, i), (5, 3))}
+          for i in range(6)]
+    red = mpr_host(gs)
+    want = np.mean([np.asarray(g["w"]) for g in gs], axis=0)
+    np.testing.assert_allclose(red["w"], want, rtol=1e-6)
+    print("mpr host ok")
+
+
+def check_sharded_train_step():
+    """A reduced-arch train step under pjit on a 4x2 mesh must produce the
+    same loss as the single-device step."""
+    from repro.configs import get_reduced
+    from repro.configs.base import InputShape, TrainConfig
+    from repro.data import make_batch
+    from repro.launch.steps import make_train_step
+    from repro.models import transformer as T
+    from repro.optim import adam_init
+
+    cfg = get_reduced("internlm2-1.8b")
+    shape = InputShape("t", 64, 8, "train")
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    with mesh:
+        fn, _ = make_train_step(cfg, mesh, shape, TrainConfig(), lgr="har")
+        params = T.init_model(jax.random.key(0), cfg)
+        opt = adam_init(params)
+        batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, shape).items()}
+        p2, o2, metrics = fn(params, opt, batch)
+    T.set_activation_sharding(None)
+    params = T.init_model(jax.random.key(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, shape).items()}
+    ref_loss = T.loss_fn(params, cfg, batch, remat=True)
+    np.testing.assert_allclose(float(metrics["loss"]), float(ref_loss),
+                               rtol=2e-4, atol=2e-4)
+    print("sharded train step ok, loss", float(metrics["loss"]))
+
+
+def check_gmi_instance_mesh():
+    from repro.core.gmi import GMIManager
+    mgr = GMIManager(devices=jax.devices(), devices_per_gpu=4)
+    for gid, gpu in [(0, 0), (1, 0), (2, 1), (3, 1)]:
+        mgr.add_gmi(gid, "trainer", 0.5)
+        mgr.set_gpu(gid, gpu)
+    mesh = mgr.instance_mesh("trainer")
+    assert mesh.devices.shape == (2, 2)
+    sub = mgr.submesh(0)
+    assert sub.devices.size == 2
+    print("gmi meshes ok")
+
+
+if __name__ == "__main__":
+    check_lgr_equivalence()
+    check_mpr_host()
+    check_sharded_train_step()
+    check_gmi_instance_mesh()
+    print("MULTIDEV ALL OK")

@@ -1,0 +1,15 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see
+# the real single device.  Multi-device tests spawn subprocesses with their
+# own flags (tests/test_dist_multidev.py).
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.key(0)

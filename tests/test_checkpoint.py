@@ -1,0 +1,50 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load, save
+
+
+def test_roundtrip(tmp_path):
+    key = jax.random.key(0)
+    tree = {"a": {"w": jax.random.normal(key, (4, 3)),
+                  "b": jnp.arange(5, dtype=jnp.int32)},
+            "scale": jnp.float32(2.5)}
+    path = str(tmp_path / "ckpt_10")
+    save(path, tree, step=10)
+    back = load(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_missing_key_raises(tmp_path):
+    tree = {"w": jnp.ones((2,))}
+    path = str(tmp_path / "ckpt_0")
+    save(path, tree)
+    with pytest.raises(KeyError):
+        load(path, {"w": jnp.ones((2,)), "extra": jnp.ones((1,))})
+
+
+def test_latest_step(tmp_path):
+    for s in (3, 12, 7):
+        save(str(tmp_path / f"ckpt_{s}"), {"x": jnp.ones(1)}, step=s)
+    assert latest_step(str(tmp_path)) == 12
+    assert latest_step(str(tmp_path / "missing")) is None
+
+
+def test_model_checkpoint_roundtrip(tmp_path):
+    from repro.configs import get_reduced
+    from repro.models import transformer as T
+    cfg = get_reduced("internlm2-1.8b")
+    params = T.init_model(jax.random.key(1), cfg)
+    path = str(tmp_path / "model")
+    save(path, params)
+    back = load(path, params)
+    toks = jax.random.randint(jax.random.key(2), (1, 8), 0, cfg.vocab_size)
+    l1, _ = T.forward(params, cfg, {"tokens": toks})
+    l2, _ = T.forward(back, cfg, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))

@@ -1,0 +1,100 @@
+import numpy as np
+import pytest
+
+from repro.core.cost_model import (WorkloadProfile, best_lgr, lgr_time_har,
+                                   lgr_time_mpr, lgr_time_mrr,
+                                   serving_speedup_tcg_over_tdg,
+                                   training_speedup_tcg_over_tdg)
+from repro.core.gmi import GMIManager
+from repro.core.placement import (plan_async, plan_tcg_ex_training,
+                                  plan_tcg_serving, plan_tdg_serving,
+                                  select_reduction_strategy)
+from repro.core.selection import ProfilePoint, explore
+
+
+def test_manager_registration_and_mapping():
+    mgr = GMIManager(devices=list(range(8)), devices_per_gpu=4)
+    for gid, gpu in [(0, 0), (1, 0), (2, 1), (3, 1)]:
+        mgr.add_gmi(gid, "trainer", 0.5)
+        mgr.set_gpu(gid, gpu)
+    assert mgr.gmi_to_gpu_mapping("trainer") == [[0, 1], [2, 3]]
+    assert mgr.gmis[0].num_devices == 2
+    with pytest.raises(ValueError):
+        mgr.add_gmi(0)
+    # overcommit: a 5th half-GPU instance on gpu 0 must fail
+    mgr.add_gmi(9, "trainer", 0.75)
+    with pytest.raises(ValueError):
+        mgr.set_gpu(9, 0)
+
+
+def test_algorithm1_cases():
+    # paper Algorithm 1, line-by-line behaviours
+    assert select_reduction_strategy([[0, 1, 2]]) == "mpr"
+    assert select_reduction_strategy([[0], [1]]) == "mrr"
+    assert select_reduction_strategy([[0, 1], [2, 3], [4, 5]]) == "mrr"
+    assert select_reduction_strategy([[0, 1, 2], [3, 4]]) == "har"
+    assert select_reduction_strategy([[0, 1, 2], [3, 4, 5]]) == "har"
+
+
+def test_layout_templates():
+    tcg = plan_tcg_serving(2, 3, devices=list(range(12)), devices_per_gpu=6)
+    assert len(tcg.serving_gmis) == 6
+    tdg = plan_tdg_serving(2, 2, devices=list(range(20)),
+                           devices_per_gpu=10)
+    roles = {g.role for g in tdg.manager.gmis.values()}
+    assert roles == {"simulator", "agent"}
+    ex = plan_tcg_ex_training(2, 2, devices=list(range(8)),
+                              devices_per_gpu=4)
+    assert ex.reduction_strategy() == "mrr"       # t=2 == g=2
+    ex2 = plan_tcg_ex_training(2, 3, devices=list(range(12)),
+                               devices_per_gpu=6)
+    assert ex2.reduction_strategy() == "har"      # t=3 > g=2
+    asy = plan_async(4, 2, 2, devices=list(range(16)), devices_per_gpu=4)
+    assert len(asy.serving_gmis) == 4 and len(asy.trainer_gmis) == 4
+
+
+def test_lgr_cost_model_orderings():
+    # Table 2: with NCCL bandwidth >> host bandwidth, HAR beats MPR, and the
+    # HAR advantage grows with more instances per GPU
+    M, B1, B2 = 1.5e6, 5e9, 200e9
+    assert lgr_time_har(4, 4, M, B1, B2) < lgr_time_mpr(4, 4, M, B1, B2)
+    assert best_lgr(2, 8, M, B1, B2) in ("har", "mpr")  # mrr infeasible t>g
+    # absolute HAR saving exists at every scale (Table 2 with B2 >> B1)
+    for g, t in [(2, 2), (4, 4), (8, 4)]:
+        assert lgr_time_har(g, t, M, B1, B2) < lgr_time_mpr(g, t, M, B1, B2)
+    # and HAR's cross-GPU stage rides the fast interconnect: doubling B2
+    # shrinks HAR time but leaves MPR untouched
+    assert lgr_time_har(4, 4, M, B1, 2 * B2) < lgr_time_har(4, 4, M, B1, B2)
+    assert lgr_time_mpr(4, 4, M, B1, 2 * B2) == lgr_time_mpr(4, 4, M, B1, B2)
+
+
+def test_paper_speedup_claims():
+    s = serving_speedup_tcg_over_tdg()
+    t = training_speedup_tcg_over_tdg()
+    assert 2.0 < s < 3.2, f"serving speedup {s} out of the paper's ~2.5x band"
+    assert 3.0 < t < 6.5, f"training speedup {t} out of the paper's ~5x band"
+
+
+def test_algorithm2_finds_saturation_knee():
+    """Synthetic profile: throughput saturates at num_env=2048; memory keeps
+    growing — Algorithm 2 must not pick a post-knee config."""
+
+    def profile(bench, gpg, ne):
+        if gpg > 4:
+            return ProfilePoint(False, 0.0, 0.0)     # too small to run
+        top = 1000.0 * min(ne, 2048) ** 0.9 / gpg ** 0.2
+        mem = ne * 1e6 / gpg
+        return ProfilePoint(True, top, mem)
+
+    trace = explore(profile, "AT", num_gpu=4, alpha=0.1)
+    ne, gpg = trace.best_config
+    assert ne <= 4096
+    assert gpg <= 4
+    assert trace.best_throughput > 0
+
+
+def test_algorithm2_respects_runnability():
+    def profile(bench, gpg, ne):
+        return ProfilePoint(gpg == 1 and ne == 128, 10.0, 1.0)
+    trace = explore(profile, "AT", num_gpu=1)
+    assert trace.best_config == (128, 1)

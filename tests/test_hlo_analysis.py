@@ -1,0 +1,59 @@
+"""The roofline parser must multiply while-loop bodies by trip counts."""
+from repro.launch.hlo_analysis import analyze, _nbytes
+
+SYNTH = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %g = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[128,128]{1,0} all-reduce(%g), channel_id=1, to_apply=%sum.1
+  %d = f32[128,128]{1,0} dot(%ar, %g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %i = s32[] constant(0)
+  ROOT %t = (s32[], f32[128,128]) tuple(%i, %d)
+}
+
+%cond.1 (p: (s32[], f32[128,128])) -> pred[] {
+  %p = (s32[], f32[128,128]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[128,128]) -> f32[128,128] {
+  %a = f32[128,128]{1,0} parameter(0)
+  %i0 = s32[] constant(0)
+  %init = (s32[], f32[128,128]) tuple(%i0, %a)
+  %w = (s32[], f32[128,128]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %ag = f32[256,128]{1,0} all-gather(%a), channel_id=2, dimensions={0}
+  ROOT %out = f32[128,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_nbytes():
+    assert _nbytes("f32[128,128]") == 128 * 128 * 4
+    assert _nbytes("(bf16[4,2], s32[3])") == 16 + 12
+    assert _nbytes("pred[]") == 1
+
+
+def test_loop_multiplication():
+    res = analyze(SYNTH)
+    ar_bytes = 128 * 128 * 4
+    ag_bytes = 256 * 128 * 4
+    # all-reduce inside the x10 loop + one all-gather outside
+    assert res["collective_bytes"] == 10 * ar_bytes + ag_bytes
+    assert res["coll_counts"]["all-reduce"] == 10
+    assert res["coll_counts"]["all-gather"] == 1
+    # dot: 2 * 128*128 * 128 per iteration, x10
+    assert res["dot_flops"] == 10 * 2 * 128 * 128 * 128
+
+
+def test_no_loops_plain_counting():
+    plain = """
+ENTRY %main (a: f32[64,32]) -> f32[64,64] {
+  %a = f32[64,32]{1,0} parameter(0)
+  ROOT %d = f32[64,64]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+}
+"""
+    res = analyze(plain)
+    assert res["dot_flops"] == 2 * 64 * 64 * 32
+    assert res["collective_bytes"] == 0

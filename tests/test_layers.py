@@ -1,0 +1,73 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models.attention import attention, init_attention_params
+
+
+def test_rmsnorm_unit_scale():
+    p = L.init_rmsnorm(16)
+    x = jax.random.normal(jax.random.key(0), (4, 16)) * 5.0
+    y = L.rms_norm(p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-5)
+
+
+def test_layernorm_moments():
+    p = L.init_layernorm(32)
+    x = jax.random.normal(jax.random.key(1), (8, 32)) * 3 + 2
+    y = L.layer_norm(p, x)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.std(y, -1), 1.0, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relative_position():
+    key = jax.random.key(2)
+    x = jax.random.normal(key, (1, 8, 2, 16))
+    pos = jnp.arange(8)
+    y = L.apply_rope(x, pos[None], theta=100.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.key(3), (1, 1, 1, 16))
+    def dot_at(p, d):
+        qr = L.apply_rope(q, jnp.array([[p]]))
+        kr = L.apply_rope(k, jnp.array([[p + d]]))
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(0, 3) - dot_at(5, 3)) < 1e-4
+
+
+def test_softcap_bounds_and_identity():
+    x = jnp.linspace(-100, 100, 101)
+    y = L.softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0
+    assert L.softcap(x, None) is x
+    np.testing.assert_allclose(L.softcap(x * 1e-3, 30.0), x * 1e-3,
+                               rtol=1e-3)
+
+
+def test_gqa_equals_mha_when_kv_heads_match():
+    key = jax.random.key(4)
+    D, H, hd = 32, 4, 8
+    p = init_attention_params(key, D, H, H, hd)
+    x = jax.random.normal(key, (2, 10, D))
+    pos = jnp.arange(10)
+    o_mha, _ = attention(p, x, num_heads=H, num_kv_heads=H, head_dim=hd,
+                         positions=pos)
+    # replicate kv weights into grouped layout: same result must hold when
+    # groups == 1 trivially; here check determinism + shape
+    assert o_mha.shape == (2, 10, D)
+    o2, _ = attention(p, x, num_heads=H, num_kv_heads=H, head_dim=hd,
+                      positions=pos)
+    np.testing.assert_allclose(o_mha, o2)
+
+
+def test_mlp_swiglu_vs_gelu_shapes():
+    key = jax.random.key(5)
+    for act in ("silu", "gelu"):
+        p = L.init_mlp(key, 16, 32, act)
+        x = jax.random.normal(key, (3, 16))
+        assert L.mlp(p, x, act).shape == (3, 16)

@@ -1,0 +1,74 @@
+"""Deliverable (f): per-architecture smoke tests — reduced variants of the
+same family run one forward + one train step on CPU, asserting output
+shapes and the absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.configs.base import InputShape
+from repro.data import make_batch
+from repro.models import transformer as T
+from repro.optim import adam_init, adam_update
+
+SMOKE = InputShape("smoke", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    assert cfg.d_model <= 512 and cfg.num_experts <= 4
+    assert (cfg.num_super * len(cfg.block_pattern) if cfg.block_pattern
+            else cfg.num_layers) <= 2
+    key = jax.random.key(0)
+    params = T.init_model(key, cfg)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SMOKE).items()}
+
+    logits, aux = T.forward(params, cfg, batch)
+    B = SMOKE.global_batch
+    S = logits.shape[1]
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN logits"
+
+    opt = adam_init(params)
+    loss, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, batch, remat=False))(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: NaN loss"
+    new_params, opt = adam_update(grads, opt, params, lr=1e-3, grad_clip=1.0)
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(leaf))), f"{arch}: NaN params"
+    # the step actually changed something
+    changed = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    expected = {
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    }[arch]
+    L = cfg.num_super * len(cfg.block_pattern) if cfg.block_pattern \
+        else cfg.num_layers
+    assert (L, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.d_ff,
+            cfg.vocab_size) == expected
+    assert cfg.source, "every config must cite its source"
+
+
+def test_moe_configs_expert_counts():
+    assert get_config("mixtral-8x7b").num_experts == 8
+    assert get_config("mixtral-8x7b").experts_per_token == 2
+    assert get_config("granite-moe-1b-a400m").num_experts == 32
+    assert get_config("granite-moe-1b-a400m").experts_per_token == 8
+    assert get_config("zamba2-7b").ssm_state_dim == 64

@@ -1,0 +1,87 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_mlstm_chunk_size_invariance(chunk):
+    key = jax.random.key(0)
+    B, S, D, H = 2, 16, 32, 4
+    x = jax.random.normal(key, (B, S, D)) * 0.5
+    p = ssm.init_mlstm(key, D, H)
+    y_full, st_full = ssm.mlstm_apply(p, x, num_heads=H, chunk=16)
+    y_c, st_c = ssm.mlstm_apply(p, x, num_heads=H, chunk=chunk)
+    np.testing.assert_allclose(y_full, y_c, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(st_full.C, st_c.C, rtol=2e-4, atol=2e-5)
+
+
+def test_mlstm_chunkwise_equals_recurrent():
+    key = jax.random.key(1)
+    B, S, D, H = 2, 12, 32, 4
+    x = jax.random.normal(key, (B, S, D)) * 0.5
+    p = ssm.init_mlstm(key, D, H)
+    y1, _ = ssm.mlstm_apply(p, x, num_heads=H, chunk=4)
+    st = ssm.mlstm_init_state(B, H, (D * 2) // H, D * 2)
+    ys = []
+    for t in range(S):
+        yt, st = ssm.mlstm_decode_step(p, x[:, t:t + 1], st, num_heads=H)
+        ys.append(yt)
+    np.testing.assert_allclose(y1, jnp.concatenate(ys, 1), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_mamba2_chunkwise_equals_recurrent():
+    key = jax.random.key(2)
+    B, S, D, N = 2, 16, 32, 8
+    x = jax.random.normal(key, (B, S, D)) * 0.5
+    p = ssm.init_mamba2(key, D, N)
+    y1, st1 = ssm.mamba2_apply(p, x, state_dim=N, chunk=4)
+    st = ssm.mamba2_init_state(B, D * 2, N)
+    ys = []
+    for t in range(S):
+        yt, st = ssm.mamba2_decode_step(p, x[:, t:t + 1], st, state_dim=N)
+        ys.append(yt)
+    np.testing.assert_allclose(y1, jnp.concatenate(ys, 1), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(st1.h, st.h, rtol=2e-4, atol=2e-5)
+
+
+def test_slstm_sequential_state_consistency():
+    key = jax.random.key(3)
+    B, S, D, H = 2, 10, 32, 4
+    x = jax.random.normal(key, (B, S, D)) * 0.5
+    p = ssm.init_slstm(key, D, H)
+    y_all, st_all = ssm.slstm_apply(p, x, num_heads=H)
+    # split run: first 6, then 4 with carried state
+    y_a, st_a = ssm.slstm_apply(p, x[:, :6], num_heads=H)
+    y_b, st_b = ssm.slstm_apply(p, x[:, 6:], num_heads=H, state=st_a)
+    np.testing.assert_allclose(y_all, jnp.concatenate([y_a, y_b], 1),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(st_all.c, st_b.c, rtol=2e-5, atol=2e-5)
+
+
+def test_mlstm_long_range_stability():
+    """Exponential gating with the log-space stabilizer must stay finite
+    over long sequences."""
+    key = jax.random.key(4)
+    B, S, D, H = 1, 512, 16, 2
+    x = jax.random.normal(key, (B, S, D)) * 2.0
+    p = ssm.init_mlstm(key, D, H)
+    y, st = ssm.mlstm_apply(p, x, num_heads=H, chunk=64)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert bool(jnp.all(jnp.isfinite(st.C)))
+
+
+def test_causal_conv_state_equivalence():
+    key = jax.random.key(5)
+    p = ssm.init_conv1d(key, 8, 4)
+    x = jax.random.normal(key, (2, 12, 8))
+    y_all, st_all = ssm.causal_conv1d(p, x)
+    y_a, st_a = ssm.causal_conv1d(p, x[:, :7])
+    y_b, st_b = ssm.causal_conv1d(p, x[:, 7:], st_a)
+    np.testing.assert_allclose(y_all, jnp.concatenate([y_a, y_b], 1),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(st_all, st_b, rtol=1e-6)
