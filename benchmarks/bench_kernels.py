@@ -41,3 +41,32 @@ def run():
                                                     chunk=64))
     us_r = timeit(ref_j)
     emit("kernel_mlstm_interp", us_k, f"ref_us={us_r:.0f}")
+
+    # fused GAE + advantage normalization (PPO hot path)
+    T, N = 32, 512
+    ks = jax.random.split(key, 4)
+    rw = jax.random.normal(ks[0], (T, N))
+    vl = jax.random.normal(ks[1], (T, N))
+    dn = (jax.random.uniform(ks[2], (T, N)) < 0.05).astype(jnp.float32)
+    lv = jax.random.normal(ks[3], (N,))
+    us_k = timeit(lambda: ops.gae_norm(rw, vl, dn, lv))
+    ref_j = jax.jit(lambda r, v, d, l: ref.gae_norm_ref(r, v, d, l))
+    us_r = timeit(lambda: ref_j(rw, vl, dn, lv))
+    emit("kernel_gae_scan_interp", us_k, f"ref_us={us_r:.0f}")
+
+    # ring-buffer channel pack (MCC hot path): pallas vs jitted-XLA lowering
+    # (both paths donate the ring, so each call gets a fresh allocation;
+    # the alloc cost is identical across the two columns)
+    from repro.kernels import channel_pack as cp
+    pay = {"obs": jax.random.normal(key, (T, 64, 48)),
+           "actions": jax.random.normal(key, (T, 64, 12)),
+           "rewards": jax.random.normal(key, (T, 64)),
+           "dones": jnp.zeros((T, 64)),
+           "bootstrap": jnp.zeros((64,)),
+           "actor_version": jnp.int32(0)}
+    slot = jnp.int32(1)
+    us_k = timeit(
+        lambda: ops.pack_channels(cp.alloc_rings(pay, 4), pay, slot))
+    us_x = timeit(
+        lambda: cp.pack_channels_xla(cp.alloc_rings(pay, 4), pay, slot))
+    emit("kernel_channel_pack_interp", us_k, f"xla_us={us_x:.0f}")

@@ -2,6 +2,11 @@
 AY and FC — transfer counts, granularity, wall time, and the throughput
 proxies PPS (handled experience/s) and TTOP (samples delivered to
 trainers/s).
+
+Reports before/after for the device-resident pipeline: ``mcc`` is the
+ring-buffer path (in-place pack at push time, pointer-bump flush),
+``mcc_host`` is the seed host-staging path (per-flush ``jnp.concatenate``
+re-materialization), ``ucc`` ships every tuple field-by-field.
 """
 from __future__ import annotations
 
@@ -11,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.channels import MultiChannelPipeline, UniChannelPipeline
+from repro.core.channels import (HostStagedPipeline, MultiChannelPipeline,
+                                 UniChannelPipeline)
 from repro.envs import make_env
 from repro.rl.a3c import Experience
 
@@ -27,23 +33,54 @@ def _make_exp(spec, T=32, N=64, version=0):
         actor_version=jnp.int32(version))
 
 
-def run(benches=("Anymal", "FrankaCabinet"), agents=4, rounds=6):
+def _drive_mcc(pipe, exps, agents, rounds):
+    """Push+flush loop; returns (dt_total, dt_push, delivered_samples)."""
+    delivered = 0
+    dt_push = 0.0
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        tp = time.perf_counter()
+        for a in range(agents):
+            pipe.push(a, exps[r][a])
+        dt_push += time.perf_counter() - tp
+        for dst, batches in pipe.flush().items():
+            for b in batches:
+                jax.block_until_ready(b.obs)
+                delivered += b.rewards.size
+    return time.perf_counter() - t0, dt_push, delivered
+
+
+def run(benches=("Anymal", "FrankaCabinet"), agents=4, rounds=12):
     for bench in benches:
         spec = make_env(bench).spec
         exps = [[_make_exp(spec, version=r * agents + a)
                  for a in range(agents)] for r in range(rounds)]
+        jax.block_until_ready(exps)   # don't charge RNG to the first variant
 
-        mcc = MultiChannelPipeline(list(range(agents)), [100, 101])
-        t0 = time.perf_counter()
-        delivered = 0
-        for r in range(rounds):
+        factories = {
+            "mcc": lambda: MultiChannelPipeline(list(range(agents)),
+                                                [100, 101]),
+            "mcc_host": lambda: HostStagedPipeline(list(range(agents)),
+                                                   [100, 101]),
+        }
+        results = {}
+        variants = {}
+        for name, make in factories.items():
+            # warm-up round on a twin pipeline (same agent count/shapes)
+            # so pack-step compilation stays outside the timed region
+            warm = make()
             for a in range(agents):
-                mcc.push(a, exps[r][a])
-            for dst, batches in mcc.flush().items():
-                for b in batches:
-                    jax.block_until_ready(b.obs)
-                    delivered += b.rewards.size
-        dt_mcc = time.perf_counter() - t0
+                warm.push(a, exps[0][a])
+            for _, bs in warm.flush().items():
+                jax.block_until_ready([b.obs for b in bs])
+            pipe = variants[name] = make()
+            dt, dt_push, delivered = _drive_mcc(pipe, exps, agents, rounds)
+            results[name] = (dt, delivered)
+            emit(f"{name}_{bench}", dt * 1e6 / rounds,
+                 f"PPS={delivered / max(dt_push, 1e-9):.0f}"
+                 f"_TTOP={delivered / dt:.0f}"
+                 f"_transfers={pipe.stats.num_transfers}"
+                 f"_B/transfer={pipe.stats.bytes_per_transfer:.0f}")
 
         ucc = UniChannelPipeline([100, 101])
         t0 = time.perf_counter()
@@ -60,15 +97,19 @@ def run(benches=("Anymal", "FrankaCabinet"), agents=4, rounds=6):
                 jax.block_until_ready(parts)
                 delivered_u += exp.rewards.size
         dt_ucc = time.perf_counter() - t0
-
-        pps_m = delivered / dt_mcc
-        pps_u = delivered_u / dt_ucc
-        emit(f"mcc_{bench}", dt_mcc * 1e6 / rounds,
-             f"TTOP={pps_m:.0f}_transfers={mcc.stats.num_transfers}"
-             f"_B/transfer={mcc.stats.bytes_per_transfer:.0f}")
         emit(f"ucc_{bench}", dt_ucc * 1e6 / rounds,
-             f"TTOP={pps_u:.0f}_transfers={ucc.stats.num_transfers}"
+             f"TTOP={delivered_u / dt_ucc:.0f}"
+             f"_transfers={ucc.stats.num_transfers}"
              f"_B/transfer={ucc.stats.bytes_per_transfer:.0f}")
+
+        dt_m, deliv_m = results["mcc"]
+        dt_h, deliv_h = results["mcc_host"]
+        mcc, host = variants["mcc"], variants["mcc_host"]
         emit(f"mcc_over_ucc_{bench}", 0.0,
-             f"ttop_ratio={pps_m / pps_u:.2f}x_granularity_ratio="
-             f"{mcc.stats.bytes_per_transfer / ucc.stats.bytes_per_transfer:.1f}x")
+             f"ttop_ratio={(deliv_m / dt_m) / (delivered_u / dt_ucc):.2f}x"
+             f"_granularity_ratio={mcc.stats.bytes_per_transfer / ucc.stats.bytes_per_transfer:.1f}x")
+        emit(f"mcc_ring_over_host_{bench}", 0.0,
+             f"walltime_ratio={(dt_h / deliv_h) / (dt_m / deliv_m):.2f}x"
+             f"_us_per_sample_ring={dt_m * 1e6 / deliv_m:.2f}"
+             f"_us_per_sample_host={dt_h * 1e6 / deliv_h:.2f}"
+             f"_granularity_ratio={mcc.stats.bytes_per_transfer / host.stats.bytes_per_transfer:.2f}x")

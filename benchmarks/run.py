@@ -11,8 +11,31 @@
 #   bench_reward         — Fig 9     reward accumulation over time
 #   bench_kernels        — Pallas kernels (interpret-mode correctness cost)
 #   roofline             — §Roofline terms from the dry-run artifacts
+#
+# ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels,
+# interpret mode on CPU) and writes BENCH_mcc.json / BENCH_kernels.json so
+# future PRs have before/after numbers to diff against.
+import json
+import os
 import sys
 import traceback
+
+# allow both `python -m benchmarks.run` and `python benchmarks/run.py`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def _dump_rows(path: str, suite: str, rows) -> None:
+    payload = {"suite": suite,
+               "rows": [dict(zip(("name", "us_per_call", "derived"),
+                                 r.split(",", 2))) for r in rows]}
+    for r in payload["rows"]:
+        r["us_per_call"] = float(r["us_per_call"])
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -20,7 +43,7 @@ def main() -> None:
                             bench_lgr, bench_mcc, bench_num_env,
                             bench_reward, bench_selection, bench_serving,
                             bench_sync_training, roofline)
-    from benchmarks.common import emit
+    from benchmarks.common import ROWS, emit
 
     print("name,us_per_call,derived")
     suites = [
@@ -36,17 +59,28 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]
-    only = sys.argv[1].split(",") if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:] if a != "--quick"]
+    quick = "--quick" in sys.argv[1:]
+    only = args[0].split(",") if args else None
+    if quick and only is None:
+        only = ["mcc", "kernels"]   # an explicit selection wins; --quick
+                                    # then only adds the JSON artifacts
     failed = []
     for name, fn in suites:
         if only and name not in only:
             continue
+        start = len(ROWS)
+        ok = True
         try:
             fn()
         except Exception as e:
+            ok = False
             failed.append(name)
             emit(f"{name}_SUITE_FAILED", 0.0, repr(e)[:120])
             traceback.print_exc(file=sys.stderr)
+        if quick and ok:
+            # never clobber the last good baseline with a partial run
+            _dump_rows(f"BENCH_{name}.json", name, ROWS[start:])
     if failed:
         print(f"# FAILED SUITES: {failed}", file=sys.stderr)
         raise SystemExit(1)

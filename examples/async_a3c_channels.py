@@ -3,20 +3,19 @@ pipeline (paper §4.2 + Fig 6b): serving GMIs on one device group collect
 experience, the dispenser→compressor→migrator→batcher pipeline ships it,
 trainer GMIs update the policy, and actors run on a stale snapshot.
 
+The experience flow is device-resident end to end: pushes pack in place
+into per-group ring buffers (Pallas ``pack_channels`` on TPU, jitted
+donated XLA elsewhere) and a flush is a pointer-bump slice per channel.
+
     PYTHONPATH=src python examples/async_a3c_channels.py
 """
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.channels import MultiChannelPipeline
 from repro.core.placement import plan_async
 from repro.envs import make_env
-from repro.models.policy import init_policy
-from repro.optim import adam_init
-from repro.rl.a3c import actor_collect, staleness, trainer_update
+from repro.launch.steps import make_async_runner
 
 
 def main():
@@ -24,47 +23,18 @@ def main():
     layout = plan_async(num_gpus=2, serving_gpus=1, gmis_per_gpu=2,
                         devices=list(range(4)), devices_per_gpu=2)
     print(layout.manager.summary())
-    pipe = MultiChannelPipeline(layout.serving_gmis, layout.trainer_gmis,
-                                gmi_gpu={g.gmi_id: g.gpu_id for g in
-                                         layout.manager.gmis.values()})
+    runner = make_async_runner(env, layout, num_envs=64, num_steps=16)
 
-    params = init_policy(jax.random.key(0), env.spec.policy_dims)
-    opt = adam_init(params)
-    actors = {}
-    for a in layout.serving_gmis:
-        es, obs = env.reset(jax.random.PRNGKey(a), num_envs=64)
-        actors[a] = [es, obs, jax.random.PRNGKey(100 + a)]
-
-    version = jnp.int32(0)
-    actor_params = params
     t0 = time.time()
-    preds = trained = 0
     for rnd in range(30):
-        # serving phase: all agent GMIs collect with the (stale) snapshot
-        for a in layout.serving_gmis:
-            es, obs, k = actors[a]
-            exp, es, obs, k = actor_collect(actor_params, version, env, es,
-                                            obs, k, num_steps=16)
-            actors[a] = [es, obs, k]
-            preds += 16 * 64
-            pipe.push(a, exp)
-        # channel pipeline: dispense -> compress -> migrate -> batch
-        losses, stale = [], []
-        for dst, batches in pipe.flush().items():
-            for exp in batches:
-                stale.append(int(staleness(version, exp)))
-                params, opt, loss = trainer_update(params, opt, exp)
-                losses.append(float(loss))
-                trained += exp.rewards.size
-                version = version + 1
-        # async model push: actors receive the update AFTER acting
-        actor_params = params
+        # serve -> ring-pack -> pointer-bump flush -> migrate -> train
+        losses, stale = runner.round()
         if rnd % 5 == 0:
             dt = time.time() - t0
             print(f"round {rnd:3d} loss={np.mean(losses):8.4f} "
-                  f"staleness={max(stale)} PPS={preds/dt:,.0f} "
-                  f"TTOP={trained/dt:,.0f}")
-    s = pipe.stats
+                  f"staleness={max(stale)} PPS={runner.predictions/dt:,.0f} "
+                  f"TTOP={runner.trained_samples/dt:,.0f}")
+    s = runner.pipe.stats
     print(f"\nchannel pipeline: {s.num_transfers} transfers, "
           f"{s.bytes_per_transfer:,.0f} B/transfer "
           f"({s.total_bytes/2**20:.1f} MiB total)")

@@ -1,35 +1,70 @@
-"""Channel-based experience sharing — MCC (paper §4.2).
+"""Channel-based experience sharing — MCC (paper §4.2), device-resident.
 
 Four services connect agent instances to trainer instances in async DRL:
 
 * Dispenser (per agent)  — categorizes experience into per-field channels
   (state / action / reward / done / bootstrap) at collection granularity.
-* Compressor (system)    — concatenates per-channel payloads across agents
-  to raise transfer granularity (bandwidth-friendly large moves).
+* Compressor (system)    — raises transfer granularity by batching channel
+  payloads across agents into large contiguous moves.
 * Migrator (system)      — routes channel payloads to trainers: direct
-  forward when agent and trainer share a device group; gather-then-least-
-  loaded distribution otherwise.
+  forward when agent and trainer share a device group; least-loaded
+  distribution otherwise.
 * Batcher (per trainer)  — slices (small-batch, high update frequency) or
   stacks (large-batch, noise reduction) into training batches.
 
-The uni-channel (UCC) baseline ships whole experience tuples one by one —
-the comparison of Table 8.  Both paths count transfers and bytes so the
-benchmark can report transfer efficiency.
+Ring-buffer design
+------------------
+The seed implementation staged every push through host-side Python lists
+and re-materialized each channel with ``jnp.asarray`` + ``jnp.concatenate``
+on every flush — O(agents x channels) host round-trips, exactly the
+fine-grained-transfer pathology the paper (and arXiv:2012.04210) blames
+for DRL throughput collapse.  The pipeline is now device-resident end to
+end:
+
+* Each agent *group* (agents sharing a GPU per ``gmi_gpu``; all agents
+  when no placement is given) owns a :class:`ChannelRing` — preallocated
+  per-channel device buffers with capacity ``slots x T x N`` samples
+  (``slots`` = agents in the group), laid out so push ``s`` occupies the
+  slot-aligned column block ``[s*N, (s+1)*N)``.
+* ``push`` writes the agent's whole (T, N, ...) block in place via the
+  Pallas ``pack_channels`` kernel (one launch packs all six channels; ring
+  buffers are donated/aliased).  Off-TPU the identical program lowers
+  through a jitted, donated XLA ``dynamic_update_slice`` — still one
+  dispatch per push, still in place.
+* ``flush`` is a pointer bump: a full ring hands its buffers to the
+  consumer zero-copy and restarts on fresh storage; a partial ring hands
+  out one contiguous device slice per channel (two on wraparound).  No
+  host staging anywhere.
+* The Migrator routes **per agent group** (the fix for the seed behavior
+  of shipping every flush to a single trainer): same-GPU groups forward
+  directly to their co-located trainer, the rest spread least-loaded, so
+  ``trainer_gmis`` balance within one flush instead of idling in turns.
+
+``TransferStats`` counts one transfer per channel per routed group —
+physically separate moves are counted separately.  On a single-group
+layout (no placement map; the Table-8 benchmark configuration) this
+degenerates to exactly the seed accounting — one transfer per channel
+per flush at full cross-agent size — so comparisons against the UCC
+baseline (``UniChannelPipeline``, untouched, still the loser) remain
+apples-to-apples; multi-GPU layouts report the real per-trainer
+granularity instead.  The seed host-staging path survives as
+:class:`HostStagedPipeline` for before/after benchmarking.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+from repro.kernels.channel_pack import (CHANNELS, alloc_rings,
+                                        pack_channels_fresh,
+                                        pack_channels_xla)
 from repro.rl.a3c import Experience
-
-CHANNELS = ("obs", "actions", "rewards", "dones", "bootstrap",
-            "actor_version")
 
 
 @dataclass
@@ -47,12 +82,108 @@ class TransferStats:
 
     @property
     def bytes_per_transfer(self) -> float:
+        # zero transfers -> 0.0, never a ZeroDivisionError
         return self.total_bytes / max(self.num_transfers, 1)
+
+
+def _payloads(exp: Experience) -> Dict[str, jax.Array]:
+    return {c: getattr(exp, c) for c in CHANNELS}
+
+
+# ------------------------------------------------------------- ring buffer -
+class ChannelRing:
+    """Preallocated per-channel device ring, one slot per push.
+
+    ``slots`` pushes of fixed (T, N, ...) shape fit before the ring wraps
+    and overwrites the oldest slot.  ``snapshot`` returns the valid slots
+    oldest-first as one contiguous slice per channel (two + a concat on
+    the rare wrapped read) and logically empties the ring; a full
+    unwrapped ring is handed out zero-copy and the next push restarts on
+    fresh storage (a single fused alloc+write dispatch).
+    """
+
+    def __init__(self, slots: int, use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        assert slots >= 1
+        self.slots = int(slots)
+        self.use_pallas = (jax.default_backend() == "tpu") \
+            if use_pallas is None else use_pallas
+        self.interpret = interpret
+        self.bufs: Optional[Dict[str, jax.Array]] = None
+        self.head = 0          # next slot to write
+        self.count = 0         # valid slots (<= slots)
+        self.shape: Optional[Tuple[int, int]] = None   # (T, N)
+        self._sig = None       # full per-push payload shapes
+
+    def append(self, exp: Experience) -> None:
+        pay = _payloads(exp)
+        sig = tuple(tuple(pay[c].shape) for c in CHANNELS)
+        if self._sig is None:
+            self._sig = sig
+            self.shape = pay["rewards"].shape
+        elif self._sig != sig:
+            raise ValueError(
+                f"ring expects payload shapes {self._sig}, got {sig}")
+        if self.bufs is None:
+            assert self.head == 0
+            if self.use_pallas:
+                self.bufs = ops.pack_channels(
+                    alloc_rings(pay, self.slots), pay, jnp.int32(0),
+                    interpret=self.interpret)
+            else:
+                self.bufs = pack_channels_fresh(pay, slots=self.slots)
+        elif self.use_pallas:
+            self.bufs = ops.pack_channels(self.bufs, pay,
+                                          jnp.int32(self.head),
+                                          interpret=self.interpret)
+        else:
+            self.bufs = pack_channels_xla(self.bufs, pay,
+                                          jnp.int32(self.head))
+        self.head = (self.head + 1) % self.slots
+        self.count = min(self.count + 1, self.slots)
+
+    def snapshot(self) -> Dict[str, jax.Array]:
+        """Valid slots oldest-first as channel arrays; empties the ring."""
+        assert self.count > 0 and self.bufs is not None
+        S, (_, N) = self.slots, self.shape
+        start = (self.head - self.count) % S
+        bufs, count = self.bufs, self.count
+
+        if count == S and start == 0:
+            # full unwrapped ring: hand the buffers out zero-copy; the
+            # next push re-allocates (consumer owns this storage now)
+            self.bufs = None
+            out = dict(bufs)
+        else:
+            def cols(buf, lo, hi):        # env-column range [lo, hi) slots
+                return buf[:, lo * N:hi * N]
+
+            def rows(buf, lo, hi):
+                return buf[lo:hi]
+
+            out = {}
+            end = start + count
+            for c in CHANNELS:
+                take = rows if c in ("bootstrap", "actor_version") else cols
+                if end <= S:
+                    out[c] = take(bufs[c], start, end)
+                else:                     # wrapped read: two slices
+                    out[c] = jnp.concatenate(
+                        [take(bufs[c], start, S), take(bufs[c], 0, end - S)],
+                        axis=0 if take is rows else 1)
+        self.head = 0
+        self.count = 0
+        out["bootstrap"] = out["bootstrap"].reshape(-1)
+        out["actor_version"] = out["actor_version"].reshape(-1)
+        return out
 
 
 # ---------------------------------------------------------------- services -
 class Dispenser:
-    """Per-agent: split experience into typed channels (§4.2 first svc)."""
+    """Per-agent host-staged categorization (§4.2 first svc) — retained for
+    the :class:`HostStagedPipeline` baseline.  In the device-resident
+    pipeline the dispenser role (typed per-field split) happens inside the
+    ``pack_channels`` kernel itself."""
 
     def __init__(self, agent_gmi: int):
         self.agent_gmi = agent_gmi
@@ -68,11 +199,23 @@ class Dispenser:
 
 
 class Compressor:
-    """System-wide: batch channel payloads into large transfers."""
+    """System-wide: batch channel payloads into large transfers.
+
+    ``record_flush`` accounts a device-resident flush (one transfer per
+    channel, sized across all groups); ``compress`` is the legacy
+    host-staging path used by :class:`HostStagedPipeline`."""
 
     def __init__(self, min_batch: int = 1):
         self.min_batch = min_batch
         self.stats = TransferStats()
+
+    def record_flush(self, groups: Sequence[Dict[str, jax.Array]]) -> None:
+        # one transfer per channel per GROUP: groups route to different
+        # trainers, so they are physically separate moves (a single-group
+        # flush degenerates to the seed accounting: one per channel)
+        for g in groups:
+            for c in CHANNELS:
+                self.stats.record(g[c])
 
     def compress(self, per_agent: Sequence[Dict[str, List]]) \
             -> Dict[str, jax.Array]:
@@ -125,18 +268,21 @@ class Batcher:
         self.batch_envs = batch_envs
 
     def prepare(self, channels: Dict[str, jax.Array]) -> List[Experience]:
+        # a batch always carries ONE scalar version — the OLDEST merged
+        # payload's, so downstream staleness is an upper bound for every
+        # sample in the batch — whatever rank the channel arrived with
+        # (0-d single push, (k,) merged pushes)
+        version = jnp.min(jnp.atleast_1d(channels["actor_version"]))
         exp = Experience(
             obs=channels["obs"], actions=channels["actions"],
             rewards=channels["rewards"], dones=channels["dones"],
-            bootstrap=channels["bootstrap"],
-            actor_version=jnp.max(channels["actor_version"])
-            if channels["actor_version"].ndim else channels["actor_version"])
+            bootstrap=channels["bootstrap"], actor_version=version)
         if self.mode == "stack" or self.batch_envs is None:
             return [exp]
         N = exp.rewards.shape[1]
         b = self.batch_envs
         out = []
-        for s in range(0, N, b):
+        for s in range(0, N, b):          # ragged tail kept, never dropped
             sl = slice(s, min(s + b, N))
             out.append(Experience(
                 obs=exp.obs[:, sl], actions=exp.actions[:, sl],
@@ -148,7 +294,86 @@ class Batcher:
 
 # ---------------------------------------------------------------- pipelines -
 class MultiChannelPipeline:
-    """Dispenser -> Compressor -> Migrator -> Batcher (the paper's MCC)."""
+    """Device-resident MCC: ring-pack -> pointer-bump flush -> route ->
+    batch (the paper's Dispenser/Compressor/Migrator/Batcher flow)."""
+
+    def __init__(self, agent_gmis: Sequence[int], trainer_gmis: Sequence[int],
+                 gmi_gpu: Optional[Dict[int, int]] = None,
+                 batch_mode: str = "stack",
+                 batch_envs: Optional[int] = None,
+                 ring_slots: Optional[int] = None,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        self.agent_gmis = list(agent_gmis)
+        self.gmi_gpu = gmi_gpu or {}
+        self.compressor = Compressor()
+        self.migrator = Migrator(trainer_gmis, gmi_gpu)
+        self.batchers = {t: Batcher(batch_mode, batch_envs)
+                         for t in trainer_gmis}
+        self.ring_slots = ring_slots
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        # agents sharing a GPU share a ring (direct-forward group); agents
+        # with unknown placement share the catch-all group
+        self._group_of = {a: self.gmi_gpu.get(a, -1) for a in self.agent_gmis}
+        self._group_size: Dict[int, int] = {}
+        for g in self._group_of.values():
+            self._group_size[g] = self._group_size.get(g, 0) + 1
+        self._rings: Dict[Tuple[int, Tuple], ChannelRing] = {}
+        # ring-overflow spill: the pipeline is lossless even when agents
+        # push more often than the consumer flushes — a full ring is
+        # snapshotted (still one coarse device move per channel) before
+        # the overwriting push lands
+        self._pending: Dict[int, List[Dict[str, jax.Array]]] = {}
+
+    def _ring_for(self, agent_gmi: int, exp: Experience) -> ChannelRing:
+        group = self._group_of[agent_gmi]
+        sig = tuple(tuple(getattr(exp, c).shape)
+                    for c in ("obs", "actions", "rewards"))
+        key = (group, sig)
+        ring = self._rings.get(key)
+        if ring is None:
+            slots = self.ring_slots or self._group_size[group]
+            ring = ChannelRing(slots, use_pallas=self.use_pallas,
+                               interpret=self.interpret)
+            self._rings[key] = ring
+        return ring
+
+    def push(self, agent_gmi: int, exp: Experience):
+        ring = self._ring_for(agent_gmi, exp)
+        if ring.count == ring.slots:       # would evict an unread slot
+            group = self._group_of[agent_gmi]
+            self._pending.setdefault(group, []).append(ring.snapshot())
+        ring.append(exp)
+
+    def flush(self) -> Dict[int, List[Experience]]:
+        """Move everything agents produced to trainer batches."""
+        groups: List[Tuple[int, Dict[str, jax.Array]]] = []
+        for gkey, snaps in self._pending.items():
+            groups.extend((gkey, ch) for ch in snaps)
+        self._pending = {}
+        for (gkey, _), ring in self._rings.items():
+            if ring.count:
+                groups.append((gkey, ring.snapshot()))
+        if not groups:
+            return {}
+        self.compressor.record_flush([ch for _, ch in groups])
+        out: Dict[int, List[Experience]] = {}
+        for gkey, ch in groups:
+            dst = self.migrator.route(
+                ch, agent_gpu=None if gkey == -1 else gkey)
+            out.setdefault(dst, []).extend(self.batchers[dst].prepare(ch))
+        return out
+
+    @property
+    def stats(self) -> TransferStats:
+        return self.compressor.stats
+
+
+class HostStagedPipeline:
+    """The seed MCC: host-list staging + per-flush ``jnp.concatenate``
+    re-materialization, single destination per flush.  Kept as the
+    before/after baseline for ``bench_mcc`` — not for production use."""
 
     def __init__(self, agent_gmis: Sequence[int], trainer_gmis: Sequence[int],
                  gmi_gpu: Optional[Dict[int, int]] = None,
@@ -164,7 +389,6 @@ class MultiChannelPipeline:
         self.dispensers[agent_gmi].push(exp)
 
     def flush(self) -> Dict[int, List[Experience]]:
-        """Move everything agents produced to trainer batches."""
         per_agent = [d.drain() for d in self.dispensers.values()]
         per_agent = [d for d in per_agent if any(d[c] for c in CHANNELS)]
         if not per_agent:

@@ -27,6 +27,7 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -42,8 +43,9 @@ def hierarchical_psum(grads, intra_axis: str, inter_axis: str):
     Operates leaf-wise on flattened gradients (padded to the intra axis
     size) so arbitrary parameter shapes work.
     """
-    intra = jax.lax.axis_size(intra_axis) if hasattr(jax.lax, "axis_size") \
-        else jax.lax.psum(1, intra_axis)
+    # psum of a Python literal folds to the static axis size on every jax
+    # version this repo supports — the one call path that never probes.
+    intra = jax.lax.psum(1, intra_axis)
 
     def one(g):
         shape = g.shape
@@ -107,7 +109,7 @@ def lgr_allreduce(grads, mesh: Mesh, strategy: str,
     ntot = g_ * t_
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(inter_axis, intra_axis), grads),),
         out_specs=jax.tree.map(lambda _: P(inter_axis, intra_axis), grads))
     def run(gs):

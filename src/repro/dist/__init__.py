@@ -1,0 +1,4 @@
+from repro.dist.partition import (batch_specs, cache_specs, param_specs,
+                                  to_shardings)
+
+__all__ = ["batch_specs", "cache_specs", "param_specs", "to_shardings"]

@@ -11,8 +11,10 @@ import functools
 
 import jax
 
+from repro.kernels.channel_pack import pack_channels as _pack
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.fused_policy_mlp import fused_policy_mlp as _mlp
+from repro.kernels.gae_scan import gae_scan as _gae
 from repro.kernels.mlstm_scan import mlstm_chunkwise as _mlstm
 
 
@@ -40,3 +42,24 @@ def policy_mlp(x, weights, biases, *, block_n=256, interpret=None):
 def mlstm(q, k, v, log_i, log_f, *, chunk=128, interpret=None):
     interp = _interpret_default() if interpret is None else interpret
     return _mlstm(q, k, v, log_i, log_f, chunk=chunk, interpret=interp)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma", "lam", "eps", "interpret"))
+def gae_norm(rewards, values, dones, last_value, *, gamma=0.99, lam=0.95,
+             eps=1e-8, interpret=None):
+    """Fused GAE + global advantage normalization (see gae_scan.py).
+
+    Returns (normalized_advs, returns), both (T, N) f32."""
+    interp = _interpret_default() if interpret is None else interpret
+    return _gae(rewards, values, dones, last_value, gamma=gamma, lam=lam,
+                eps=eps, interpret=interp)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("interpret",))
+def pack_channels(bufs, payloads, slot, *, interpret=None):
+    """In-place ring-buffer pack of one experience push (all channels in
+    one kernel launch; ring buffers donated)."""
+    interp = _interpret_default() if interpret is None else interpret
+    return _pack(bufs, payloads, slot, interpret=interp)

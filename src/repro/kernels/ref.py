@@ -39,6 +39,51 @@ def policy_mlp_ref(x, weights, biases):
     return h.astype(x.dtype)
 
 
+def gae_norm_ref(rewards, values, dones, last_value, gamma: float = 0.99,
+                 lam: float = 0.95, eps: float = 1e-8):
+    """Fused-GAE oracle: reverse scan + global advantage normalization.
+
+    rewards/values/dones: (T, N); last_value: (N,).  Returns
+    (normalized_advs, returns), both (T, N) float32."""
+    r = rewards.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    d = dones.astype(jnp.float32)
+    last = last_value.astype(jnp.float32)
+
+    def step(carry, xs):
+        adv_next, v_next = carry
+        rt, vt, dt = xs
+        nonterm = 1.0 - dt
+        delta = rt + gamma * v_next * nonterm - vt
+        adv = delta + gamma * lam * nonterm * adv_next
+        return (adv, vt), adv
+
+    (_, _), advs = jax.lax.scan(step, (jnp.zeros_like(last), last),
+                                (r, v, d), reverse=True)
+    returns = advs + v
+    advs = (advs - advs.mean()) / (advs.std() + eps)
+    return advs, returns
+
+
+def pack_channels_ref(bufs, payloads, slot):
+    """Ring-pack oracle via functional .at[] updates (same layout as
+    ``channel_pack``: slot-aligned columns / rows)."""
+    T, N = payloads["rewards"].shape
+    col = slot * N
+    boot = jnp.asarray(payloads["bootstrap"]).reshape(1, N)
+    ver = jnp.asarray(payloads["actor_version"], jnp.int32).reshape(1, 1)
+    return {
+        "obs": bufs["obs"].at[:, col:col + N, :].set(payloads["obs"]),
+        "actions": bufs["actions"].at[:, col:col + N, :].set(
+            payloads["actions"]),
+        "rewards": bufs["rewards"].at[:, col:col + N].set(
+            payloads["rewards"]),
+        "dones": bufs["dones"].at[:, col:col + N].set(payloads["dones"]),
+        "bootstrap": bufs["bootstrap"].at[slot:slot + 1, :].set(boot),
+        "actor_version": bufs["actor_version"].at[slot:slot + 1, :].set(ver),
+    }
+
+
 def mlstm_chunkwise_ref(q, k, v, log_i, log_f, chunk: int = 64):
     """q/k/v: (B, H, S, dh); log_i/log_f: (B, H, S).  Chunkwise-parallel
     stabilized mLSTM, zero initial state.  Returns h: (B, H, S, dh)."""

@@ -225,3 +225,42 @@ def make_serve_step(cfg: ModelConfig, mesh, shape: InputShape,
                        to_shardings(cspecs, mesh)),
         donate_argnums=(1,))
     return fn, (params_sds, cache_sds, tok_sds["token"], tok_sds["pos"])
+
+
+# ------------------------------------------------------------- DRL steps ---
+# The DRL layer's launch entry points, mirroring the LLM builders above:
+# the launcher (not the algorithm module) decides which hot path a step
+# compiles to and how the experience pipeline is laid out over GMIs.
+
+def make_drl_train_step(env, ppo_cfg=None, grad_sync_fn=None,
+                        fused: Optional[bool] = None):
+    """Jitted sync-PPO iteration with the fused Pallas hot path on by
+    default: the gae_scan kernel (GAE + advantage normalization in one
+    VMEM pass) and single-gather minibatch shuffling.  An explicit
+    ``ppo_cfg`` keeps its own ``use_fused_kernels`` unless ``fused``
+    explicitly overrides it."""
+    from repro.rl.ppo import PPOConfig, make_train_step
+    cfg = ppo_cfg if ppo_cfg is not None \
+        else PPOConfig(use_fused_kernels=True)
+    if fused is not None and fused != cfg.use_fused_kernels:
+        cfg = cfg._replace(use_fused_kernels=fused)
+    return make_train_step(env, cfg, grad_sync_fn), cfg
+
+
+def make_experience_pipeline(layout, batch_mode: str = "stack",
+                             batch_envs: Optional[int] = None):
+    """Device-resident MCC pipeline wired from an async placement layout:
+    ring slots sized to the layout's serving GMIs and the per-GMI GPU map
+    passed through so the Migrator can direct-forward same-GPU groups."""
+    from repro.core.channels import MultiChannelPipeline
+    gmi_gpu = {g.gmi_id: g.gpu_id for g in layout.manager.gmis.values()}
+    return MultiChannelPipeline(layout.serving_gmis, layout.trainer_gmis,
+                                gmi_gpu=gmi_gpu, batch_mode=batch_mode,
+                                batch_envs=batch_envs)
+
+
+def make_async_runner(env, layout, **kwargs):
+    """Async A3C driver over ``make_experience_pipeline(layout)``."""
+    from repro.rl.a3c import AsyncRunner
+    return AsyncRunner(env, layout.serving_gmis, layout.trainer_gmis,
+                       pipeline=make_experience_pipeline(layout), **kwargs)

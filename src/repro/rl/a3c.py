@@ -78,3 +78,63 @@ def trainer_update(params, opt_state, exp: Experience, *, lr=3e-4,
 def staleness(current_version, exp: Experience):
     """Paper §5.1: async training trades throughput for parameter staleness."""
     return current_version - exp.actor_version
+
+
+class AsyncRunner:
+    """Round-interleaved async A3C over the device-resident MCC pipeline.
+
+    Owns the whole §4.2 flow for one async layout: serving GMIs collect
+    with a (possibly stale) parameter snapshot, pushes land in the
+    per-group device ring buffers, ``flush`` pointer-bumps the round's
+    experience to the trainers the Migrator picks, and every consumed
+    batch advances the parameter version.  The per-GMI GPU map from the
+    placement layout is what lets the Migrator direct-forward same-GPU
+    groups instead of funneling every flush to one trainer.
+    """
+
+    def __init__(self, env, serving_gmis, trainer_gmis, *, gmi_gpu=None,
+                 num_envs: int = 64, num_steps: int = 16, seed: int = 0,
+                 lr: float = 3e-4, pipeline=None):
+        from repro.core.channels import MultiChannelPipeline
+        from repro.models.policy import init_policy
+        from repro.optim import adam_init
+
+        self.env = env
+        self.num_steps = num_steps
+        self.serving_gmis = list(serving_gmis)
+        self.lr = lr
+        self.pipe = pipeline or MultiChannelPipeline(
+            serving_gmis, trainer_gmis, gmi_gpu=gmi_gpu)
+        self.params = init_policy(jax.random.key(seed), env.spec.policy_dims)
+        self.opt_state = adam_init(self.params)
+        self.actor_params = self.params        # stale snapshot
+        self.version = jnp.int32(0)
+        self.actors = {}
+        for a in self.serving_gmis:
+            es, obs = env.reset(jax.random.PRNGKey(seed + a),
+                                num_envs=num_envs)
+            self.actors[a] = [es, obs, jax.random.PRNGKey(seed + 100 + a)]
+        self.predictions = 0
+        self.trained_samples = 0
+
+    def round(self):
+        """One serve -> ship -> train round; returns (losses, staleness)."""
+        for a in self.serving_gmis:
+            es, obs, k = self.actors[a]
+            exp, es, obs, k = actor_collect(
+                self.actor_params, self.version, self.env, es, obs, k,
+                self.num_steps)
+            self.actors[a] = [es, obs, k]
+            self.predictions += int(exp.rewards.size)
+            self.pipe.push(a, exp)
+        losses, stale = [], []
+        for _, batches in self.pipe.flush().items():
+            for exp in batches:
+                stale.append(int(staleness(self.version, exp)))
+                self.params, self.opt_state, loss = trainer_update(
+                    self.params, self.opt_state, exp, lr=self.lr)
+                losses.append(float(loss))
+                self.trained_samples += int(exp.rewards.size)
+                self.version = self.version + 1
+        self.actor_params = self.params        # model push AFTER acting
+        return losses, stale

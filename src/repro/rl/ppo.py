@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.models.policy import entropy, log_prob, policy_apply
 from repro.optim import AdamState, adam_init, adam_update
-from repro.rl.rollout import Trajectory, collect, gae
+from repro.rl.rollout import Trajectory, collect, gae, gae_fused
 
 
 class PPOConfig(NamedTuple):
@@ -31,15 +31,20 @@ class PPOConfig(NamedTuple):
     ent_coef: float = 0.01
     lr: float = 3e-4
     max_grad_norm: float = 1.0
+    # fused hot path: Pallas GAE+normalization kernel and single-gather
+    # minibatch shuffling (advantages arrive batch-normalized, so the loss
+    # skips its per-minibatch renormalization)
+    use_fused_kernels: bool = False
 
 
 def ppo_loss(params, batch, clip_eps, vf_coef, ent_coef,
-             policy_fn=policy_apply):
+             policy_fn=policy_apply, normalize_adv: bool = True):
     obs, actions, old_lp, advs, returns = batch
     mu, log_std, value = policy_fn(params, obs)
     lp = log_prob(mu, log_std, actions)
     ratio = jnp.exp(lp - old_lp)
-    advs_n = (advs - advs.mean()) / (advs.std() + 1e-8)
+    advs_n = (advs - advs.mean()) / (advs.std() + 1e-8) \
+        if normalize_adv else advs
     pg = -jnp.minimum(ratio * advs_n,
                       jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * advs_n)
     vf = 0.5 * jnp.square(value - returns)
@@ -55,29 +60,41 @@ def train_iteration(params, opt_state: AdamState, env, env_state, obs, key,
     key, metrics)."""
     traj, env_state, obs, last_value, key = collect(
         params, env, env_state, obs, key, cfg.num_steps, policy_fn)
-    advs, returns = gae(traj.rewards, traj.values, traj.dones, last_value,
-                        cfg.gamma, cfg.lam)
+    if cfg.use_fused_kernels:
+        # fused Pallas kernel: advantages arrive normalized over the batch
+        advs, returns = gae_fused(traj.rewards, traj.values, traj.dones,
+                                  last_value, cfg.gamma, cfg.lam)
+    else:
+        advs, returns = gae(traj.rewards, traj.values, traj.dones,
+                            last_value, cfg.gamma, cfg.lam)
 
     T, N = traj.rewards.shape
     flat = jax.tree.map(lambda x: x.reshape((T * N,) + x.shape[2:]),
                         (traj.obs, traj.actions, traj.log_probs, advs,
                          returns))
+    mb_size = (T * N) // cfg.num_minibatches
 
     def epoch(carry, _):
         params, opt_state, key = carry
         key, pkey = jax.random.split(key)
         perm = jax.random.permutation(pkey, T * N)
-        shuf = jax.tree.map(lambda x: x[perm], flat)
-        mb = jax.tree.map(
-            lambda x: x.reshape((cfg.num_minibatches,
-                                 (T * N) // cfg.num_minibatches)
-                                + x.shape[1:]), shuf)
+        if cfg.use_fused_kernels:
+            # single gather straight into minibatch layout — no
+            # shuffle-then-reshape copy chain through XLA
+            idx = perm.reshape((cfg.num_minibatches, mb_size))
+            mb = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), flat)
+        else:
+            shuf = jax.tree.map(lambda x: x[perm], flat)
+            mb = jax.tree.map(
+                lambda x: x.reshape((cfg.num_minibatches, mb_size)
+                                    + x.shape[1:]), shuf)
 
         def minibatch(carry, batch):
             params, opt_state = carry
             (loss, aux), grads = jax.value_and_grad(
                 ppo_loss, has_aux=True)(params, batch, cfg.clip_eps,
-                                        cfg.vf_coef, cfg.ent_coef, policy_fn)
+                                        cfg.vf_coef, cfg.ent_coef, policy_fn,
+                                        not cfg.use_fused_kernels)
             if grad_sync_fn is not None:
                 grads = grad_sync_fn(grads)
             params, opt_state = adam_update(

@@ -65,3 +65,17 @@ def gae(rewards, values, dones, last_value, gamma: float = 0.99,
         (rewards, values, dones), reverse=True)
     returns = advs + values
     return advs, returns
+
+
+def gae_fused(rewards, values, dones, last_value, gamma: float = 0.99,
+              lam: float = 0.95, eps: float = 1e-8):
+    """Fused Pallas GAE: one kernel computes the reverse scan, the returns,
+    AND the global advantage normalization without leaving VMEM (see
+    ``repro.kernels.gae_scan``).  Returns (normalized_advs, returns).
+
+    Unlike :func:`gae`, the advantages come back already normalized over
+    the whole (T, N) batch — callers must not re-normalize per minibatch.
+    """
+    from repro.kernels import ops
+    return ops.gae_norm(rewards, values, dones, last_value, gamma=gamma,
+                        lam=lam, eps=eps)

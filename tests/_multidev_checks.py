@@ -33,6 +33,23 @@ def check_lgr_equivalence():
     print("lgr equivalence ok")
 
 
+def check_har_equals_mrr_2x2():
+    """Regression (ISSUE 1): HAR and MRR must agree numerically on a 2x2
+    mesh — the smallest layout where the hierarchical schedule's
+    scatter/psum/gather path differs from the flat ring."""
+    devs = np.array(jax.devices()[:4]).reshape(2, 2)
+    mesh = Mesh(devs, ("gpu", "inst"))
+    key = jax.random.key(7)
+    grads = {"w": jax.random.normal(key, (2, 2, 17, 5)),   # pad path (17)
+             "b": jax.random.normal(key, (2, 2, 8))}       # exact path
+    har = lgr_allreduce(grads, mesh, "har")
+    mrr = lgr_allreduce(grads, mesh, "mrr")
+    for k in grads:
+        np.testing.assert_allclose(np.asarray(har[k]), np.asarray(mrr[k]),
+                                   rtol=1e-6, atol=1e-6)
+    print("har == mrr on 2x2 ok")
+
+
 def check_mpr_host():
     key = jax.random.key(1)
     gs = [{"w": jax.random.normal(jax.random.fold_in(key, i), (5, 3))}
@@ -86,6 +103,7 @@ def check_gmi_instance_mesh():
 
 if __name__ == "__main__":
     check_lgr_equivalence()
+    check_har_equals_mrr_2x2()
     check_mpr_host()
     check_sharded_train_step()
     check_gmi_instance_mesh()

@@ -2,8 +2,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.channels import (CHANNELS, Batcher, Compressor, Dispenser,
-                                 Migrator, MultiChannelPipeline,
+from repro.core.channels import (CHANNELS, Batcher, ChannelRing, Compressor,
+                                 Dispenser, HostStagedPipeline, Migrator,
+                                 MultiChannelPipeline, TransferStats,
                                  UniChannelPipeline)
 from repro.rl.a3c import Experience
 
@@ -77,3 +78,141 @@ def test_batcher_slicing():
     assert [p.rewards.shape[1] for p in parts] == [4, 4, 2]
     total = np.concatenate([np.asarray(p.rewards) for p in parts], axis=1)
     np.testing.assert_array_equal(total, np.asarray(ch["rewards"]))
+
+
+def test_batcher_actor_version_always_scalar():
+    # merged pushes reduce to the OLDEST version (conservative staleness)
+    for v, want in ((jnp.int32(5), 5), (jnp.array([3, 5, 4], jnp.int32), 3)):
+        ch = {c: getattr(_exp(), c) for c in CHANNELS}
+        ch["actor_version"] = v
+        for part in Batcher(mode="slice", batch_envs=4).prepare(ch):
+            assert part.actor_version.ndim == 0
+            assert int(part.actor_version) == want
+        (whole,) = Batcher(mode="stack").prepare(ch)
+        assert whole.actor_version.ndim == 0
+        assert int(whole.actor_version) == want
+
+
+# ------------------------------------------------------- ring-buffer MCC ---
+def test_empty_flush_after_flush_is_noop():
+    pipe = MultiChannelPipeline([0, 1], [9])
+    pipe.push(0, _exp())
+    pipe.push(1, _exp(base=10.0))
+    assert pipe.flush()
+    transfers = pipe.stats.num_transfers
+    assert pipe.flush() == {}                  # drained: nothing to move
+    assert pipe.stats.num_transfers == transfers
+
+
+def test_bytes_per_transfer_zero_transfers():
+    assert TransferStats().bytes_per_transfer == 0.0
+    assert MultiChannelPipeline([0], [1]).stats.bytes_per_transfer == 0.0
+
+
+def test_pipeline_uneven_batch_envs_slicing():
+    pipe = MultiChannelPipeline([0, 1], [7], batch_mode="slice",
+                                batch_envs=5)
+    e1, e2 = _exp(N=6), _exp(N=6, base=50.0)
+    pipe.push(0, e1)
+    pipe.push(1, e2)
+    ((dst, parts),) = pipe.flush().items()
+    assert [p.rewards.shape[1] for p in parts] == [5, 5, 2]  # ragged tail
+    merged = np.concatenate([np.asarray(p.rewards) for p in parts], axis=1)
+    want = np.concatenate([np.asarray(e1.rewards), np.asarray(e2.rewards)],
+                          axis=1)
+    np.testing.assert_array_equal(merged, want)
+
+
+def test_ring_wraparound_keeps_newest_in_order():
+    ring = ChannelRing(slots=2)
+    exps = [_exp(base=100.0 * i, version=i) for i in range(3)]
+    for e in exps:
+        ring.append(e)                 # 3 pushes into 2 slots: e0 evicted
+    ch = ring.snapshot()
+    assert ch["rewards"].shape == (4, 12)
+    np.testing.assert_array_equal(np.asarray(ch["rewards"][:, :6]),
+                                  np.asarray(exps[1].rewards))
+    np.testing.assert_array_equal(np.asarray(ch["rewards"][:, 6:]),
+                                  np.asarray(exps[2].rewards))
+    np.testing.assert_array_equal(np.asarray(ch["actor_version"]), [1, 2])
+    assert ring.count == 0             # snapshot drains
+
+
+def test_ring_partial_flush_then_refill():
+    ring = ChannelRing(slots=4)
+    ring.append(_exp(base=1.0))
+    ch = ring.snapshot()
+    assert ch["rewards"].shape == (4, 6)
+    np.testing.assert_array_equal(np.asarray(ch["obs"]),
+                                  np.asarray(_exp(base=1.0).obs))
+    ring.append(_exp(base=2.0))        # ring reusable after partial flush
+    ch2 = ring.snapshot()
+    np.testing.assert_array_equal(np.asarray(ch2["obs"]),
+                                  np.asarray(_exp(base=2.0).obs))
+
+
+def test_ring_pallas_path_matches_xla_path():
+    a = ChannelRing(slots=3, use_pallas=True, interpret=True)
+    b = ChannelRing(slots=3, use_pallas=False)
+    for i in range(5):                 # crosses the wrap boundary
+        e = _exp(base=float(i), version=i)
+        a.append(e)
+        b.append(e)
+    ca, cb = a.snapshot(), b.snapshot()
+    for c in CHANNELS:
+        np.testing.assert_array_equal(np.asarray(ca[c]), np.asarray(cb[c]))
+
+
+def test_flush_routes_per_agent_group_balancing_trainers():
+    """Agents on two GPUs must land on BOTH co-located trainers in ONE
+    flush (seed behavior funneled every flush to a single trainer)."""
+    gmi_gpu = {0: 0, 1: 0, 2: 1, 3: 1, 100: 0, 101: 1}
+    pipe = MultiChannelPipeline([0, 1, 2, 3], [100, 101], gmi_gpu=gmi_gpu)
+    for a, base in zip(range(4), (0.0, 10.0, 20.0, 30.0)):
+        pipe.push(a, _exp(base=base))
+    out = pipe.flush()
+    assert set(out) == {100, 101}          # both trainers fed per flush
+    assert pipe.migrator.load[100] == pipe.migrator.load[101] == 12
+    # direct forward: GPU-0 agents (bases 0, 10) went to the GPU-0 trainer
+    got = np.asarray(out[100][0].obs)
+    np.testing.assert_array_equal(got[:, :6], np.asarray(_exp(base=0.0).obs))
+    np.testing.assert_array_equal(got[:, 6:],
+                                  np.asarray(_exp(base=10.0).obs))
+
+
+def test_pipeline_lossless_when_pushes_outrun_flushes():
+    """A full ring spills (coarse-grained) instead of evicting: the
+    pipeline delivers every push even when an agent pushes more often
+    than the consumer flushes — seed-equivalent losslessness."""
+    pipe = MultiChannelPipeline([0], [9])     # group size 1 -> 1 ring slot
+    e1, e2, e3 = (_exp(base=b, version=i)
+                  for i, b in enumerate((0.0, 10.0, 20.0)))
+    pipe.push(0, e1)
+    pipe.push(0, e2)
+    pipe.push(0, e3)
+    ((dst, batches),) = pipe.flush().items()
+    got = np.concatenate([np.asarray(b.rewards) for b in batches], axis=1)
+    want = np.concatenate([np.asarray(e.rewards) for e in (e1, e2, e3)],
+                          axis=1)
+    np.testing.assert_array_equal(got, want)
+    assert pipe.flush() == {}                 # fully drained
+
+
+def test_ring_mcc_matches_host_staged_payloads():
+    """Device-resident and host-staged MCC must deliver identical bytes
+    and identical TransferStats."""
+    ring = MultiChannelPipeline([0, 1], [5])
+    host = HostStagedPipeline([0, 1], [5])
+    for r in range(3):
+        for a in range(2):
+            e = _exp(base=r * 10.0 + a, version=r * 2 + a)
+            ring.push(a, e)
+            host.push(a, e)
+        (rb,), (hb,) = ring.flush().values(), host.flush().values()
+        for field in ("obs", "actions", "rewards", "dones", "bootstrap"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(rb[0], field)),
+                np.asarray(getattr(hb[0], field)))
+        assert int(rb[0].actor_version) == int(hb[0].actor_version)
+    assert ring.stats.num_transfers == host.stats.num_transfers
+    assert ring.stats.total_bytes == host.stats.total_bytes

@@ -11,8 +11,15 @@ from repro.launch.steps import abstract_cache, input_specs
 from repro.configs.base import INPUT_SHAPES
 from repro.models import transformer as T
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _amesh(sizes, names):
+    try:                                  # jax >= 0.5 signature
+        return AbstractMesh(sizes, names)
+    except TypeError:                     # jax 0.4.x: tuple of (name, size)
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH = _amesh((16, 16), ("data", "model"))
+MESH3 = _amesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _check_divisibility(sds_tree, spec_tree, mesh):
