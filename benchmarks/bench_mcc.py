@@ -5,8 +5,13 @@ trainers/s).
 
 Reports before/after for the device-resident pipeline: ``mcc`` is the
 ring-buffer path (in-place pack at push time, pointer-bump flush),
-``mcc_host`` is the seed host-staging path (per-flush ``jnp.concatenate``
-re-materialization), ``ucc`` ships every tuple field-by-field.
+``mcc_overlap`` double-buffers the rings (flush = buffer swap; trainers
+consume the previous round while serving keeps packing — paper §4.1
+overlap), ``mcc_host`` is the seed host-staging path (per-flush
+``jnp.concatenate`` re-materialization), ``ucc`` ships every tuple
+field-by-field.  Every variant's delivered-sample count is checked
+against the pushed count, so ``lost``/``dup`` in the derived column are
+measured, not asserted.
 """
 from __future__ import annotations
 
@@ -33,8 +38,23 @@ def _make_exp(spec, T=32, N=64, version=0):
         actor_version=jnp.int32(version))
 
 
-def _drive_mcc(pipe, exps, agents, rounds):
-    """Push+flush loop; returns (dt_total, dt_push, delivered_samples)."""
+def _make_consume(key, obs_dim):
+    """A jitted pseudo trainer step (touches every delivered byte through
+    two matmul+tanh layers) — the consumer work the §4.1 overlap is
+    supposed to hide serving behind.  Identical for every variant."""
+    w = jax.random.normal(key, (obs_dim, obs_dim)) / obs_dim ** 0.5
+
+    @jax.jit
+    def consume(obs):
+        h = jnp.tanh(obs @ w)
+        return jnp.tanh(h @ w).sum()
+
+    return consume
+
+
+def _drive_mcc(pipe, exps, agents, rounds, consume):
+    """Blocking schedule: push -> flush -> train -> wait, every round.
+    Returns (dt_total, dt_push, delivered_samples)."""
     delivered = 0
     dt_push = 0.0
     t0 = time.perf_counter()
@@ -45,42 +65,103 @@ def _drive_mcc(pipe, exps, agents, rounds):
         dt_push += time.perf_counter() - tp
         for dst, batches in pipe.flush().items():
             for b in batches:
-                jax.block_until_ready(b.obs)
+                jax.block_until_ready(consume(b.obs))
                 delivered += b.rewards.size
+    for dst, batches in pipe.drain().items():
+        for b in batches:
+            jax.block_until_ready(consume(b.obs))
+            delivered += b.rewards.size
     return time.perf_counter() - t0, dt_push, delivered
 
 
-def run(benches=("Anymal", "FrankaCabinet"), agents=4, rounds=12):
+def _drive_overlap(pipe, exps, agents, rounds, consume):
+    """Overlap schedule the double-buffered flush enables: each round
+    swaps out the PREVIOUS round's back generation, dispatches the
+    trainer consume on it, and keeps serving — no per-round barrier.
+    Serving stages into the front generation while pack+consume of the
+    back one stream behind; the single sync at the end of the horizon
+    pays for every dispatched byte, so the timing is honest.  Same
+    pushes, same flush count, same per-batch consume as the blocking
+    schedule — the serve and train stages just overlap instead of
+    serializing."""
+    delivered = 0
+    dt_push = 0.0
+    pend = []
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        for dst, batches in pipe.flush().items():   # round r-1's swap
+            pend.extend((consume(b.obs), b.rewards.size) for b in batches)
+        tp = time.perf_counter()
+        for a in range(agents):                     # serve round r
+            pipe.push(a, exps[r][a])
+        dt_push += time.perf_counter() - tp
+    for dst, batches in pipe.drain().items():       # lossless tail
+        pend.extend((consume(b.obs), b.rewards.size) for b in batches)
+    for out, n in pend:                             # one end-of-horizon sync
+        jax.block_until_ready(out)
+        delivered += n
+    return time.perf_counter() - t0, dt_push, delivered
+
+
+def run(benches=("Anymal", "FrankaCabinet"), agents=4, rounds=48):
     for bench in benches:
         spec = make_env(bench).spec
         exps = [[_make_exp(spec, version=r * agents + a)
                  for a in range(agents)] for r in range(rounds)]
         jax.block_until_ready(exps)   # don't charge RNG to the first variant
+        expected = rounds * agents * exps[0][0].rewards.size
+        consume = _make_consume(jax.random.key(7), spec.obs_dim)
 
         factories = {
-            "mcc": lambda: MultiChannelPipeline(list(range(agents)),
-                                                [100, 101]),
-            "mcc_host": lambda: HostStagedPipeline(list(range(agents)),
-                                                   [100, 101]),
+            "mcc": (_drive_mcc,
+                    lambda: MultiChannelPipeline(list(range(agents)),
+                                                 [100, 101])),
+            "mcc_overlap": (_drive_overlap,
+                            lambda: MultiChannelPipeline(
+                                list(range(agents)), [100, 101],
+                                overlap=True)),
+            "mcc_host": (_drive_mcc,
+                         lambda: HostStagedPipeline(list(range(agents)),
+                                                    [100, 101])),
         }
-        results = {}
         variants = {}
-        for name, make in factories.items():
-            # warm-up round on a twin pipeline (same agent count/shapes)
-            # so pack-step compilation stays outside the timed region
+        best = {}
+        # warm-up round on a twin pipeline (same agent count/shapes) so
+        # pack/consume compilation stays outside the timed region
+        for name, (drive, make) in factories.items():
             warm = make()
             for a in range(agents):
                 warm.push(a, exps[0][a])
-            for _, bs in warm.flush().items():
-                jax.block_until_ready([b.obs for b in bs])
-            pipe = variants[name] = make()
-            dt, dt_push, delivered = _drive_mcc(pipe, exps, agents, rounds)
+            for _, bs in warm.drain().items():
+                jax.block_until_ready([consume(b.obs) for b in bs])
+        # interleave repetitions (all variants inside each rep) and take
+        # the per-variant best: shared-CPU wall clock is ±50% run to run
+        # and drifts on multi-second scales, so back-to-back reps of ONE
+        # variant would bake the drift into the comparison
+        reps = 5
+        for _ in range(reps):
+            for name, (drive, make) in factories.items():
+                pipe = make()
+                rep = drive(pipe, exps, agents, rounds, consume)
+                if name not in best or rep[0] < best[name][0]:
+                    best[name] = rep
+                    variants[name] = pipe
+        results = {}
+        for name in factories:
+            dt, dt_push, delivered = best[name]
             results[name] = (dt, delivered)
+            pipe = variants[name]
+            # serve_us_round: wall time the SERVING side spends per round
+            # inside push — for the blocking ring this includes donation
+            # stalls behind the trainer's consumption; overlap staging
+            # should drive it toward zero (the §4.1 claim, measured)
             emit(f"{name}_{bench}", dt * 1e6 / rounds,
-                 f"PPS={delivered / max(dt_push, 1e-9):.0f}"
-                 f"_TTOP={delivered / dt:.0f}"
+                 f"TTOP={delivered / dt:.0f}"
+                 f"_serve_us_round={dt_push * 1e6 / rounds:.0f}"
                  f"_transfers={pipe.stats.num_transfers}"
-                 f"_B/transfer={pipe.stats.bytes_per_transfer:.0f}")
+                 f"_B/transfer={pipe.stats.bytes_per_transfer:.0f}"
+                 f"_lost={max(expected - delivered, 0)}"
+                 f"_dup={max(delivered - expected, 0)}")
 
         ucc = UniChannelPipeline([100, 101])
         t0 = time.perf_counter()
@@ -95,6 +176,7 @@ def run(benches=("Anymal", "FrankaCabinet"), agents=4, rounds=12):
                          (exp.obs, exp.actions, exp.rewards, exp.dones,
                           exp.bootstrap)]
                 jax.block_until_ready(parts)
+                jax.block_until_ready(consume(exp.obs))  # same trainer work
                 delivered_u += exp.rewards.size
         dt_ucc = time.perf_counter() - t0
         emit(f"ucc_{bench}", dt_ucc * 1e6 / rounds,
@@ -104,6 +186,7 @@ def run(benches=("Anymal", "FrankaCabinet"), agents=4, rounds=12):
 
         dt_m, deliv_m = results["mcc"]
         dt_h, deliv_h = results["mcc_host"]
+        dt_o, deliv_o = results["mcc_overlap"]
         mcc, host = variants["mcc"], variants["mcc_host"]
         emit(f"mcc_over_ucc_{bench}", 0.0,
              f"ttop_ratio={(deliv_m / dt_m) / (delivered_u / dt_ucc):.2f}x"
@@ -113,3 +196,11 @@ def run(benches=("Anymal", "FrankaCabinet"), agents=4, rounds=12):
              f"_us_per_sample_ring={dt_m * 1e6 / deliv_m:.2f}"
              f"_us_per_sample_host={dt_h * 1e6 / deliv_h:.2f}"
              f"_granularity_ratio={mcc.stats.bytes_per_transfer / host.stats.bytes_per_transfer:.2f}x")
+        # §4.1 serve/train overlap: double-buffered flush-as-swap vs the
+        # PR 1 blocking-flush ring at identical payloads and losslessness
+        emit(f"mcc_overlap_over_blocking_{bench}", 0.0,
+             f"walltime_ratio={(dt_m / deliv_m) / (dt_o / deliv_o):.2f}x"
+             f"_us_per_sample_overlap={dt_o * 1e6 / deliv_o:.2f}"
+             f"_us_per_sample_blocking={dt_m * 1e6 / deliv_m:.2f}"
+             f"_lost={max(expected - deliv_o, 0)}"
+             f"_dup={max(deliv_o - expected, 0)}")

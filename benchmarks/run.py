@@ -13,12 +13,18 @@
 #   roofline             — §Roofline terms from the dry-run artifacts
 #
 # ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels,
-# interpret mode on CPU) and writes BENCH_mcc.json / BENCH_kernels.json so
-# future PRs have before/after numbers to diff against.
+# interpret mode on CPU), writes BENCH_mcc.json / BENCH_kernels.json so
+# future PRs have before/after numbers to diff against, and FAILS (exit 1)
+# when any row regresses more than REGRESSION_FACTOR against the committed
+# baseline — the perf trajectory is enforced, not advisory.  Re-baselining
+# on a different machine: BENCH_ALLOW_REGRESSION=1 python -m benchmarks.run
+# --quick.
 import json
 import os
 import sys
 import traceback
+
+REGRESSION_FACTOR = 2.0
 
 # allow both `python -m benchmarks.run` and `python benchmarks/run.py`
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -27,15 +33,38 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, p)
 
 
-def _dump_rows(path: str, suite: str, rows) -> None:
-    payload = {"suite": suite,
-               "rows": [dict(zip(("name", "us_per_call", "derived"),
-                                 r.split(",", 2))) for r in rows]}
-    for r in payload["rows"]:
+def _parse_rows(rows):
+    out = [dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
+           for r in rows]
+    for r in out:
         r["us_per_call"] = float(r["us_per_call"])
+    return out
+
+
+def _dump_rows(path: str, suite: str, rows) -> None:
+    payload = {"suite": suite, "rows": _parse_rows(rows)}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {path}", file=sys.stderr)
+
+
+def _check_regressions(path: str, rows) -> list:
+    """Compare fresh rows against the committed baseline; a timing row
+    more than REGRESSION_FACTOR slower is a regression.  Ratio rows
+    (us_per_call == 0) and rows new to this baseline are skipped."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        base = {r["name"]: r["us_per_call"] for r in json.load(f)["rows"]}
+    regs = []
+    for r in _parse_rows(rows):
+        old = base.get(r["name"], 0.0)
+        if old > 0.0 and r["us_per_call"] > REGRESSION_FACTOR * old:
+            regs.append(f"{r['name']}: {r['us_per_call']:.1f}us vs "
+                        f"baseline {old:.1f}us "
+                        f"({r['us_per_call'] / old:.2f}x > "
+                        f"{REGRESSION_FACTOR}x)")
+    return regs
 
 
 def main() -> None:
@@ -65,7 +94,9 @@ def main() -> None:
     if quick and only is None:
         only = ["mcc", "kernels"]   # an explicit selection wins; --quick
                                     # then only adds the JSON artifacts
+    allow_regression = bool(os.environ.get("BENCH_ALLOW_REGRESSION"))
     failed = []
+    regressions = []
     for name, fn in suites:
         if only and name not in only:
             continue
@@ -79,10 +110,27 @@ def main() -> None:
             emit(f"{name}_SUITE_FAILED", 0.0, repr(e)[:120])
             traceback.print_exc(file=sys.stderr)
         if quick and ok:
-            # never clobber the last good baseline with a partial run
-            _dump_rows(f"BENCH_{name}.json", name, ROWS[start:])
+            path = f"BENCH_{name}.json"
+            regs = _check_regressions(path, ROWS[start:])
+            if regs and not allow_regression:
+                # keep the last good baseline so the next run still has
+                # something honest to diff against
+                regressions.extend(regs)
+                print(f"# NOT rewriting {path} (regressions)",
+                      file=sys.stderr)
+            else:
+                # never clobber the last good baseline with a partial run
+                _dump_rows(path, name, ROWS[start:])
+    if regressions:
+        print("# PERF REGRESSIONS (>"
+              f"{REGRESSION_FACTOR}x vs committed baseline; "
+              "set BENCH_ALLOW_REGRESSION=1 to re-baseline):",
+              file=sys.stderr)
+        for r in regressions:
+            print(f"#   {r}", file=sys.stderr)
     if failed:
         print(f"# FAILED SUITES: {failed}", file=sys.stderr)
+    if failed or regressions:
         raise SystemExit(1)
 
 

@@ -3,9 +3,12 @@ pipeline (paper §4.2 + Fig 6b): serving GMIs on one device group collect
 experience, the dispenser→compressor→migrator→batcher pipeline ships it,
 trainer GMIs update the policy, and actors run on a stale snapshot.
 
-The experience flow is device-resident end to end: pushes pack in place
-into per-group ring buffers (Pallas ``pack_channels`` on TPU, jitted
-donated XLA elsewhere) and a flush is a pointer-bump slice per channel.
+The experience flow is device-resident end to end and OVERLAPPED (paper
+§4.1): with ``overlap=True`` a flush is a double-buffer swap — trainers
+consume the previous round's back generation while serving keeps staging
+the front one — and the attached online controller (runtime Algorithm 2)
+re-plans the serving:training split and num_env between epochs from
+measured throughput and ring occupancy.
 
     PYTHONPATH=src python examples/async_a3c_channels.py
 """
@@ -23,21 +26,32 @@ def main():
     layout = plan_async(num_gpus=2, serving_gpus=1, gmis_per_gpu=2,
                         devices=list(range(4)), devices_per_gpu=2)
     print(layout.manager.summary())
-    runner = make_async_runner(env, layout, num_envs=64, num_steps=16)
+    from repro.core.controller import ControllerConfig
+    runner = make_async_runner(env, layout, num_envs=64, num_steps=16,
+                               overlap=True, online_controller=True,
+                               controller_cfg=ControllerConfig(
+                                   num_env_sweep=(64, 128, 256)))
 
     t0 = time.time()
     for rnd in range(30):
-        # serve -> ring-pack -> pointer-bump flush -> migrate -> train
+        # serve -> stage -> swap-flush -> migrate -> train (round r-1)
         losses, stale = runner.round()
-        if rnd % 5 == 0:
+        if rnd % 5 == 0 and losses:
             dt = time.time() - t0
             print(f"round {rnd:3d} loss={np.mean(losses):8.4f} "
                   f"staleness={max(stale)} PPS={runner.predictions/dt:,.0f} "
                   f"TTOP={runner.trained_samples/dt:,.0f}")
+    runner.finish()            # train on the in-flight tail
     s = runner.pipe.stats
     print(f"\nchannel pipeline: {s.num_transfers} transfers, "
           f"{s.bytes_per_transfer:,.0f} B/transfer "
-          f"({s.total_bytes/2**20:.1f} MiB total)")
+          f"({s.total_bytes/2**20:.1f} MiB total); "
+          f"delivered == predicted: "
+          f"{runner.trained_samples == runner.predictions}")
+    print(runner.controller.summary())
+    for d in runner.controller.decisions:
+        print(f"  re-plan: {d.reason} -> serving_gpus={d.serving_gpus}, "
+              f"gmi_per_gpu={d.gmi_per_gpu}, num_env={d.num_env}")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,11 @@
 # lgr.py        — layout-aware gradient reduction MPR/MRR/HAR (§4.1)
 # channels.py   — channel-based experience sharing MCC (§4.2)
 # selection.py  — workload-aware GMI selection, Algorithm 2 (§5.2)
+# controller.py — online GMI management, the runtime half of Alg. 2 (§5.2)
 # cost_model.py — analytical models, Tables 2/4/5, Eqs. 1-3
-from repro.core import channels, cost_model, gmi, lgr, placement, selection  # noqa: F401
+from repro.core import (channels, controller, cost_model, gmi, lgr,  # noqa: F401
+                        placement, selection)
+from repro.core.controller import (ControllerConfig,  # noqa: F401
+                                   OnlineGMIController)
 from repro.core.gmi import DRLRole, GMI, GMIManager  # noqa: F401
 from repro.core.placement import select_reduction_strategy  # noqa: F401

@@ -40,6 +40,25 @@ end:
   directly to their co-located trainer, the rest spread least-loaded, so
   ``trainer_gmis`` balance within one flush instead of idling in turns.
 
+Double-buffered overlap (paper §4.1)
+------------------------------------
+With ``overlap=True`` each ring alternates storage *generations*:
+pushes stage device-resident payload references (no device work, no
+donation — the producer can never stall behind a trainer still reading
+the previous flush) and ``flush`` becomes a buffer *swap* instead of a
+barrier — the back generation is bulk-packed in one fused dispatch
+(``pack_generation``) and parked one round, while what is handed to the
+trainers is the *previous* swap: arrays that had a whole serving round
+of wall-clock to materialize.  Serving GMIs keep staging into the front
+generation while trainer GMIs consume the back one, the
+producer/consumer overlap that WarpDrive (arXiv:2108.13976) shows
+end-to-end on-device RL lives or dies on.  The spill-not-drop guarantee
+survives the swap: ring-overflow spills are delivered in push order,
+ahead of the swap they preceded, and a final
+:meth:`MultiChannelPipeline.drain` empties both generations — zero
+lost, zero duplicated samples under any interleaved push/flush
+schedule.
+
 ``TransferStats`` counts one transfer per channel per routed group —
 physically separate moves are counted separately.  On a single-group
 layout (no placement map; the Table-8 benchmark configuration) this
@@ -63,7 +82,8 @@ import jax.numpy as jnp
 from repro.kernels import ops
 from repro.kernels.channel_pack import (CHANNELS, alloc_rings,
                                         pack_channels_fresh,
-                                        pack_channels_xla)
+                                        pack_channels_xla,
+                                        pack_generation)
 from repro.rl.a3c import Experience
 
 
@@ -100,16 +120,29 @@ class ChannelRing:
     the rare wrapped read) and logically empties the ring; a full
     unwrapped ring is handed out zero-copy and the next push restarts on
     fresh storage (a single fused alloc+write dispatch).
+
+    ``double_buffered=True`` turns ``snapshot`` into a buffer swap over
+    alternating storage *generations*: pushes stage device-resident
+    payload references (no device work, nothing to donate, so the
+    producer can never stall behind the consumer) and the swap packs the
+    whole back generation in ONE fused donation-free dispatch
+    (``pack_generation``) whose output the consumer owns outright, while
+    the front generation keeps staging the next round.  See
+    ``kernels/channel_pack`` for the measurements that ruled out the
+    shared-storage and per-push-donation alternatives.
     """
 
     def __init__(self, slots: int, use_pallas: Optional[bool] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 double_buffered: bool = False):
         assert slots >= 1
         self.slots = int(slots)
+        self.double_buffered = bool(double_buffered)
         self.use_pallas = (jax.default_backend() == "tpu") \
             if use_pallas is None else use_pallas
         self.interpret = interpret
         self.bufs: Optional[Dict[str, jax.Array]] = None
+        self._staged: List[Dict[str, jax.Array]] = []   # double-buffer front
         self.head = 0          # next slot to write
         self.count = 0         # valid slots (<= slots)
         self.shape: Optional[Tuple[int, int]] = None   # (T, N)
@@ -124,7 +157,11 @@ class ChannelRing:
         elif self._sig != sig:
             raise ValueError(
                 f"ring expects payload shapes {self._sig}, got {sig}")
-        if self.bufs is None:
+        if self.double_buffered:
+            if self.count == self.slots:   # ring semantics: evict oldest
+                self._staged.pop(0)
+            self._staged.append(pay)
+        elif self.bufs is None:
             assert self.head == 0
             if self.use_pallas:
                 self.bufs = ops.pack_channels(
@@ -143,8 +180,19 @@ class ChannelRing:
         self.count = min(self.count + 1, self.slots)
 
     def snapshot(self) -> Dict[str, jax.Array]:
-        """Valid slots oldest-first as channel arrays; empties the ring."""
-        assert self.count > 0 and self.bufs is not None
+        """Valid slots oldest-first as channel arrays; empties the ring.
+
+        Double-buffered rings swap generations instead of draining in
+        place: the back generation is bulk-packed in one dispatch and
+        handed to the consumer; staging restarts immediately."""
+        assert self.count > 0
+        if self.double_buffered:
+            staged, self._staged = self._staged, []
+            self.head = 0
+            self.count = 0
+            return pack_generation(staged)
+
+        assert self.bufs is not None
         S, (_, N) = self.slots, self.shape
         start = (self.head - self.count) % S
         bufs, count = self.bufs, self.count
@@ -176,6 +224,7 @@ class ChannelRing:
         out["bootstrap"] = out["bootstrap"].reshape(-1)
         out["actor_version"] = out["actor_version"].reshape(-1)
         return out
+
 
 
 # ---------------------------------------------------------------- services -
@@ -303,7 +352,8 @@ class MultiChannelPipeline:
                  batch_envs: Optional[int] = None,
                  ring_slots: Optional[int] = None,
                  use_pallas: Optional[bool] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 overlap: bool = False):
         self.agent_gmis = list(agent_gmis)
         self.gmi_gpu = gmi_gpu or {}
         self.compressor = Compressor()
@@ -313,6 +363,7 @@ class MultiChannelPipeline:
         self.ring_slots = ring_slots
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.overlap = bool(overlap)
         # agents sharing a GPU share a ring (direct-forward group); agents
         # with unknown placement share the catch-all group
         self._group_of = {a: self.gmi_gpu.get(a, -1) for a in self.agent_gmis}
@@ -325,6 +376,13 @@ class MultiChannelPipeline:
         # snapshotted (still one coarse device move per channel) before
         # the overwriting push lands
         self._pending: Dict[int, List[Dict[str, jax.Array]]] = {}
+        # overlap mode: the previous flush's swapped-out buffers, parked
+        # one round so trainers consume round r-1 while agents serve r
+        self._inflight: List[Tuple[int, Dict[str, jax.Array]]] = []
+        # controller-facing counters (occupancy is read off live rings)
+        self.spill_count = 0
+        self.occupancy_high_water = 0.0
+        self.delivered_samples = 0
 
     def _ring_for(self, agent_gmi: int, exp: Experience) -> ChannelRing:
         group = self._group_of[agent_gmi]
@@ -335,7 +393,8 @@ class MultiChannelPipeline:
         if ring is None:
             slots = self.ring_slots or self._group_size[group]
             ring = ChannelRing(slots, use_pallas=self.use_pallas,
-                               interpret=self.interpret)
+                               interpret=self.interpret,
+                               double_buffered=self.overlap)
             self._rings[key] = ring
         return ring
 
@@ -344,17 +403,36 @@ class MultiChannelPipeline:
         if ring.count == ring.slots:       # would evict an unread slot
             group = self._group_of[agent_gmi]
             self._pending.setdefault(group, []).append(ring.snapshot())
+            self.spill_count += 1
         ring.append(exp)
+        self.occupancy_high_water = max(self.occupancy_high_water,
+                                        ring.count / ring.slots)
 
     def flush(self) -> Dict[int, List[Experience]]:
-        """Move everything agents produced to trainer batches."""
-        groups: List[Tuple[int, Dict[str, jax.Array]]] = []
+        """Move experience toward trainer batches.
+
+        Blocking mode (default): everything pushed since the last flush
+        is snapshotted, routed, and returned — the consumer sees this
+        round's data and serving implicitly waits on it.
+
+        Overlap mode: flush is a buffer swap, not a barrier.  This
+        round's pushes (spills first, in push order, then the ring swap)
+        are parked in flight, and what is returned is the PREVIOUS
+        flush's swap — arrays that had a whole serving round to
+        materialize while pushes kept landing in the front halves.  The
+        first flush returns ``{}``; :meth:`drain` delivers the tail.
+        """
+        current: List[Tuple[int, Dict[str, jax.Array]]] = []
         for gkey, snaps in self._pending.items():
-            groups.extend((gkey, ch) for ch in snaps)
+            current.extend((gkey, ch) for ch in snaps)
         self._pending = {}
         for (gkey, _), ring in self._rings.items():
             if ring.count:
-                groups.append((gkey, ring.snapshot()))
+                current.append((gkey, ring.snapshot()))
+        if self.overlap:
+            groups, self._inflight = self._inflight, current
+        else:
+            groups = current
         if not groups:
             return {}
         self.compressor.record_flush([ch for _, ch in groups])
@@ -363,7 +441,47 @@ class MultiChannelPipeline:
             dst = self.migrator.route(
                 ch, agent_gpu=None if gkey == -1 else gkey)
             out.setdefault(dst, []).extend(self.batchers[dst].prepare(ch))
+            self.delivered_samples += int(np.prod(ch["rewards"].shape))
         return out
+
+    def drain(self) -> Dict[int, List[Experience]]:
+        """Pipeline-ending flush: deliver the in-flight back buffers AND
+        any still-buffered front pushes (two swap steps in overlap mode,
+        one plain flush otherwise) — the overlap tail is never lost."""
+        out: Dict[int, List[Experience]] = {}
+        for _ in range(2 if self.overlap else 1):
+            for dst, bs in self.flush().items():
+                out.setdefault(dst, []).extend(bs)
+        return out
+
+    def clone_for(self, agent_gmis: Sequence[int],
+                  trainer_gmis: Sequence[int],
+                  gmi_gpu: Optional[Dict[int, int]] = None) \
+            -> "MultiChannelPipeline":
+        """A fresh pipeline over a new layout carrying THIS pipeline's
+        configuration (batching, ring sizing, backend, overlap) — the
+        re-plan path; counters restart with the new layout."""
+        some_batcher = next(iter(self.batchers.values()), None)
+        return MultiChannelPipeline(
+            agent_gmis, trainer_gmis, gmi_gpu=gmi_gpu,
+            batch_mode=some_batcher.mode if some_batcher else "stack",
+            batch_envs=some_batcher.batch_envs if some_batcher else None,
+            ring_slots=self.ring_slots, use_pallas=self.use_pallas,
+            interpret=self.interpret, overlap=self.overlap)
+
+    def ring_occupancy(self) -> float:
+        """Current front-buffer fill fraction (peak across live rings)."""
+        occ = [r.count / r.slots for r in self._rings.values()]
+        return max(occ) if occ else 0.0
+
+    def take_occupancy_high_water(self) -> float:
+        """Peak fill fraction any ring reached since the last call.
+        Exactly 1.0 once per round is the healthy interleaved pattern
+        (spills, not occupancy, are the controller's overflow signal);
+        ≈0 means trainers starve.  Resets the mark so each decision
+        epoch sees its own peak."""
+        hw, self.occupancy_high_water = self.occupancy_high_water, 0.0
+        return hw
 
     @property
     def stats(self) -> TransferStats:
@@ -396,6 +514,11 @@ class HostStagedPipeline:
         channels = self.compressor.compress(per_agent)
         dst = self.migrator.route(channels)
         return {dst: self.batchers[dst].prepare(channels)}
+
+    def drain(self) -> Dict[int, List[Experience]]:
+        """API parity with :class:`MultiChannelPipeline` (host staging has
+        no in-flight buffers — drain is a plain flush)."""
+        return self.flush()
 
     @property
     def stats(self) -> TransferStats:

@@ -1,0 +1,270 @@
+"""Online GMI management — the runtime half of Algorithm 2 (paper §5.2).
+
+``selection.explore`` searches (GMIperGPU, num_env) *offline* with a
+profiling callable and the saturation metric Sat = ΔTOP/ΔMem.  The paper's
+adaptive GMI management does not stop there: the serving:training resource
+split is workload-dependent (arXiv:2012.04210) and the right num_env moves
+with the policy size and environment mix, so the same search has to keep
+running against *live* measurements.  This controller closes that loop:
+
+* every serve/train round the runner reports what actually happened —
+  delivered samples, wall time, ring-occupancy high water, spill count,
+  delivered bytes (the memory-pressure proxy) — one :class:`RoundSample`;
+* every ``epoch_rounds`` rounds the samples fold into a recorded
+  :class:`ProfilePoint` keyed by the live (gmi_per_gpu, num_env) and
+  ``selection.explore`` re-runs over the *measured* table (unmeasured
+  configs report not-runnable, so the search only walks observed ground
+  and the fixed Sat rule handles flat/shrinking memory between recorded
+  points);
+* ring pressure drives the serving:training GPU split: any spill means
+  producers genuinely outran the trainers (the ring overflowed between
+  flushes) — shift one GPU from serving to training; occupancy under
+  the low-water mark with no spills means trainers starve — shift one
+  back.  Occupancy exactly at 1.0 is NOT pressure: a group-sized ring
+  filled once per round is the healthy round-interleaved pattern;
+* when the measured ladder is too thin to compute saturation for the
+  current GMIperGPU, the controller proposes *probing* the next num_env
+  up the sweep (Algorithm 2's explore step, now interleaved with
+  exploitation);
+* a re-plan is only emitted when the projected system throughput of the
+  winning config beats the live config by ``min_gain`` (hysteresis —
+  re-planning drains rings and resets environments, it is not free).
+
+``plan_layout`` materializes the current decision as a
+``placement.plan_async`` layout so the runner can rebuild its pipeline
+between training epochs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.selection import (NUM_ENV_SWEEP, ProfilePoint,
+                                  estimate_system_throughput, explore)
+
+
+@dataclass
+class ControllerConfig:
+    alpha: float = 0.1             # explore()'s saturation threshold
+    epoch_rounds: int = 4          # rounds folded into one decision epoch
+    min_gain: float = 1.05         # projected-throughput hysteresis
+    occ_low: float = 0.25          # trainer starvation -> grow serving side
+    num_env_sweep: Tuple[int, ...] = NUM_ENV_SWEEP
+    probe: bool = True             # walk the num_env ladder when unmeasured
+
+
+@dataclass
+class RoundSample:
+    """One serve/train round's live measurements."""
+    samples: int                   # experience samples delivered to trainers
+    dt: float                      # wall seconds for the round
+    occupancy: float               # ring fill high-water during the round
+    spills: int                    # ring-overflow spills during the round
+    mem_bytes: float               # bytes moved (memory-pressure proxy)
+
+
+@dataclass
+class Decision:
+    """A re-plan emitted between training epochs."""
+    num_env: int
+    gmi_per_gpu: int
+    serving_gpus: int
+    projected_throughput: float
+    reason: str
+
+
+@dataclass
+class _Recorded:
+    point: ProfilePoint
+    epochs: int = 0
+
+
+class OnlineGMIController:
+    """Feeds live pipeline stats back into Algorithm 2 and re-plans the
+    GMI layout between training epochs."""
+
+    def __init__(self, num_gpu: int, serving_gpus: int, gmi_per_gpu: int,
+                 num_env: int, cfg: Optional[ControllerConfig] = None):
+        if not (1 <= serving_gpus < num_gpu):
+            raise ValueError("need 1 <= serving_gpus < num_gpu")
+        self.num_gpu = int(num_gpu)
+        self.serving_gpus = int(serving_gpus)
+        self.gmi_per_gpu = int(gmi_per_gpu)
+        self.num_env = int(num_env)
+        self.cfg = cfg or ControllerConfig()
+        self._table: Dict[Tuple[int, int], _Recorded] = {}
+        self._epoch: List[RoundSample] = []
+        self._spill_mark = 0
+        self._bytes_mark = 0
+        self.decisions: List[Decision] = []
+
+    # ------------------------------------------------------- observation --
+    def observe_pipeline(self, pipeline, samples: int,
+                         dt: float) -> Optional[Decision]:
+        """Convenience: pull occupancy/spill/bytes deltas off a
+        ``MultiChannelPipeline`` after one round and :meth:`record`."""
+        if pipeline.spill_count < self._spill_mark \
+                or pipeline.stats.total_bytes < self._bytes_mark:
+            # fresh pipeline after a re-plan: counters restarted at zero
+            self._spill_mark = 0
+            self._bytes_mark = 0
+        spills = pipeline.spill_count - self._spill_mark
+        mem = pipeline.stats.total_bytes - self._bytes_mark
+        self._spill_mark = pipeline.spill_count
+        self._bytes_mark = pipeline.stats.total_bytes
+        return self.record(RoundSample(
+            samples=samples, dt=dt,
+            occupancy=pipeline.take_occupancy_high_water(),
+            spills=spills, mem_bytes=float(mem)))
+
+    def record(self, sample: RoundSample) -> Optional[Decision]:
+        """Fold one round in; returns a Decision at epoch boundaries when
+        the measured evidence says the layout should change."""
+        self._epoch.append(sample)
+        if len(self._epoch) < self.cfg.epoch_rounds:
+            return None
+        rounds, self._epoch = self._epoch, []
+        dt = sum(s.dt for s in rounds)
+        samples = sum(s.samples for s in rounds)
+        if dt <= 0.0 or samples <= 0:
+            return None
+        # per-serving-instance throughput, so recorded points are
+        # comparable across gmi_per_gpu exactly like offline profiles
+        n_inst = max(self.serving_gpus * self.gmi_per_gpu, 1)
+        top = samples / dt / n_inst
+        mem = sum(s.mem_bytes for s in rounds) / len(rounds)
+        key = (self.gmi_per_gpu, self.num_env)
+        rec = self._table.get(key)
+        if rec is None:
+            self._table[key] = _Recorded(ProfilePoint(True, top, mem), 1)
+        else:                       # running mean over decision epochs
+            n = rec.epochs
+            rec.point = ProfilePoint(
+                True, (rec.point.throughput * n + top) / (n + 1),
+                (rec.point.memory * n + mem) / (n + 1))
+            rec.epochs = n + 1
+        occ = max(s.occupancy for s in rounds)
+        spills = sum(s.spills for s in rounds)
+        return self._decide(occ, spills)
+
+    # -------------------------------------------------------- Algorithm 2 --
+    def recorded_profile(self):
+        """The live table as an ``explore``-compatible profile callable:
+        measured configs answer with their recorded point, everything
+        else is not-runnable (the online search never extrapolates)."""
+        frozen = {k: r.point for k, r in self._table.items()}
+
+        def profile(bench: str, gmi_per_gpu: int,
+                    num_env: int) -> ProfilePoint:
+            return frozen.get((gmi_per_gpu, num_env),
+                              ProfilePoint(False, 0.0, 0.0))
+
+        return profile
+
+    def _projected(self, key: Tuple[int, int]) -> float:
+        rec = self._table.get(key)
+        if rec is None:
+            return 0.0
+        return estimate_system_throughput(key[0], self.num_gpu,
+                                          rec.point.throughput)
+
+    def propose_probe(self) -> Optional[int]:
+        """Next unmeasured num_env up the sweep for the current GMIperGPU
+        — Algorithm 2's explore step, taken online when the measured
+        ladder cannot yet support a saturation estimate.  Once a measured
+        point above the current config has turned DOWN (throughput no
+        better than here), the ladder is saturated and probing stops."""
+        measured = {ne: rec.point
+                    for (gpg, ne), rec in self._table.items()
+                    if gpg == self.gmi_per_gpu}
+        cur = measured.get(self.num_env)
+        if cur is not None and any(
+                ne > self.num_env and p.throughput <= cur.throughput
+                for ne, p in measured.items()):
+            return None
+        for ne in sorted(self.cfg.num_env_sweep):
+            if ne > self.num_env and ne not in measured:
+                return ne
+        return None
+
+    def _decide(self, occ: float, spills: int) -> Optional[Decision]:
+        cfg = self.cfg
+        # 1. serving:training split from ring pressure (arXiv:2012.04210:
+        #    the right split is workload-dependent — re-measure, don't
+        #    hard-code).  Spills are the overflow signal; a ring merely
+        #    filled to 1.0 once per round is healthy.
+        serving = self.serving_gpus
+        split_reason = None
+        if spills > 0 and serving > 1:
+            serving -= 1
+            split_reason = (f"ring pressure (spills={spills}, "
+                            f"occ={occ:.2f}): +1 training GPU")
+        elif occ <= cfg.occ_low and spills == 0 \
+                and serving < self.num_gpu - 1:
+            serving += 1
+            split_reason = (f"trainer starvation (occ={occ:.2f}): "
+                            "+1 serving GPU")
+
+        # 2. (num_env, gmi_per_gpu) from explore over the measured table
+        keys = sorted(self._table)
+        gpg_range = sorted({k[0] for k in keys}, reverse=True)
+        ne_sweep = sorted({k[1] for k in keys})
+        best_key, best_top = None, 0.0
+        if keys:
+            trace = explore(self.recorded_profile(), "live", self.num_gpu,
+                            alpha=cfg.alpha, gmi_per_gpu_range=gpg_range,
+                            num_env_sweep=ne_sweep)
+            ne, gpg = trace.best_config
+            best_key, best_top = (gpg, ne), trace.best_throughput
+
+        cur_key = (self.gmi_per_gpu, self.num_env)
+        cur_top = self._projected(cur_key)
+        reason = split_reason
+        num_env, gmi_per_gpu = self.num_env, self.gmi_per_gpu
+        if best_key is not None and best_key != cur_key \
+                and best_top > cfg.min_gain * max(cur_top, 1e-12):
+            gmi_per_gpu, num_env = best_key
+            gain = best_top / max(cur_top, 1e-12)
+            move = (f"measured optimum (gmi_per_gpu={gmi_per_gpu}, "
+                    f"num_env={num_env}) projects {gain:.2f}x")
+            reason = f"{reason}; {move}" if reason else move
+        elif cfg.probe and reason is None and spills == 0:
+            probe = self.propose_probe()
+            if probe is not None:
+                num_env = probe
+                reason = (f"probe num_env={probe} (ladder unmeasured, "
+                          "saturation unknown)")
+
+        if reason is None:
+            return None
+        decision = Decision(num_env=num_env, gmi_per_gpu=gmi_per_gpu,
+                            serving_gpus=serving,
+                            projected_throughput=max(best_top, cur_top),
+                            reason=reason)
+        self.num_env = num_env
+        self.gmi_per_gpu = gmi_per_gpu
+        self.serving_gpus = serving
+        self.decisions.append(decision)
+        return decision
+
+    # ----------------------------------------------------------- layouts --
+    def plan_layout(self, devices=None, devices_per_gpu=None):
+        """Materialize the current decision state as an async placement
+        (serving GPUs vs training GPUs, gmi_per_gpu instances each)."""
+        from repro.core.placement import plan_async
+        return plan_async(self.num_gpu, self.serving_gpus, self.gmi_per_gpu,
+                          devices=devices, devices_per_gpu=devices_per_gpu)
+
+    def summary(self) -> str:
+        lines = [f"OnlineGMIController(num_gpu={self.num_gpu}, "
+                 f"serving={self.serving_gpus}, "
+                 f"gmi_per_gpu={self.gmi_per_gpu}, "
+                 f"num_env={self.num_env}, "
+                 f"measured={len(self._table)} configs, "
+                 f"replans={len(self.decisions)})"]
+        for (gpg, ne), rec in sorted(self._table.items()):
+            lines.append(f"  (gpg={gpg}, ne={ne}): "
+                         f"top/inst={rec.point.throughput:.0f}/s "
+                         f"mem={rec.point.memory:.2e}B "
+                         f"epochs={rec.epochs}")
+        return "\n".join(lines)

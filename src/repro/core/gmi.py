@@ -102,19 +102,41 @@ class GMIManager:
     def instance_mesh(self, role: str, axes=("gpu", "inst")) -> Mesh:
         """Axis backend: one shared mesh (gpu × instance) over all GMIs of a
         role — instances are coordinates along ``inst``; LGR collectives run
-        over these axes."""
+        over these axes.  Multi-device GMIs (resized slices) contribute ALL
+        their chips along a trailing ``dev`` axis — silently keeping only
+        ``device_ids[0]`` would shrink a resized instance unnoticed."""
         mpl = self.gmi_to_gpu_mapping(role)
         if not mpl:
             raise ValueError(f"no GMIs with role {role}")
         t = len(mpl[0])
         if any(len(row) != t for row in mpl):
             raise ValueError("axis backend needs a rectangular GMI layout")
-        dev_grid = np.empty((len(mpl), t), dtype=object)
+        sizes = {self.gmis[gmi_id].num_devices
+                 for row in mpl for gmi_id in row}
+        if 0 in sizes:
+            raise ValueError(
+                f"role {role} has GMIs with no devices attached "
+                "(set_gpu not called)")
+        if len(sizes) > 1:
+            raise ValueError(
+                f"axis backend needs uniform devices-per-GMI, got {sizes} "
+                "for role " + role)
+        d = sizes.pop()
+        if d == 1:
+            dev_grid = np.empty((len(mpl), t), dtype=object)
+            for gi, row in enumerate(mpl):
+                for ii, gmi_id in enumerate(row):
+                    dev_grid[gi, ii] = self.devices[
+                        self.gmis[gmi_id].device_ids[0]]
+            return Mesh(dev_grid, axes)
+        if "dev" in axes:
+            raise ValueError("axes may not already contain 'dev'")
+        dev_grid = np.empty((len(mpl), t, d), dtype=object)
         for gi, row in enumerate(mpl):
             for ii, gmi_id in enumerate(row):
-                dev_grid[gi, ii] = self.devices[
-                    self.gmis[gmi_id].device_ids[0]]
-        return Mesh(dev_grid, axes)
+                for di, dev_id in enumerate(self.gmis[gmi_id].device_ids):
+                    dev_grid[gi, ii, di] = self.devices[dev_id]
+        return Mesh(dev_grid, tuple(axes) + ("dev",))
 
     def summary(self) -> str:
         lines = [f"GMIManager(backend={self.backend}, "

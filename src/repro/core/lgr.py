@@ -104,6 +104,15 @@ def lgr_allreduce(grads, mesh: Mesh, strategy: str,
     shape (g, t, ...) — one gradient per instance.  Returns the reduced
     (averaged) gradient with the same leading grid (all replicas equal).
     """
+    if mesh.devices.ndim != 2:
+        # GMIManager.instance_mesh returns a (gpu, inst, dev) grid for
+        # multi-device GMIs so resized instances can't silently lose
+        # chips; the LGR schedules below only reduce over (gpu, inst).
+        raise ValueError(
+            f"LGR schedules reduce over a 2-axis (gpu, inst) instance "
+            f"grid; got axes {mesh.axis_names}.  Multi-device GMIs need "
+            "a per-'dev' reduction first (ROADMAP open item) or the "
+            "mpr_host fallback.")
     g_, t_ = mesh.devices.shape
     sync = make_grad_sync(strategy, intra_axis, inter_axis)
     ntot = g_ * t_

@@ -12,7 +12,7 @@ Layout templates:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import List, Optional
 
 from repro.core.gmi import GMIManager
 
@@ -24,6 +24,13 @@ def select_reduction_strategy(mpl: List[List[int]]) -> str:
     mpl[g] = list of (trainer) GMI ids on GPU g.
     Returns one of "mpr" | "mrr" | "har".
     """
+    if not mpl or not any(mpl):
+        # no trainer GMIs at all: there is no gradient to reduce, and
+        # answering "mpr" would let a serving-only layout silently wire
+        # up a reduction schedule
+        raise ValueError(
+            "empty MPL — a layout with no trainer GMIs has no reduction "
+            "strategy")
     gmi_per_gpu = set()
     # all GMIs on the same GPU -> plain multi-process reduction
     if len(mpl) <= 1:
@@ -51,11 +58,18 @@ class Layout:
 
     @property
     def mpl(self):
+        """Trainer-GMI placement list; ``[]`` for serving-only layouts
+        (no trainers anywhere — callers must not infer a reduction)."""
         return self.manager.gmi_to_gpu_mapping("trainer") or \
             self.manager.gmi_to_gpu_mapping("holistic")
 
-    def reduction_strategy(self) -> str:
-        return select_reduction_strategy(self.mpl)
+    def reduction_strategy(self) -> Optional[str]:
+        """Algorithm 1 over this layout's trainer GMIs; ``None`` for a
+        serving-only layout — there is no gradient reduction to select."""
+        mpl = self.mpl
+        if not mpl:
+            return None
+        return select_reduction_strategy(mpl)
 
 
 def plan_tcg_serving(num_gpus: int, gmis_per_gpu: int,

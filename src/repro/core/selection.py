@@ -7,9 +7,12 @@ host; benchmarks may inject analytic or recorded profiles.
 """
 from __future__ import annotations
 
+import logging
 import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Tuple
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass
@@ -71,7 +74,17 @@ def explore(profile: Callable[[str, int, int], ProfilePoint],
                 continue
             r_top = (prof.throughput - pre_top) / pre_top     # line 13
             r_mem = (prof.memory - pre_mem) / max(pre_mem, 1e-9)
-            sat = r_top / max(r_mem, 1e-9)                    # line 15
+            if r_mem <= 0.0:
+                # The paper's Sat = ΔTOP/ΔMem assumes memory grows with
+                # num_env.  When it is flat or shrinks (allocator slack,
+                # recorded online profiles), the ratio is meaningless —
+                # clamping the denominator exploded it to ±1e9·r_top,
+                # either never pruning or aborting the sweep spuriously.
+                # A throughput gain at no memory cost must never prune;
+                # no gain at no cost means the sweep is saturated.
+                sat = float("inf") if r_top > 0.0 else float("-inf")
+            else:
+                sat = r_top / r_mem                           # line 15
             pre_top, pre_mem = prof.throughput, prof.memory
             trace.append((gmi_per_gpu, num_env, prof, sat))
             if sat < alpha:                             # line 17-19
@@ -88,13 +101,26 @@ def explore(profile: Callable[[str, int, int], ProfilePoint],
 
 
 # ------------------------------------------------------- real profiler -----
+_RESOURCE_MARKERS = ("RESOURCE_EXHAUSTED", "RESOURCE EXHAUSTED",
+                     "OUT_OF_MEMORY", "out of memory", "Out of memory",
+                     "OOM ", "failed to allocate")
+
+
+def is_resource_exhausted(err: BaseException) -> bool:
+    """Only allocator/OOM-type failures count as Alg. 2 'not runnable';
+    anything else (shape bugs, NaN guards) is a genuine error."""
+    if isinstance(err, MemoryError):
+        return True
+    return any(m in str(err) for m in _RESOURCE_MARKERS)
+
+
 def make_ppo_profiler(iters: int = 3, mem_budget_bytes: float = 32e9):
     """Times actual PPO iterations on this host.  GMIperGPU scales the
     simulated per-instance resource slice by shrinking num_env headroom
     (1/GMIperGPU of the device), mirroring MPS percentage caps."""
     import jax
     from repro.envs import make_env
-    from repro.rl.ppo import PPOConfig, init_train, make_train_step
+    from repro.rl import ppo
 
     def profile(bench: str, gmi_per_gpu: int, num_env: int) -> ProfilePoint:
         env = make_env(bench)
@@ -108,10 +134,10 @@ def make_ppo_profiler(iters: int = 3, mem_budget_bytes: float = 32e9):
         if mem > mem_budget_bytes / gmi_per_gpu:
             return ProfilePoint(False, 0.0, mem)
         try:
-            cfg = PPOConfig(num_steps=8, num_epochs=1, num_minibatches=1)
-            params, opt, est, obs = init_train(
+            cfg = ppo.PPOConfig(num_steps=8, num_epochs=1, num_minibatches=1)
+            params, opt, est, obs = ppo.init_train(
                 jax.random.key(0), env, spec.policy_dims, num_envs=eff_env)
-            step = make_train_step(env, cfg)
+            step = ppo.make_train_step(env, cfg)
             k = jax.random.PRNGKey(0)
             params, opt, est, obs, k, m = step(params, opt, est, obs, k)
             jax.block_until_ready(m["loss"])
@@ -122,7 +148,16 @@ def make_ppo_profiler(iters: int = 3, mem_budget_bytes: float = 32e9):
             dt = (time.perf_counter() - t0) / iters
             top = cfg.num_steps * eff_env / dt
             return ProfilePoint(True, top, mem)
-        except Exception:
-            return ProfilePoint(False, 0.0, mem)
+        except Exception as e:
+            # resource exhaustion is the ONE failure Algorithm 2 expects
+            # (config too big for the GMI slice -> not runnable); a bare
+            # except here used to swallow genuine bugs as "not runnable"
+            if is_resource_exhausted(e):
+                return ProfilePoint(False, 0.0, mem)
+            logger.exception(
+                "profiler failed on (%s, gmi_per_gpu=%d, num_env=%d) with a "
+                "non-resource error — surfacing it", bench, gmi_per_gpu,
+                num_env)
+            raise
 
     return profile

@@ -18,6 +18,26 @@ Ring layout (S = ring slots, one slot per push):
     bootstrap     (S, N)                slot s -> row s
     actor_version (S, 1)                slot s -> row s
 
+A double-buffered ring (paper §4.1 serve/train overlap) alternates
+storage *generations*: pushes stage device-resident payload references
+(zero device work on the producer's critical path) and the buffer swap
+packs the whole back generation slot-by-index in ONE fused, donation-free
+dispatch (``pack_generation``), handing the result to the consumer while
+the front generation keeps staging.  Two alternatives were measured and
+rejected on the Table-8 workload:
+
+* both buffers in one ``2*S``-slot allocation with swap = index flip —
+  every swap slice-copies its half AND the next push donates buffers
+  with in-flight snapshot reads, serializing producer behind consumer;
+* per-push in-place packing into a fresh generation (this file's kernel,
+  as used by the blocking ring) — each donating push must wait for the
+  previous push's buffers to materialize, so with a trainer consume in
+  flight the donation chain re-serializes serve behind train (donation
+  of a buffer with a pending definition blocks at dispatch).
+
+The staged-generation pack has no donation anywhere, so serving runs
+ahead of the trainer's consumption limited only by ring capacity.
+
 All six channels are packed by ONE ``pallas_call`` (grid (1,)): the slot
 index rides in SMEM and every ring buffer is aliased input->output, so the
 kernel performs six in-place dynamic stores and never touches the
@@ -146,6 +166,43 @@ def alloc_rings(payloads, slots: int):
 @functools.partial(jax.jit, static_argnames=("slots",))
 def pack_channels_fresh(payloads, *, slots: int):
     """Allocate rings and write slot 0 in one fused dispatch (the first
-    push after a full-ring flush hands its buffers to the consumer, so the
-    ring starts over on fresh storage)."""
+    push after a full-ring flush — or after a double-buffer generation
+    swap — hands its buffers to the consumer, so the ring starts over on
+    fresh storage)."""
     return _pack_xla(alloc_rings(payloads, slots), payloads, jnp.int32(0))
+
+
+# ------------------------------------------------------- generation pack ---
+@functools.lru_cache(maxsize=None)
+def _generation_packer(n: int):
+    """Jitted bulk pack of ``n`` staged pushes into one contiguous
+    generation (slot ``s`` -> the slot-aligned block, exactly the ring
+    layout above) — one donation-free dispatch per buffer swap."""
+    C = len(CHANNELS)
+
+    def pack(*flat):
+        per = [_as_payloads(dict(zip(CHANNELS, flat[i * C:(i + 1) * C])))
+               for i in range(n)]
+
+        def cat(c, axis):
+            xs = [p[c] for p in per]
+            return xs[0] if n == 1 else jnp.concatenate(xs, axis=axis)
+
+        return {
+            "obs": cat("obs", 1),
+            "actions": cat("actions", 1),
+            "rewards": cat("rewards", 1),
+            "dones": cat("dones", 1),
+            "bootstrap": cat("bootstrap", 0).reshape(-1),
+            "actor_version": cat("actor_version", 0).reshape(-1),
+        }
+
+    return jax.jit(pack)
+
+
+def pack_generation(staged) -> Dict[str, jax.Array]:
+    """Pack a sequence of staged per-push payload dicts (oldest first)
+    into one generation's channel arrays, in a single dispatch."""
+    assert staged
+    flat = [p[c] for p in staged for c in CHANNELS]
+    return _generation_packer(len(staged))(*flat)

@@ -248,19 +248,67 @@ def make_drl_train_step(env, ppo_cfg=None, grad_sync_fn=None,
 
 
 def make_experience_pipeline(layout, batch_mode: str = "stack",
-                             batch_envs: Optional[int] = None):
+                             batch_envs: Optional[int] = None,
+                             overlap: bool = False):
     """Device-resident MCC pipeline wired from an async placement layout:
     ring slots sized to the layout's serving GMIs and the per-GMI GPU map
-    passed through so the Migrator can direct-forward same-GPU groups."""
+    passed through so the Migrator can direct-forward same-GPU groups.
+    ``overlap=True`` double-buffers the rings so a flush is a buffer swap
+    — serving GMIs keep packing while trainer GMIs consume the previous
+    flush (paper §4.1 serve/train overlap)."""
     from repro.core.channels import MultiChannelPipeline
     gmi_gpu = {g.gmi_id: g.gpu_id for g in layout.manager.gmis.values()}
     return MultiChannelPipeline(layout.serving_gmis, layout.trainer_gmis,
                                 gmi_gpu=gmi_gpu, batch_mode=batch_mode,
-                                batch_envs=batch_envs)
+                                batch_envs=batch_envs, overlap=overlap)
 
 
-def make_async_runner(env, layout, **kwargs):
-    """Async A3C driver over ``make_experience_pipeline(layout)``."""
+def make_online_controller(layout, num_env: int, controller_cfg=None):
+    """Online Algorithm-2 controller seeded from an async placement
+    layout: the live (serving_gpus, gmi_per_gpu, num_env) become the
+    first measured configuration; the controller then re-plans the
+    layout between training epochs from measured throughput and ring
+    occupancy (see ``repro.core.controller``)."""
+    from repro.core.controller import OnlineGMIController
+    gmis = layout.manager.gmis.values()
+    serving_gpus = {g.gpu_id for g in gmis if g.role == "serving"}
+    all_gpus = {g.gpu_id for g in gmis}
+    per_gpu: Dict[int, int] = {}
+    for g in gmis:
+        per_gpu[g.gpu_id] = per_gpu.get(g.gpu_id, 0) + 1
+    return OnlineGMIController(
+        num_gpu=len(all_gpus), serving_gpus=max(len(serving_gpus), 1),
+        gmi_per_gpu=max(per_gpu.values()), num_env=num_env,
+        cfg=controller_cfg)
+
+
+def make_async_runner(env, layout, overlap: bool = False,
+                      online_controller: bool = False,
+                      controller_cfg=None, **kwargs):
+    """Async A3C driver over ``make_experience_pipeline(layout)``.
+
+    ``overlap=True`` runs the double-buffered serve-while-train pipeline;
+    ``online_controller=True`` attaches an Algorithm-2 controller that
+    re-plans the GMI layout between training epochs from live stats."""
     from repro.rl.a3c import AsyncRunner
+    controller = None
+    layout_builder = None
+    if online_controller:
+        controller = make_online_controller(
+            layout, num_env=kwargs.get("num_envs", 64),
+            controller_cfg=controller_cfg)
+
+        def layout_builder(decision):
+            # re-plan inside the SAME device universe the seed layout
+            # was built over (may be synthetic ids in tests/benchmarks)
+            from repro.core.placement import plan_async
+            return plan_async(controller.num_gpu, decision.serving_gpus,
+                              decision.gmi_per_gpu,
+                              devices=layout.manager.devices,
+                              devices_per_gpu=layout.manager.devices_per_gpu)
+
     return AsyncRunner(env, layout.serving_gmis, layout.trainer_gmis,
-                       pipeline=make_experience_pipeline(layout), **kwargs)
+                       pipeline=make_experience_pipeline(layout,
+                                                         overlap=overlap),
+                       overlap=overlap, controller=controller,
+                       layout_builder=layout_builder, **kwargs)

@@ -90,35 +90,79 @@ class AsyncRunner:
     batch advances the parameter version.  The per-GMI GPU map from the
     placement layout is what lets the Migrator direct-forward same-GPU
     groups instead of funneling every flush to one trainer.
+
+    ``overlap=True`` double-buffers the rings (paper §4.1): ``flush``
+    swaps buffers instead of waiting, so each round trains on the
+    PREVIOUS round's experience while this round's pushes are still
+    materializing in the front halves — serving never stalls behind the
+    trainer.  Call :meth:`finish` when done so the in-flight tail is
+    trained on too (``trained_samples`` catches up to ``predictions``
+    there, at the cost of one extra staleness step on the tail).
+
+    An attached :class:`~repro.core.controller.OnlineGMIController`
+    observes every round (throughput, ring occupancy, spills) and may
+    hand back a re-plan between epochs; :meth:`replan` applies it by
+    draining the old pipeline (lossless across the re-plan), rebuilding
+    pipeline + actors under the new layout, and keeping model state.
     """
 
     def __init__(self, env, serving_gmis, trainer_gmis, *, gmi_gpu=None,
                  num_envs: int = 64, num_steps: int = 16, seed: int = 0,
-                 lr: float = 3e-4, pipeline=None):
+                 lr: float = 3e-4, pipeline=None, overlap: bool = False,
+                 controller=None, layout_builder=None):
         from repro.core.channels import MultiChannelPipeline
         from repro.models.policy import init_policy
         from repro.optim import adam_init
 
         self.env = env
         self.num_steps = num_steps
+        self.num_envs = num_envs
         self.serving_gmis = list(serving_gmis)
         self.lr = lr
+        self.seed = seed
+        self.overlap = overlap
+        self.controller = controller
+        self.layout_builder = layout_builder
         self.pipe = pipeline or MultiChannelPipeline(
-            serving_gmis, trainer_gmis, gmi_gpu=gmi_gpu)
+            serving_gmis, trainer_gmis, gmi_gpu=gmi_gpu, overlap=overlap)
         self.params = init_policy(jax.random.key(seed), env.spec.policy_dims)
         self.opt_state = adam_init(self.params)
         self.actor_params = self.params        # stale snapshot
         self.version = jnp.int32(0)
         self.actors = {}
-        for a in self.serving_gmis:
-            es, obs = env.reset(jax.random.PRNGKey(seed + a),
-                                num_envs=num_envs)
-            self.actors[a] = [es, obs, jax.random.PRNGKey(seed + 100 + a)]
+        self._reset_actors()
         self.predictions = 0
         self.trained_samples = 0
+        self.replans = 0
+
+    def _reset_actors(self):
+        self.actors = {}
+        for a in self.serving_gmis:
+            es, obs = self.env.reset(jax.random.PRNGKey(self.seed + a),
+                                     num_envs=self.num_envs)
+            self.actors[a] = [es, obs,
+                              jax.random.PRNGKey(self.seed + 100 + a)]
+
+    def _train(self, routed):
+        """Consume routed trainer batches; returns (losses, staleness)."""
+        losses, stale = [], []
+        for _, batches in routed.items():
+            for exp in batches:
+                stale.append(int(staleness(self.version, exp)))
+                self.params, self.opt_state, loss = trainer_update(
+                    self.params, self.opt_state, exp, lr=self.lr)
+                losses.append(float(loss))
+                self.trained_samples += int(exp.rewards.size)
+                self.version = self.version + 1
+        return losses, stale
 
     def round(self):
-        """One serve -> ship -> train round; returns (losses, staleness)."""
+        """One serve -> ship -> train round; returns (losses, staleness).
+
+        With overlap on, the trained batches are the previous round's
+        flush (the first round returns no losses)."""
+        import time
+        t0 = time.perf_counter()
         for a in self.serving_gmis:
             es, obs, k = self.actors[a]
             exp, es, obs, k = actor_collect(
@@ -127,14 +171,43 @@ class AsyncRunner:
             self.actors[a] = [es, obs, k]
             self.predictions += int(exp.rewards.size)
             self.pipe.push(a, exp)
-        losses, stale = [], []
-        for _, batches in self.pipe.flush().items():
-            for exp in batches:
-                stale.append(int(staleness(self.version, exp)))
-                self.params, self.opt_state, loss = trainer_update(
-                    self.params, self.opt_state, exp, lr=self.lr)
-                losses.append(float(loss))
-                self.trained_samples += int(exp.rewards.size)
-                self.version = self.version + 1
+        before = self.trained_samples
+        losses, stale = self._train(self.pipe.flush())
         self.actor_params = self.params        # model push AFTER acting
+        if self.controller is not None:
+            decision = self.controller.observe_pipeline(
+                self.pipe, samples=self.trained_samples - before,
+                dt=time.perf_counter() - t0)
+            if decision is not None:
+                self.replan(decision)
         return losses, stale
+
+    def finish(self):
+        """Drain the pipeline (both buffer halves in overlap mode) and
+        train on the tail; returns (losses, staleness)."""
+        losses, stale = self._train(self.pipe.drain())
+        self.actor_params = self.params
+        return losses, stale
+
+    def replan(self, decision):
+        """Apply a controller Decision between epochs: drain + train on
+        everything still buffered (nothing is lost across the re-plan),
+        then rebuild the pipeline — carrying the old pipeline's batching
+        /ring/backend configuration — and the actors under the new
+        layout.  Model parameters, optimizer state, and version persist."""
+        if not hasattr(self.pipe, "clone_for"):
+            raise TypeError(
+                f"online re-planning needs a pipeline with clone_for "
+                f"(MultiChannelPipeline), got {type(self.pipe).__name__}")
+        self._train(self.pipe.drain())
+        layout = (self.layout_builder(decision) if self.layout_builder
+                  else self.controller.plan_layout())
+        gmi_gpu = {g.gmi_id: g.gpu_id for g in layout.manager.gmis.values()}
+        self.serving_gmis = list(layout.serving_gmis)
+        self.pipe = self.pipe.clone_for(layout.serving_gmis,
+                                        layout.trainer_gmis, gmi_gpu=gmi_gpu)
+        self.num_envs = int(decision.num_env)
+        self._reset_actors()
+        self.actor_params = self.params
+        self.replans += 1
+        return layout

@@ -95,7 +95,11 @@ def check_gmi_instance_mesh():
         mgr.add_gmi(gid, "trainer", 0.5)
         mgr.set_gpu(gid, gpu)
     mesh = mgr.instance_mesh("trainer")
-    assert mesh.devices.shape == (2, 2)
+    # 2-device GMIs contribute BOTH chips along the trailing "dev" axis
+    # (the old mesh silently kept only device_ids[0] of each instance)
+    assert mesh.axis_names == ("gpu", "inst", "dev")
+    assert mesh.devices.shape == (2, 2, 2)
+    assert len({d.id for d in mesh.devices.reshape(-1)}) == 8
     sub = mgr.submesh(0)
     assert sub.devices.size == 2
     print("gmi meshes ok")

@@ -198,6 +198,158 @@ def test_pipeline_lossless_when_pushes_outrun_flushes():
     assert pipe.flush() == {}                 # fully drained
 
 
+# ------------------------------------------------- double-buffered rings ---
+def _bases_of(batches, N=6):
+    """Recover the per-push base ids from delivered batches, in delivery
+    order (push base b writes rewards[0, 0] == b in its column block)."""
+    out = []
+    for b in batches:
+        r = np.asarray(b.rewards)
+        for j in range(r.shape[1] // N):
+            out.append(float(r[0, j * N]))
+    return out
+
+
+def _deliver(out):
+    return [b for _, bs in sorted(out.items()) for b in bs]
+
+
+def test_double_ring_swap_then_push_does_not_corrupt_snapshot():
+    """Pushes after a swap land in the other buffer half: the swapped-out
+    snapshot must stay intact even after the ring wraps again."""
+    ring = ChannelRing(slots=2, double_buffered=True)
+    ring.append(_exp(base=1.0, version=1))
+    ring.append(_exp(base=2.0, version=2))
+    snap = ring.snapshot()                 # swap: back half = pushes 1, 2
+    for i, base in enumerate((3.0, 4.0, 5.0)):   # front half + wrap
+        if ring.count == ring.slots:
+            ring.snapshot()                # swap back onto the first half
+        ring.append(_exp(base=base, version=3 + i))
+    np.testing.assert_array_equal(np.asarray(snap["rewards"][:, :6]),
+                                  np.asarray(_exp(base=1.0).rewards))
+    np.testing.assert_array_equal(np.asarray(snap["rewards"][:, 6:]),
+                                  np.asarray(_exp(base=2.0).rewards))
+    np.testing.assert_array_equal(np.asarray(snap["actor_version"]), [1, 2])
+
+
+def test_double_ring_pallas_interpret_matches_xla():
+    a = ChannelRing(slots=2, double_buffered=True, use_pallas=True,
+                    interpret=True)
+    b = ChannelRing(slots=2, double_buffered=True, use_pallas=False)
+    snaps_a, snaps_b = [], []
+    for i in range(6):                     # crosses swaps and wraps
+        e = _exp(base=float(i), version=i)
+        a.append(e)
+        b.append(e)
+        if i % 2 == 1:
+            snaps_a.append(a.snapshot())
+            snaps_b.append(b.snapshot())
+    for ca, cb in zip(snaps_a, snaps_b):
+        for c in CHANNELS:
+            np.testing.assert_array_equal(np.asarray(ca[c]),
+                                          np.asarray(cb[c]))
+
+
+def test_overlap_flush_is_one_round_delayed_and_drain_recovers_tail():
+    pipe = MultiChannelPipeline([0], [9], overlap=True)
+    pipe.push(0, _exp(base=1.0, version=1))
+    assert pipe.flush() == {}              # swap parked, nothing in flight
+    pipe.push(0, _exp(base=2.0, version=2))
+    out = pipe.flush()                     # delivers round 1
+    assert _bases_of(_deliver(out)) == [1.0]
+    tail = pipe.drain()                    # delivers round 2
+    assert _bases_of(_deliver(tail)) == [2.0]
+    assert pipe.drain() == {}              # fully drained
+
+
+def test_overlap_spill_ordering_preserved_across_swap():
+    """1-slot ring: three pushes in one round spill twice; the spills must
+    be delivered before the swapped buffer, in push order."""
+    pipe = MultiChannelPipeline([0], [9], overlap=True)
+    for i, base in enumerate((1.0, 2.0, 3.0)):
+        pipe.push(0, _exp(base=base, version=i + 1))
+    assert pipe.spill_count == 2
+    assert pipe.flush() == {}              # everything parked in flight
+    out = pipe.drain()
+    assert _bases_of(_deliver(out)) == [1.0, 2.0, 3.0]
+
+
+def test_overlap_interleaved_schedules_no_loss_no_dup():
+    """Pushes landing mid-consume are never lost or duplicated under an
+    interleaved push/flush schedule (skipped flushes, bursts > ring
+    capacity, trailing pushes)."""
+    schedule = [1, 0, 3, 2, 0, 0, 5, 1]    # pushes per round (2-slot ring)
+    blocking = MultiChannelPipeline([0, 1], [9])
+    overlap = MultiChannelPipeline([0, 1], [9], overlap=True)
+    base = 0.0
+    pushed, got_b, got_o = [], [], []
+    for r, n in enumerate(schedule):
+        for i in range(n):
+            base += 1.0
+            e = _exp(base=base, version=int(base))
+            pushed.append(base)
+            blocking.push(i % 2, e)
+            overlap.push(i % 2, e)
+        if r % 3 != 2:                     # flush most rounds, not all
+            got_b += _bases_of(_deliver(blocking.flush()))
+            got_o += _bases_of(_deliver(overlap.flush()))
+    got_b += _bases_of(_deliver(blocking.drain()))
+    got_o += _bases_of(_deliver(overlap.drain()))
+    assert sorted(got_o) == sorted(pushed)          # no loss, no dup
+    assert got_o == got_b                           # same delivery stream
+    assert overlap.delivered_samples == blocking.delivered_samples
+
+
+def test_overlap_matches_host_staged_sample_stream():
+    """HostStagedPipeline and the double-buffered ring deliver identical
+    per-push payloads (content, not just ids) over interleaved rounds."""
+    host = HostStagedPipeline([0, 1], [5])
+    over = MultiChannelPipeline([0, 1], [5], overlap=True)
+    N = 6
+    pushed = {}
+    v = 0
+    host_stream, over_stream = [], []
+
+    def split(batches):
+        out = []
+        for b in batches:
+            r = np.asarray(b.rewards)
+            for j in range(r.shape[1] // N):
+                sl = slice(j * N, (j + 1) * N)
+                out.append((float(r[0, j * N]),
+                            r[:, sl], np.asarray(b.obs)[:, sl]))
+        return out
+
+    for r in range(4):
+        for a in range(2):
+            v += 1
+            e = _exp(base=float(v), version=v)
+            pushed[float(v)] = (np.asarray(e.rewards), np.asarray(e.obs))
+            host.push(a, e)
+            over.push(a, e)
+        host_stream += split(_deliver(host.flush()))
+        over_stream += split(_deliver(over.flush()))
+    host_stream += split(_deliver(host.drain()))
+    over_stream += split(_deliver(over.drain()))
+    assert [b for b, *_ in over_stream] == [b for b, *_ in host_stream]
+    for b, rew, obs in over_stream:
+        np.testing.assert_array_equal(rew, pushed[b][0])
+        np.testing.assert_array_equal(obs, pushed[b][1])
+
+
+def test_occupancy_high_water_and_spill_counters():
+    pipe = MultiChannelPipeline([0, 1], [9], overlap=True)  # 2-slot ring
+    pipe.push(0, _exp(base=1.0))
+    assert pipe.ring_occupancy() == 0.5
+    pipe.push(1, _exp(base=2.0))
+    pipe.push(0, _exp(base=3.0))                      # spill + repush
+    assert pipe.spill_count == 1
+    assert pipe.take_occupancy_high_water() == 1.0
+    assert pipe.occupancy_high_water == 0.0           # mark reset
+    pipe.flush()
+    assert pipe.ring_occupancy() == 0.0               # swapped out
+
+
 def test_ring_mcc_matches_host_staged_payloads():
     """Device-resident and host-staged MCC must deliver identical bytes
     and identical TransferStats."""

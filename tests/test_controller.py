@@ -1,0 +1,219 @@
+"""Online GMI controller (runtime Algorithm 2): decision rules, the
+explore() feedback loop over measured profiles, and the AsyncRunner
+re-plan integration."""
+import numpy as np
+import pytest
+
+from repro.core.controller import (ControllerConfig, Decision,
+                                   OnlineGMIController, RoundSample)
+from repro.core.selection import ProfilePoint
+
+
+def _sample(samples=1000, dt=0.1, occ=0.5, spills=0, mem=1e6):
+    return RoundSample(samples=samples, dt=dt, occupancy=occ,
+                       spills=spills, mem_bytes=mem)
+
+
+def _ctrl(**kw):
+    cfg_kw = kw.pop("cfg_kw", {})
+    defaults = dict(num_gpu=4, serving_gpus=2, gmi_per_gpu=2, num_env=512)
+    defaults.update(kw)
+    return OnlineGMIController(cfg=ControllerConfig(**cfg_kw), **defaults)
+
+
+def test_no_decision_before_epoch_boundary():
+    c = _ctrl(cfg_kw=dict(epoch_rounds=3))
+    assert c.record(_sample()) is None
+    assert c.record(_sample()) is None  # boundary at 3, not 2
+
+
+def test_ring_pressure_shifts_gpu_to_training():
+    c = _ctrl(cfg_kw=dict(epoch_rounds=1, probe=False))
+    d = c.record(_sample(occ=1.0, spills=2))
+    assert isinstance(d, Decision)
+    assert d.serving_gpus == 1 and c.serving_gpus == 1
+    assert "ring pressure" in d.reason
+
+
+def test_ring_pressure_never_drops_last_serving_gpu():
+    c = _ctrl(serving_gpus=1, cfg_kw=dict(epoch_rounds=1, probe=False,
+                                          occ_low=0.0))
+    assert c.record(_sample(occ=1.0, spills=5)) is None
+    assert c.serving_gpus == 1
+
+
+def test_exactly_full_ring_without_spills_is_not_pressure():
+    """A group-sized ring filled once per round reads occupancy 1.0 —
+    the healthy interleaved pattern, not overflow.  Only spills move a
+    GPU to the training side."""
+    c = _ctrl(cfg_kw=dict(epoch_rounds=1, probe=False))
+    assert c.record(_sample(occ=1.0, spills=0)) is None
+    assert c.serving_gpus == 2
+
+
+def test_trainer_starvation_shifts_gpu_to_serving():
+    c = _ctrl(serving_gpus=1, cfg_kw=dict(epoch_rounds=1, probe=False))
+    d = c.record(_sample(occ=0.05))
+    assert d is not None and d.serving_gpus == 2
+    assert "starvation" in d.reason
+
+
+def test_probe_walks_num_env_ladder_then_stops_at_saturation():
+    c = _ctrl(num_gpu=2, serving_gpus=1, cfg_kw=dict(epoch_rounds=1))
+    d1 = c.record(_sample(samples=4000))         # (2, 512) measured
+    assert d1 is not None and d1.num_env == 1024 and "probe" in d1.reason
+    d2 = c.record(_sample(samples=2000, mem=2e6))  # 1024 measured WORSE
+    assert d2 is not None and d2.num_env == 512    # falls back to optimum
+    assert "measured optimum" in d2.reason
+    # ladder turned down above us: no further probes, steady state
+    assert c.record(_sample(samples=4000)) is None
+
+
+def test_hysteresis_ignores_marginal_gains():
+    c = _ctrl(num_gpu=2, serving_gpus=1,
+              cfg_kw=dict(epoch_rounds=1, probe=False, min_gain=1.5))
+    c.record(_sample(samples=4000))
+    c.num_env = 1024                              # pretend we moved
+    c.record(_sample(samples=4400, mem=2e6))      # 1.1x at 1024: < min_gain
+    c.num_env = 512
+    assert c.record(_sample(samples=4000)) is None
+
+
+def test_recorded_profile_feeds_explore_not_runnable_elsewhere():
+    c = _ctrl(cfg_kw=dict(epoch_rounds=1, probe=False))
+    c.record(_sample(samples=4000))
+    prof = c.recorded_profile()
+    p = prof("live", 2, 512)
+    assert p.runnable and p.throughput > 0
+    assert not prof("live", 2, 1024).runnable     # never extrapolates
+    assert not prof("live", 1, 512).runnable
+
+
+def test_running_mean_over_epochs():
+    c = _ctrl(cfg_kw=dict(epoch_rounds=1, probe=False, occ_low=0.0))
+    c.record(_sample(samples=1000, dt=1.0))
+    c.record(_sample(samples=3000, dt=1.0))
+    rec = c._table[(2, 512)]
+    assert rec.epochs == 2
+    n_inst = 2 * 2
+    np.testing.assert_allclose(rec.point.throughput, 2000.0 / n_inst)
+
+
+def test_observe_pipeline_deltas_and_replan_mark_reset():
+    from repro.core.channels import MultiChannelPipeline
+    from repro.rl.a3c import Experience
+    import jax.numpy as jnp
+
+    def exp(v):
+        return Experience(obs=jnp.zeros((2, 4, 3)),
+                          actions=jnp.zeros((2, 4, 2)),
+                          rewards=jnp.zeros((2, 4)), dones=jnp.zeros((2, 4)),
+                          bootstrap=jnp.zeros((4,)),
+                          actor_version=jnp.int32(v))
+
+    c = _ctrl(cfg_kw=dict(epoch_rounds=10))       # never hits a boundary
+    pipe = MultiChannelPipeline([0], [9], overlap=True)
+    pipe.push(0, exp(0))
+    pipe.push(0, exp(1))                          # spill (1-slot ring)
+    pipe.flush()
+    assert c.observe_pipeline(pipe, samples=8, dt=0.1) is None
+    assert c._epoch[-1].spills == 1
+    assert c._epoch[-1].occupancy == 1.0
+    # a fresh pipeline (post-replan) must not produce negative deltas
+    pipe2 = MultiChannelPipeline([0], [9], overlap=True)
+    pipe2.push(0, exp(2))
+    pipe2.flush()
+    c.observe_pipeline(pipe2, samples=8, dt=0.1)
+    assert c._epoch[-1].spills == 0
+
+
+def test_plan_layout_respects_decision_state():
+    c = _ctrl(cfg_kw=dict(epoch_rounds=1, probe=False))
+    c.record(_sample(occ=1.0, spills=1))          # serving 2 -> 1
+    layout = c.plan_layout(devices=list(range(8)), devices_per_gpu=2)
+    assert layout.name == "async"
+    assert len(layout.serving_gmis) == 1 * 2      # 1 serving GPU x 2 GMIs
+    assert len(layout.trainer_gmis) == 3 * 2
+
+
+def test_async_runner_probe_replans_and_stays_lossless():
+    """The organic online-Alg.2 path in the round-interleaved runner:
+    the first epoch measures the live config, the controller probes the
+    next num_env up its ladder, the runner re-plans (env restart, model
+    state kept), and accounting stays lossless across the re-plan."""
+    from repro.core.placement import plan_async
+    from repro.envs import make_env
+    from repro.launch.steps import make_async_runner
+
+    layout = plan_async(4, 2, 2, devices=list(range(8)), devices_per_gpu=2)
+    env = make_env("Ant")
+    runner = make_async_runner(
+        env, layout, overlap=True, online_controller=True,
+        controller_cfg=ControllerConfig(epoch_rounds=2, occ_low=0.0,
+                                        num_env_sweep=(8, 16)),
+        num_envs=8, num_steps=4)
+    losses = []
+    for _ in range(6):
+        ls, stale = runner.round()
+        losses += ls
+        assert all(s >= 0 for s in stale)
+    ls, _ = runner.finish()
+    losses += ls
+    assert runner.replans >= 1
+    # probed up the ladder; may legitimately fall back if 16 measured
+    # worse on this host
+    assert runner.num_envs in (8, 16)
+    assert any("probe" in d.reason for d in runner.controller.decisions)
+    assert runner.trained_samples == runner.predictions   # nothing dropped
+    assert losses and all(np.isfinite(losses))
+    assert (2, 16) in runner.controller._table            # probe measured
+
+
+def test_replan_preserves_pipeline_configuration():
+    """Regression: replan used to rebuild a default MultiChannelPipeline,
+    silently dropping batch_mode/batch_envs/ring/backend settings."""
+    from repro.core.channels import HostStagedPipeline, MultiChannelPipeline
+    from repro.envs import make_env
+    from repro.rl.a3c import AsyncRunner
+
+    env = make_env("Ant")
+    pipe = MultiChannelPipeline([0, 1], [100], batch_mode="slice",
+                                batch_envs=4, ring_slots=3,
+                                use_pallas=False, overlap=True)
+    c = _ctrl(num_gpu=2, serving_gpus=1,
+              cfg_kw=dict(epoch_rounds=1, probe=False))
+    runner = AsyncRunner(env, [0, 1], [100], num_envs=8, num_steps=4,
+                         overlap=True, pipeline=pipe, controller=c,
+                         layout_builder=lambda d: c.plan_layout(
+                             devices=list(range(4)), devices_per_gpu=2))
+    runner.replan(Decision(num_env=8, gmi_per_gpu=2, serving_gpus=1,
+                           projected_throughput=0.0, reason="test"))
+    new = runner.pipe
+    assert new is not pipe
+    b = next(iter(new.batchers.values()))
+    assert (b.mode, b.batch_envs) == ("slice", 4)
+    assert new.ring_slots == 3 and new.use_pallas is False
+    assert new.overlap is True
+
+    runner.pipe = HostStagedPipeline([0, 1], [100])
+    with pytest.raises(TypeError, match="clone_for"):
+        runner.replan(Decision(num_env=8, gmi_per_gpu=2, serving_gpus=1,
+                               projected_throughput=0.0, reason="test"))
+
+
+def test_async_runner_overlap_without_controller_trains_round_behind():
+    from repro.envs import make_env
+    from repro.rl.a3c import AsyncRunner
+
+    env = make_env("Ant")
+    runner = AsyncRunner(env, [0, 1], [100, 101],
+                         gmi_gpu={0: 0, 1: 1, 100: 0, 101: 1},
+                         num_envs=8, num_steps=4, overlap=True)
+    ls0, _ = runner.round()
+    assert ls0 == []                       # first flush: nothing in flight
+    ls1, stale1 = runner.round()
+    # trains on the PREVIOUS round's data: two groups collected at version
+    # 0, trained at versions 0 and 1 -> staleness climbs within the round
+    assert ls1 and min(stale1) >= 0 and max(stale1) >= 1
+    runner.finish()
+    assert runner.trained_samples == runner.predictions

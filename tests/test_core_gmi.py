@@ -98,3 +98,110 @@ def test_algorithm2_respects_runnability():
         return ProfilePoint(gpg == 1 and ne == 128, 10.0, 1.0)
     trace = explore(profile, "AT", num_gpu=1)
     assert trace.best_config == (128, 1)
+
+
+def test_algorithm2_saturation_with_shrinking_memory():
+    """Regression: when memory SHRINKS between sweep points while
+    throughput still grows, Sat used to explode to ±1e9·r_top via the
+    clamped denominator.  A throughput gain at no memory cost must never
+    prune — the sweep has to reach the highest-throughput point."""
+    mems = {128: 3e6, 256: 2e6, 512: 1e6}    # allocator slack: shrinking
+
+    def profile(bench, gpg, ne):
+        if gpg != 1 or ne not in mems:
+            return ProfilePoint(False, 0.0, 0.0)
+        return ProfilePoint(True, 100.0 * ne, mems[ne])
+
+    trace = explore(profile, "AT", num_gpu=1, gmi_per_gpu_range=(1,),
+                    num_env_sweep=(128, 256, 512))
+    assert trace.best_config == (512, 1)     # swept to the end
+    sats = [s for *_, s in trace.points]
+    assert sats[1] == float("inf") and sats[2] == float("inf")
+
+
+def test_algorithm2_flat_memory_no_gain_prunes_cleanly():
+    """Flat memory + no throughput gain must stop the sweep with a
+    well-defined Sat (-inf), not a ±1e9 artifact."""
+    def profile(bench, gpg, ne):
+        return ProfilePoint(gpg == 1, 100.0, 1e6)   # flat top, flat mem
+
+    trace = explore(profile, "AT", num_gpu=1, gmi_per_gpu_range=(1,),
+                    num_env_sweep=(128, 256, 512))
+    assert trace.best_config == (128, 1)
+    assert len(trace.points) == 2            # pruned right after point 2
+    assert trace.points[-1][-1] == float("-inf")
+
+
+def test_profiler_distinguishes_oom_from_genuine_bugs(monkeypatch):
+    """Resource exhaustion -> 'not runnable'; a shape bug must raise, not
+    be silently reported as an unrunnable config."""
+    from repro.core.selection import is_resource_exhausted, make_ppo_profiler
+
+    class FakeOOM(RuntimeError):
+        pass
+
+    assert is_resource_exhausted(MemoryError())
+    assert is_resource_exhausted(FakeOOM("RESOURCE_EXHAUSTED: while trying"))
+    assert is_resource_exhausted(FakeOOM("failed to allocate 2.1GiB"))
+    assert not is_resource_exhausted(ValueError("shape mismatch (3,) (4,)"))
+
+    def boom_oom(*a, **k):
+        raise FakeOOM("RESOURCE_EXHAUSTED: out of memory allocating arena")
+
+    monkeypatch.setattr("repro.rl.ppo.init_train", boom_oom)
+    prof = make_ppo_profiler(iters=1)("BallBalance", 1, 128)
+    assert not prof.runnable and prof.memory > 0
+
+    def boom_bug(*a, **k):
+        raise ValueError("operands could not be broadcast")
+
+    monkeypatch.setattr("repro.rl.ppo.init_train", boom_bug)
+    with pytest.raises(ValueError):
+        make_ppo_profiler(iters=1)("BallBalance", 1, 128)
+
+
+def test_instance_mesh_multi_device_keeps_all_chips():
+    """Regression: multi-device GMIs used to contribute only
+    device_ids[0] — a resized instance silently lost chips."""
+    mgr = GMIManager(devices=list(range(8)), devices_per_gpu=4)
+    for gid, gpu in [(0, 0), (1, 0), (2, 1), (3, 1)]:
+        mgr.add_gmi(gid, "trainer", 0.5)     # 2 devices each
+        mgr.set_gpu(gid, gpu)
+    mesh = mgr.instance_mesh("trainer")
+    assert mesh.axis_names == ("gpu", "inst", "dev")
+    assert mesh.devices.shape == (2, 2, 2)
+    assert sorted(mesh.devices.reshape(-1).tolist()) == list(range(8))
+
+
+def test_lgr_allreduce_rejects_multi_device_instance_mesh():
+    """The (gpu, inst, dev) meshes instance_mesh builds for multi-device
+    GMIs are not reducible by the 2-axis LGR schedules yet — they must
+    be rejected loudly, not mis-reduced over the first chip only."""
+    import jax.numpy as jnp
+    from repro.core.lgr import lgr_allreduce
+
+    mgr = GMIManager(devices=list(range(8)), devices_per_gpu=4)
+    for gid, gpu in [(0, 0), (1, 0), (2, 1), (3, 1)]:
+        mgr.add_gmi(gid, "trainer", 0.5)
+        mgr.set_gpu(gid, gpu)
+    mesh = mgr.instance_mesh("trainer")
+    with pytest.raises(ValueError, match="2-axis"):
+        lgr_allreduce({"w": jnp.ones((2, 2, 3))}, mesh, "mrr")
+
+
+def test_instance_mesh_rejects_mixed_device_counts():
+    mgr = GMIManager(devices=list(range(8)), devices_per_gpu=4)
+    mgr.add_gmi(0, "trainer", 0.5)           # 2 devices
+    mgr.set_gpu(0, 0)
+    mgr.add_gmi(1, "trainer", 0.25)          # 1 device
+    mgr.set_gpu(1, 1)
+    with pytest.raises(ValueError, match="uniform"):
+        mgr.instance_mesh("trainer")
+
+
+def test_serving_only_layout_has_no_reduction_strategy():
+    tcg = plan_tcg_serving(2, 2, devices=list(range(8)), devices_per_gpu=4)
+    assert tcg.mpl == []
+    assert tcg.reduction_strategy() is None
+    with pytest.raises(ValueError, match="no trainer"):
+        select_reduction_strategy([])
