@@ -12,8 +12,8 @@
 #   bench_kernels        — Pallas kernels (interpret-mode correctness cost)
 #   roofline             — §Roofline terms from the dry-run artifacts
 #
-# ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels,
-# interpret mode on CPU), writes BENCH_mcc.json / BENCH_kernels.json so
+# ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels
+# + bench_lgr, interpret mode on CPU), writes BENCH_*.json artifacts so
 # future PRs have before/after numbers to diff against, and FAILS (exit 1)
 # when any row regresses more than REGRESSION_FACTOR against the committed
 # baseline — the perf trajectory is enforced, not advisory.  Re-baselining
@@ -92,8 +92,9 @@ def main() -> None:
     quick = "--quick" in sys.argv[1:]
     only = args[0].split(",") if args else None
     if quick and only is None:
-        only = ["mcc", "kernels"]   # an explicit selection wins; --quick
-                                    # then only adds the JSON artifacts
+        only = ["mcc", "kernels", "lgr"]   # an explicit selection wins;
+                                           # --quick then only adds the
+                                           # JSON artifacts
     allow_regression = bool(os.environ.get("BENCH_ALLOW_REGRESSION"))
     failed = []
     regressions = []

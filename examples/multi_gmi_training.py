@@ -37,14 +37,18 @@ def main():
           f"(projected {trace.best_throughput:,.0f} steps/s, "
           f"{len(trace.points)} profile points)")
 
-    # 2) TCG_EX layout + 3) Algorithm 1 strategy
+    # 2) TCG_EX layout + 3) Algorithm 1 strategy, owned by the layout's
+    #    Communicator (repro.comm): mesh + strategy + grad-sync in one
+    #    object, re-selectable online from measured reduce times
     layout = plan_tcg_ex_training(
         args.num_gpus, gmi_per_gpu,
         devices=list(range(args.num_gpus * gmi_per_gpu)),
         devices_per_gpu=gmi_per_gpu)
-    strat = layout.reduction_strategy()
+    comm = layout.communicator()
+    strat = comm.strategy
     print(layout.manager.summary())
-    print(f"Algorithm 1 gradient-reduction strategy: {strat.upper()}")
+    print(f"Algorithm 1 gradient-reduction strategy: {strat.upper()} "
+          f"(grid {comm.grid})")
 
     # 4) train
     env = make_env(args.env)

@@ -1,0 +1,20 @@
+"""repro.comm — the unified communication subsystem (paper §4.1).
+
+Public surface:
+
+* schedules — N-level LGR reduction schedules (``lgr_allreduce``,
+  ``make_grad_sync``, ``flat_psum``, ``hierarchical_psum``, ``mpr_host``)
+  over 2-axis (gpu, inst) and 3-axis (gpu, inst, dev) instance meshes;
+* select — Algorithm-1 shape selection with an optional Table-2
+  ``ReduceCostModel`` layered on top (``select_reduction_strategy``);
+* api — the :class:`Communicator` object every training layer consumes
+  instead of string-passing strategy names.
+
+``repro.core.lgr`` remains as a thin deprecation shim over this package.
+"""
+from repro.comm.api import Communicator, as_grad_sync  # noqa: F401
+from repro.comm.schedules import (STRATEGIES, flat_psum,  # noqa: F401
+                                  hierarchical_psum, lgr_allreduce,
+                                  make_grad_sync, mpr_host)
+from repro.comm.select import (ReduceCostModel, algorithm1,  # noqa: F401
+                               select_reduction_strategy)

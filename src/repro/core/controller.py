@@ -28,7 +28,15 @@ running against *live* measurements.  This controller closes that loop:
   exploitation);
 * a re-plan is only emitted when the projected system throughput of the
   winning config beats the live config by ``min_gain`` (hysteresis —
-  re-planning drains rings and resets environments, it is not free).
+  re-planning drains rings and resets environments, it is not free);
+* with an attached :class:`repro.comm.Communicator`, the reduction
+  strategy joins the re-plan loop: measured per-round reduce times flow
+  into the communicator (``RoundSample.reduce_s`` or direct
+  ``Communicator.observe`` calls from the runner), and when
+  ``propose_switch`` says the measured time disagrees with the current
+  choice by more than the same ``min_gain`` hysteresis, the decision
+  carries a ``reduction_strategy`` — applied by ``AsyncRunner.replan``
+  as pure communication plumbing (model/optimizer state untouched).
 
 ``plan_layout`` materializes the current decision as a
 ``placement.plan_async`` layout so the runner can rebuild its pipeline
@@ -61,6 +69,7 @@ class RoundSample:
     occupancy: float               # ring fill high-water during the round
     spills: int                    # ring-overflow spills during the round
     mem_bytes: float               # bytes moved (memory-pressure proxy)
+    reduce_s: float = 0.0          # measured gradient-reduce seconds
 
 
 @dataclass
@@ -71,6 +80,14 @@ class Decision:
     serving_gpus: int
     projected_throughput: float
     reason: str
+    # set when the measured reduce time says the LGR schedule should
+    # change; applied by the runner via Communicator.switch (no model
+    # state involved)
+    reduction_strategy: Optional[str] = None
+    # False when ONLY the reduction strategy moved: the runner then
+    # switches the communicator in place instead of paying the full
+    # drain-and-rebuild re-plan
+    layout_changed: bool = True
 
 
 @dataclass
@@ -84,7 +101,8 @@ class OnlineGMIController:
     GMI layout between training epochs."""
 
     def __init__(self, num_gpu: int, serving_gpus: int, gmi_per_gpu: int,
-                 num_env: int, cfg: Optional[ControllerConfig] = None):
+                 num_env: int, cfg: Optional[ControllerConfig] = None,
+                 communicator=None):
         if not (1 <= serving_gpus < num_gpu):
             raise ValueError("need 1 <= serving_gpus < num_gpu")
         self.num_gpu = int(num_gpu)
@@ -92,6 +110,7 @@ class OnlineGMIController:
         self.gmi_per_gpu = int(gmi_per_gpu)
         self.num_env = int(num_env)
         self.cfg = cfg or ControllerConfig()
+        self.communicator = communicator
         self._table: Dict[Tuple[int, int], _Recorded] = {}
         self._epoch: List[RoundSample] = []
         self._spill_mark = 0
@@ -120,6 +139,11 @@ class OnlineGMIController:
     def record(self, sample: RoundSample) -> Optional[Decision]:
         """Fold one round in; returns a Decision at epoch boundaries when
         the measured evidence says the layout should change."""
+        if self.communicator is not None and sample.reduce_s > 0.0:
+            # runners that time the sync closure themselves call
+            # Communicator.observe directly; this path serves external
+            # callers that only report RoundSamples
+            self.communicator.observe(sample.reduce_s)
         self._epoch.append(sample)
         if len(self._epoch) < self.cfg.epoch_rounds:
             return None
@@ -235,12 +259,32 @@ class OnlineGMIController:
                 reason = (f"probe num_env={probe} (ladder unmeasured, "
                           "saturation unknown)")
 
+        # 3. reduction strategy from measured reduce time: when the live
+        #    per-round reduce measurements disagree with the current LGR
+        #    choice by more than the same min_gain hysteresis, fold a
+        #    strategy switch into the re-plan (Table-2 cost model scaled
+        #    by the measured/modelled ratio — see Communicator)
+        reduction_strategy = None
+        if self.communicator is not None:
+            switch = self.communicator.propose_switch(cfg.min_gain)
+            if switch is not None:
+                reduction_strategy = switch
+                note = (f"measured reduce time favors {switch} over "
+                        f"{self.communicator.strategy} "
+                        f"(> {cfg.min_gain:.2f}x)")
+                reason = f"{reason}; {note}" if reason else note
+
         if reason is None:
             return None
+        layout_changed = (serving != self.serving_gpus
+                          or num_env != self.num_env
+                          or gmi_per_gpu != self.gmi_per_gpu)
         decision = Decision(num_env=num_env, gmi_per_gpu=gmi_per_gpu,
                             serving_gpus=serving,
                             projected_throughput=max(best_top, cur_top),
-                            reason=reason)
+                            reason=reason,
+                            reduction_strategy=reduction_strategy,
+                            layout_changed=layout_changed)
         self.num_env = num_env
         self.gmi_per_gpu = gmi_per_gpu
         self.serving_gpus = serving
@@ -262,6 +306,8 @@ class OnlineGMIController:
                  f"num_env={self.num_env}, "
                  f"measured={len(self._table)} configs, "
                  f"replans={len(self.decisions)})"]
+        if self.communicator is not None:
+            lines.append(f"  comm: {self.communicator!r}")
         for (gpg, ne), rec in sorted(self._table.items()):
             lines.append(f"  (gpg={gpg}, ne={ne}): "
                          f"top/inst={rec.point.throughput:.0f}/s "

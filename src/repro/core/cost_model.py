@@ -39,6 +39,18 @@ def lgr_time_har(g: int, t: int, M_p: float, B1: float, B2: float) -> float:
     return 2 * (g - 1) * M_p / (g * B2) + 2 * (t - 1) * M_p / (t * B1)
 
 
+def lgr_time_har3(g: int, t: int, d: int, M_p: float, B1: float,
+                  B2: float, B3: float) -> float:
+    """3-level HAR over a (gpu=g, inst=t, dev=d) grid: the dev-level
+    scatter/gather rides the fastest links (B3, intra-instance chips),
+    the inst level works on 1/d shards over B1, and the cross-GPU ring
+    works on 1/(t·d) shards over B2 — the Table-2 recurrence applied one
+    level deeper."""
+    return (2 * (d - 1) * M_p / (d * B3)
+            + 2 * (t - 1) * M_p / (d * t * B1)
+            + 2 * (g - 1) * M_p / (t * d * g * B2))
+
+
 LGR_TIMES = {"mpr": lgr_time_mpr, "mrr": lgr_time_mrr, "har": lgr_time_har}
 
 

@@ -162,6 +162,6 @@ class DRLRole:
         self.group = self.mgr.get_group(gmi_id, role)
 
     # communication primitives are provided by repro.core.channels /
-    # repro.core.lgr; subclasses implement the execution routine:
+    # repro.comm; subclasses implement the execution routine:
     def gmi_run(self, *args, **kwargs):
         raise NotImplementedError

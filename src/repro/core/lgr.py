@@ -1,129 +1,50 @@
-"""Layout-aware gradient reduction — LGR (paper §4.1).
+"""DEPRECATED shim — LGR moved to the ``repro.comm`` subsystem.
 
-Three schedules, selected by Algorithm 1 from the instance layout:
+The §4.1 communication support now lives in ``repro.comm``:
 
-* MPR  (multi-process reduction): stage every instance's gradient through
-  host memory and reduce on CPU — generic, layout-agnostic, slow (paper
-  Table 2: 2·(g·t−1)·Mp / (g·t·B1)).
-* MRR  (multi-ring reduction): one flat ring over all instances — maps to a
-  single ``psum`` over the merged mesh axes (paper: non-intersecting NCCL
-  rings + final ring; valid only when t ≤ g).
-* HAR  (hierarchical reduction): reduce within the fast domain first, then
-  across the slow domain on 1/t-sized shards, then gather — expressed as
-  ``psum_scatter(intra) → psum(inter) → all_gather(intra)``.  Each chip is
-  "leader" for its shard slice: cross-domain traffic drops t× (paper
-  Table 2: 2·(g−1)·Mp/(g·B2) + 2·(t−1)·Mp/(t·B1)).
+* schedules (MPR/MRR/HAR + the 3-level HAR3 over (gpu, inst, dev)
+  meshes): ``repro.comm.schedules``
+* Algorithm-1 / cost-model strategy selection: ``repro.comm.select``
+* the Communicator object layers consume: ``repro.comm.api``
 
-The same schedules serve two scales:
-  DRL GMIs   — intra axis = instances on one GPU, inter axis = GPUs;
-  LLM pods   — intra axis = 'data' (ICI), inter axis = 'pod' (DCN).
+This module re-exports the old surface with the old calling conventions
+(``make_grad_sync(strategy, intra_axis, inter_axis)`` returning raw-sum
+closures; ``lgr_allreduce`` averaging) so pre-existing imports keep
+working, and warns on import.  New code should import ``repro.comm``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Sequence
+import warnings
 
-import numpy as np
+from repro.comm.schedules import flat_psum, mpr_host  # noqa: F401
+from repro.comm.schedules import hierarchical_psum as _hierarchical_psum
+from repro.comm.schedules import lgr_allreduce as _lgr_allreduce
+from repro.comm.schedules import make_grad_sync as _make_grad_sync
 
-import jax
-import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-
-# ---------------------------------------------------------------- in-SPMD --
-def flat_psum(grads, axis_names):
-    """MRR analogue: one flat all-reduce over the merged axes."""
-    return jax.tree.map(lambda g: jax.lax.psum(g, axis_names), grads)
+warnings.warn(
+    "repro.core.lgr is deprecated: the LGR schedules now live in "
+    "repro.comm (which also handles the 3-axis (gpu, inst, dev) meshes "
+    "this module used to reject)", DeprecationWarning, stacklevel=2)
 
 
-def hierarchical_psum(grads, intra_axis: str, inter_axis: str):
-    """HAR: reduce_scatter(intra) -> psum(inter) -> all_gather(intra).
-
-    Operates leaf-wise on flattened gradients (padded to the intra axis
-    size) so arbitrary parameter shapes work.
-    """
-    # psum of a Python literal folds to the static axis size on every jax
-    # version this repo supports — the one call path that never probes.
-    intra = jax.lax.psum(1, intra_axis)
-
-    def one(g):
-        shape = g.shape
-        flat = g.reshape(-1)
-        n = flat.shape[0]
-        pad = (-n) % intra
-        flat = jnp.pad(flat, (0, pad))
-        shard = jax.lax.psum_scatter(flat.reshape(intra, -1), intra_axis,
-                                     scatter_dimension=0, tiled=False)
-        shard = jax.lax.psum(shard, inter_axis)
-        full = jax.lax.all_gather(shard, intra_axis, axis=0,
-                                  tiled=False).reshape(-1)
-        return full[:n].reshape(shape)
-
-    return jax.tree.map(one, grads)
+def hierarchical_psum(grads, intra_axis: str = "inst",
+                      inter_axis: str = "gpu"):
+    """Old 2-level signature over the generalized N-level schedule."""
+    return _hierarchical_psum(grads, (inter_axis, intra_axis))
 
 
 def make_grad_sync(strategy: str, intra_axis: str = "inst",
-                   inter_axis: str = "gpu") -> Callable:
-    """Gradient-sync function usable inside shard_map/pjit-SPMD bodies."""
-    if strategy == "mrr":
-        return functools.partial(flat_psum, axis_names=(inter_axis,
-                                                        intra_axis))
-    if strategy == "har":
-        return functools.partial(hierarchical_psum, intra_axis=intra_axis,
-                                 inter_axis=inter_axis)
-    if strategy == "mpr":
-        # inside an SPMD program MPR degenerates to a flat reduce; the true
-        # host-staged variant is ``mpr_host`` below (submesh backend).
-        return functools.partial(flat_psum, axis_names=(inter_axis,
-                                                        intra_axis))
-    raise ValueError(strategy)
+                   inter_axis: str = "gpu"):
+    """Old signature and old raw-sum semantics (callers divided
+    themselves); ``repro.comm.make_grad_sync`` averages by default."""
+    return _make_grad_sync(strategy, (inter_axis, intra_axis),
+                           average=False)
 
 
-# ------------------------------------------------------------- host-staged -
-def mpr_host(grads_per_instance: Sequence):
-    """True multi-process reduction for the submesh (MIG-like) backend:
-    every instance's gradients are pulled to host, averaged on CPU, and the
-    result is returned (to be device_put per instance by the caller).
-
-    This is the paper's generic-but-slow baseline: O(g·t) host transfers
-    and CPU-side arithmetic.
-    """
-    host_trees = [jax.tree.map(np.asarray, jax.device_get(g))
-                  for g in grads_per_instance]
-    n = len(host_trees)
-    return jax.tree.map(lambda *xs: sum(xs) / n, *host_trees)
-
-
-# -------------------------------------------------------------- shard_map --
-def lgr_allreduce(grads, mesh: Mesh, strategy: str,
-                  intra_axis: str = "inst", inter_axis: str = "gpu"):
-    """Run an LGR schedule over per-instance gradient replicas.
-
-    ``grads`` leaves must carry a leading (inter, intra) instance grid:
-    shape (g, t, ...) — one gradient per instance.  Returns the reduced
-    (averaged) gradient with the same leading grid (all replicas equal).
-    """
-    if mesh.devices.ndim != 2:
-        # GMIManager.instance_mesh returns a (gpu, inst, dev) grid for
-        # multi-device GMIs so resized instances can't silently lose
-        # chips; the LGR schedules below only reduce over (gpu, inst).
-        raise ValueError(
-            f"LGR schedules reduce over a 2-axis (gpu, inst) instance "
-            f"grid; got axes {mesh.axis_names}.  Multi-device GMIs need "
-            "a per-'dev' reduction first (ROADMAP open item) or the "
-            "mpr_host fallback.")
-    g_, t_ = mesh.devices.shape
-    sync = make_grad_sync(strategy, intra_axis, inter_axis)
-    ntot = g_ * t_
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(jax.tree.map(lambda _: P(inter_axis, intra_axis), grads),),
-        out_specs=jax.tree.map(lambda _: P(inter_axis, intra_axis), grads))
-    def run(gs):
-        local = jax.tree.map(lambda x: x[0, 0], gs)
-        red = sync(local)
-        return jax.tree.map(lambda x: (x / ntot)[None, None], red)
-
-    return run(grads)
+def lgr_allreduce(grads, mesh, strategy: str, intra_axis: str = "inst",
+                  inter_axis: str = "gpu"):
+    """Old signature (averaged, as before).  The axis-name arguments are
+    accepted for compatibility but the hierarchy is read off the mesh's
+    own axis order (slow → fast), exactly what the old implementation
+    required of its callers anyway."""
+    return _lgr_allreduce(grads, mesh, strategy)

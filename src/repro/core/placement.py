@@ -14,38 +14,11 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
+# Algorithm 1 now lives in the comm subsystem; re-exported here because
+# this module was its historical home and core/__init__ + callers import
+# it from placement.
+from repro.comm.select import select_reduction_strategy  # noqa: F401
 from repro.core.gmi import GMIManager
-
-
-# ----------------------------------------------------------- Algorithm 1 ---
-def select_reduction_strategy(mpl: List[List[int]]) -> str:
-    """Paper Algorithm 1, verbatim logic.
-
-    mpl[g] = list of (trainer) GMI ids on GPU g.
-    Returns one of "mpr" | "mrr" | "har".
-    """
-    if not mpl or not any(mpl):
-        # no trainer GMIs at all: there is no gradient to reduce, and
-        # answering "mpr" would let a serving-only layout silently wire
-        # up a reduction schedule
-        raise ValueError(
-            "empty MPL — a layout with no trainer GMIs has no reduction "
-            "strategy")
-    gmi_per_gpu = set()
-    # all GMIs on the same GPU -> plain multi-process reduction
-    if len(mpl) <= 1:
-        return "mpr"
-    for gmi_li in mpl:
-        gmi_per_gpu.add(len(gmi_li))
-    # different GPUs host different numbers of GMIs
-    if len(gmi_per_gpu) > 1:
-        return "har"
-    # more GMIs per GPU than GPUs: MRR's final ring would need >1 endpoint
-    # on one GPU ("multiple CUDA streams error" in NCCL; one ICI ring
-    # endpoint per chip here)
-    if gmi_per_gpu.pop() > len(mpl):
-        return "har"
-    return "mrr"
 
 
 # ------------------------------------------------------------- templates ---
@@ -63,13 +36,24 @@ class Layout:
         return self.manager.gmi_to_gpu_mapping("trainer") or \
             self.manager.gmi_to_gpu_mapping("holistic")
 
-    def reduction_strategy(self) -> Optional[str]:
-        """Algorithm 1 over this layout's trainer GMIs; ``None`` for a
-        serving-only layout — there is no gradient reduction to select."""
+    def reduction_strategy(self, cost_model=None) -> Optional[str]:
+        """Algorithm 1 over this layout's trainer GMIs (Table-2
+        cost-scored when a ``ReduceCostModel`` is supplied); ``None`` for
+        a serving-only layout — there is no gradient reduction to
+        select."""
         mpl = self.mpl
         if not mpl:
             return None
-        return select_reduction_strategy(mpl)
+        return select_reduction_strategy(mpl, cost_model)
+
+    def communicator(self, cost_model=None, *, average: bool = True,
+                     with_mesh: bool = False):
+        """This layout's :class:`repro.comm.Communicator` (``None`` for a
+        serving-only layout)."""
+        from repro.comm.api import Communicator
+        return Communicator.from_layout(self, cost_model=cost_model,
+                                        average=average,
+                                        with_mesh=with_mesh)
 
 
 def plan_tcg_serving(num_gpus: int, gmis_per_gpu: int,

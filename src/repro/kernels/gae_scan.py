@@ -1,4 +1,6 @@
-"""Fused GAE + advantage-normalization Pallas kernel.
+"""Fused GAE + advantage-normalization Pallas kernel, and its A3C
+sibling: the fused n-step discounted-return reverse scan
+(:func:`nstep_scan`).
 
 The PPO hot path runs generalized advantage estimation as an unfused
 ``lax.scan`` followed by a separate mean/std normalization — three HBM
@@ -76,3 +78,44 @@ def gae_scan(rewards, values, dones, last_value, *, gamma: float = 0.99,
         interpret=interpret,
     )(rewards.astype(f32), values.astype(f32), dones.astype(f32), last)
     return advs, rets
+
+
+# ------------------------------------------------------ A3C n-step scan ----
+def _nstep_kernel(r_ref, d_ref, boot_ref, ret_ref, *, gamma: float):
+    T = r_ref.shape[0]
+
+    def step(i, carry):
+        t = T - 1 - i
+        r = r_ref[pl.ds(t, 1), :]
+        nonterm = 1.0 - d_ref[pl.ds(t, 1), :]
+        g = r + gamma * carry * nonterm
+        ret_ref[pl.ds(t, 1), :] = g
+        return g
+
+    jax.lax.fori_loop(0, T, step, boot_ref[...])
+
+
+def nstep_scan(rewards, dones, bootstrap, *, gamma: float = 0.99,
+               interpret: bool = False):
+    """Fused A3C n-step discounted returns: the whole (T, N) trajectory
+    block stays in VMEM for the reverse scan
+    ``G_t = r_t + gamma * (1 - d_t) * G_{t+1}`` bootstrapped from the
+    actor's last value estimate.
+
+    rewards/dones: (T, N); bootstrap: (N,).  Returns (T, N) float32.
+    """
+    T, N = rewards.shape
+    f32 = jnp.float32
+    boot = jnp.asarray(bootstrap, f32).reshape(1, N)
+
+    def full(shape):
+        return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    return pl.pallas_call(
+        functools.partial(_nstep_kernel, gamma=gamma),
+        grid=(1,),
+        in_specs=[full((T, N)), full((T, N)), full((1, N))],
+        out_specs=full((T, N)),
+        out_shape=jax.ShapeDtypeStruct((T, N), f32),
+        interpret=interpret,
+    )(rewards.astype(f32), dones.astype(f32), boot)

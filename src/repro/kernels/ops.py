@@ -15,6 +15,7 @@ from repro.kernels.channel_pack import pack_channels as _pack
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.fused_policy_mlp import fused_policy_mlp as _mlp
 from repro.kernels.gae_scan import gae_scan as _gae
+from repro.kernels.gae_scan import nstep_scan as _nstep
 from repro.kernels.mlstm_scan import mlstm_chunkwise as _mlstm
 
 
@@ -54,6 +55,15 @@ def gae_norm(rewards, values, dones, last_value, *, gamma=0.99, lam=0.95,
     interp = _interpret_default() if interpret is None else interpret
     return _gae(rewards, values, dones, last_value, gamma=gamma, lam=lam,
                 eps=eps, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret"))
+def nstep_returns(rewards, dones, bootstrap, *, gamma=0.99, interpret=None):
+    """Fused A3C n-step discounted-return scan (see gae_scan.nstep_scan).
+
+    Returns the (T, N) f32 return block."""
+    interp = _interpret_default() if interpret is None else interpret
+    return _nstep(rewards, dones, bootstrap, gamma=gamma, interpret=interp)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),

@@ -65,6 +65,23 @@ def gae_norm_ref(rewards, values, dones, last_value, gamma: float = 0.99,
     return advs, returns
 
 
+def nstep_returns_ref(rewards, dones, bootstrap, gamma: float = 0.99):
+    """Fused n-step-return oracle: reverse discounted scan bootstrapped
+    from the last value.  rewards/dones: (T, N); bootstrap: (N,).
+    Returns (T, N) float32."""
+    r = rewards.astype(jnp.float32)
+    d = dones.astype(jnp.float32)
+
+    def step(carry, xs):
+        rt, dt = xs
+        g = rt + gamma * carry * (1.0 - dt)
+        return g, g
+
+    _, rets = jax.lax.scan(step, bootstrap.astype(jnp.float32), (r, d),
+                           reverse=True)
+    return rets
+
+
 def pack_channels_ref(bufs, payloads, slot):
     """Ring-pack oracle via functional .at[] updates (same layout as
     ``channel_pack``: slot-aligned columns / rows)."""

@@ -14,7 +14,10 @@ the layout determines the schedule —
   of its shard slice.  Cross-pod (DCN) bytes drop 16x.
 
 MPR (host-staged) is not expressible inside one HLO; it exists at the DRL
-layer (``repro.core.lgr.mpr_host``) where the paper applies it.
+layer (``repro.comm.mpr_host``) where the paper applies it.  The DRL
+builders below consume ``repro.comm.Communicator`` objects — the unified
+communication subsystem owning mesh + strategy + grad-sync — instead of
+string-passing schedule names.
 """
 from __future__ import annotations
 
@@ -232,19 +235,41 @@ def make_serve_step(cfg: ModelConfig, mesh, shape: InputShape,
 # the launcher (not the algorithm module) decides which hot path a step
 # compiles to and how the experience pipeline is laid out over GMIs.
 
+def make_communicator(layout, cost_model=None, *, average: bool = True,
+                      with_mesh: bool = False):
+    """The layout's ``repro.comm.Communicator``: instance grid off the
+    trainer MPL (incl. the trailing ``dev`` axis for multi-device GMIs),
+    strategy from Algorithm 1 — or Table-2 cost-scored when a
+    ``ReduceCostModel`` is supplied.  ``None`` for serving-only layouts."""
+    return layout.communicator(cost_model, average=average,
+                               with_mesh=with_mesh)
+
+
 def make_drl_train_step(env, ppo_cfg=None, grad_sync_fn=None,
-                        fused: Optional[bool] = None):
+                        fused: Optional[bool] = None, communicator=None):
     """Jitted sync-PPO iteration with the fused Pallas hot path on by
     default: the gae_scan kernel (GAE + advantage normalization in one
     VMEM pass) and single-gather minibatch shuffling.  An explicit
     ``ppo_cfg`` keeps its own ``use_fused_kernels`` unless ``fused``
-    explicitly overrides it."""
+    explicitly overrides it.  Gradient sync comes from ``communicator``
+    (a ``repro.comm.Communicator``) when given, else ``grad_sync_fn``."""
     from repro.rl.ppo import PPOConfig, make_train_step
     cfg = ppo_cfg if ppo_cfg is not None \
         else PPOConfig(use_fused_kernels=True)
     if fused is not None and fused != cfg.use_fused_kernels:
         cfg = cfg._replace(use_fused_kernels=fused)
-    return make_train_step(env, cfg, grad_sync_fn), cfg
+    if communicator is not None and communicator.mesh is not None:
+        # same guard AsyncRunner applies: this builder jits an eager
+        # per-instance step, and a mesh-attached Communicator's sync
+        # closure is SPMD-only — failing here beats an unbound-axis-name
+        # error deep inside the first traced step
+        raise TypeError(
+            "make_drl_train_step builds a plain-jit per-instance step; a "
+            "mesh-attached Communicator's sync closure is SPMD-only (use "
+            "Communicator.allreduce in a shard_map launcher, or a "
+            "mesh-less Communicator here)")
+    sync = communicator if communicator is not None else grad_sync_fn
+    return make_train_step(env, cfg, sync), cfg
 
 
 def make_experience_pipeline(layout, batch_mode: str = "stack",
@@ -263,12 +288,15 @@ def make_experience_pipeline(layout, batch_mode: str = "stack",
                                 batch_envs=batch_envs, overlap=overlap)
 
 
-def make_online_controller(layout, num_env: int, controller_cfg=None):
+def make_online_controller(layout, num_env: int, controller_cfg=None,
+                           communicator=None):
     """Online Algorithm-2 controller seeded from an async placement
     layout: the live (serving_gpus, gmi_per_gpu, num_env) become the
     first measured configuration; the controller then re-plans the
     layout between training epochs from measured throughput and ring
-    occupancy (see ``repro.core.controller``)."""
+    occupancy (see ``repro.core.controller``).  With a ``communicator``
+    attached, measured reduce times can additionally re-plan the LGR
+    strategy."""
     from repro.core.controller import OnlineGMIController
     gmis = layout.manager.gmis.values()
     serving_gpus = {g.gpu_id for g in gmis if g.role == "serving"}
@@ -279,24 +307,29 @@ def make_online_controller(layout, num_env: int, controller_cfg=None):
     return OnlineGMIController(
         num_gpu=len(all_gpus), serving_gpus=max(len(serving_gpus), 1),
         gmi_per_gpu=max(per_gpu.values()), num_env=num_env,
-        cfg=controller_cfg)
+        cfg=controller_cfg, communicator=communicator)
 
 
 def make_async_runner(env, layout, overlap: bool = False,
                       online_controller: bool = False,
-                      controller_cfg=None, **kwargs):
+                      controller_cfg=None, communicator=None, **kwargs):
     """Async A3C driver over ``make_experience_pipeline(layout)``.
 
     ``overlap=True`` runs the double-buffered serve-while-train pipeline;
     ``online_controller=True`` attaches an Algorithm-2 controller that
-    re-plans the GMI layout between training epochs from live stats."""
+    re-plans the GMI layout between training epochs from live stats.
+    ``communicator=True`` builds the layout's Communicator (gradient
+    reduction through ``repro.comm``, timed per round); an explicit
+    Communicator instance is used as-is."""
     from repro.rl.a3c import AsyncRunner
+    if communicator is True:
+        communicator = make_communicator(layout)
     controller = None
     layout_builder = None
     if online_controller:
         controller = make_online_controller(
             layout, num_env=kwargs.get("num_envs", 64),
-            controller_cfg=controller_cfg)
+            controller_cfg=controller_cfg, communicator=communicator)
 
         def layout_builder(decision):
             # re-plan inside the SAME device universe the seed layout
@@ -311,4 +344,5 @@ def make_async_runner(env, layout, overlap: bool = False,
                        pipeline=make_experience_pipeline(layout,
                                                          overlap=overlap),
                        overlap=overlap, controller=controller,
-                       layout_builder=layout_builder, **kwargs)
+                       layout_builder=layout_builder,
+                       communicator=communicator or None, **kwargs)

@@ -34,23 +34,27 @@ def run_drl(args):
         args.num_gpus, args.gmi_per_gpu,
         devices=list(range(max(n_dev, args.num_gpus * args.gmi_per_gpu))),
         devices_per_gpu=args.gmi_per_gpu)
-    strat = layout.reduction_strategy()
+    # the Communicator owns mesh + strategy + grad-sync for this layout
+    # (Algorithm 1 selection; Table-2 cost-scored when a cost model is
+    # attached) — all downstream layers consume it, not a strategy string
+    comm = layout.communicator()
     print(layout.manager.summary())
-    print(f"LGR strategy (Algorithm 1): {strat}")
+    print(f"LGR strategy (Algorithm 1 via repro.comm): {comm.strategy}")
 
     env = make_env(args.env)
     cfg = PPOConfig(num_steps=args.rollout, lr=3e-4)
     n_inst = args.num_gpus * args.gmi_per_gpu
     # data-parallel holistic instances: vmapped instance dimension, gradient
-    # sync = mean across instances (the LGR schedules reduce to tree-mean on
-    # a single host device; multi-device runs use repro.core.lgr)
+    # sync = mean across instances (the communicator's sync closure is the
+    # identity on a single host device; multi-device runs reduce through
+    # repro.comm's LGR schedules)
     import functools
 
     key = jax.random.key(args.seed)
     keys = jax.random.split(key, n_inst)
     states = []
     step_fns = []
-    grad_sync = (lambda g: g) if n_inst == 1 else None
+    grad_sync = comm if n_inst == 1 else None
     for i in range(n_inst):
         p, o, es, ob = init_train(keys[i], env, env.spec.policy_dims,
                                   num_envs=args.num_env // n_inst)

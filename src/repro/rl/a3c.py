@@ -40,7 +40,15 @@ def actor_collect(params, version, env, env_state, obs, key,
     return exp, env_state, obs, key
 
 
-def nstep_returns(rewards, dones, bootstrap, gamma: float = 0.99):
+def nstep_returns(rewards, dones, bootstrap, gamma: float = 0.99, *,
+                  use_fused_kernels: bool = False):
+    """Reverse discounted-return scan; ``use_fused_kernels`` routes it
+    through the fused Pallas block-resident scan (kernels/gae_scan.py's
+    n-step sibling) instead of the unfused ``lax.scan``."""
+    if use_fused_kernels:
+        from repro.kernels import ops
+        return ops.nstep_returns(rewards, dones, bootstrap, gamma=gamma)
+
     def step(carry, xs):
         r, d = xs
         g = r + gamma * carry * (1.0 - d)
@@ -50,8 +58,9 @@ def nstep_returns(rewards, dones, bootstrap, gamma: float = 0.99):
 
 
 def a3c_loss(params, exp: Experience, gamma: float, vf_coef: float,
-             ent_coef: float):
-    rets = nstep_returns(exp.rewards, exp.dones, exp.bootstrap, gamma)
+             ent_coef: float, use_fused_kernels: bool = False):
+    rets = nstep_returns(exp.rewards, exp.dones, exp.bootstrap, gamma,
+                         use_fused_kernels=use_fused_kernels)
     mu, log_std, value = policy_apply(params, exp.obs)
     adv = rets - value
     lp = log_prob(mu, log_std, exp.actions)
@@ -63,10 +72,15 @@ def a3c_loss(params, exp: Experience, gamma: float, vf_coef: float,
 
 def trainer_update(params, opt_state, exp: Experience, *, lr=3e-4,
                    gamma=0.99, vf_coef=0.5, ent_coef=0.01, grad_sync_fn=None,
-                   max_grad_norm=1.0):
-    """Policy update on a trainer instance from one experience batch."""
+                   max_grad_norm=1.0, use_fused_kernels=False):
+    """Policy update on a trainer instance from one experience batch.
+
+    ``grad_sync_fn`` may be a bare closure or a
+    ``repro.comm.Communicator`` (resolved via its grad-sync property)."""
+    from repro.comm.api import as_grad_sync
+    grad_sync_fn = as_grad_sync(grad_sync_fn)
     (loss, aux), grads = jax.value_and_grad(a3c_loss, has_aux=True)(
-        params, exp, gamma, vf_coef, ent_coef)
+        params, exp, gamma, vf_coef, ent_coef, use_fused_kernels)
     if grad_sync_fn is not None:
         grads = grad_sync_fn(grads)
     params, opt_state = adam_update(grads, opt_state, params, lr=lr,
@@ -104,12 +118,25 @@ class AsyncRunner:
     hand back a re-plan between epochs; :meth:`replan` applies it by
     draining the old pipeline (lossless across the re-plan), rebuilding
     pipeline + actors under the new layout, and keeping model state.
+
+    An attached :class:`~repro.comm.Communicator` owns the reduction
+    decision state for the controller loop: measured per-round reduce
+    seconds reach it through ``RoundSample.reduce_s`` (or direct
+    ``observe`` calls from a real SPMD launcher — the runner's eager
+    simulation has no cross-instance reduce to time, and timing the
+    identity closure would feed scheduler noise into the switch
+    hysteresis), and a controller Decision carrying a
+    ``reduction_strategy`` switches the schedule in place — communication
+    plumbing only, params/optimizer untouched.  Mesh-attached
+    communicators are rejected: their sync closure is SPMD-only and
+    cannot run inside this eager trainer.
     """
 
     def __init__(self, env, serving_gmis, trainer_gmis, *, gmi_gpu=None,
                  num_envs: int = 64, num_steps: int = 16, seed: int = 0,
                  lr: float = 3e-4, pipeline=None, overlap: bool = False,
-                 controller=None, layout_builder=None):
+                 controller=None, layout_builder=None, communicator=None,
+                 use_fused_kernels: bool = False):
         from repro.core.channels import MultiChannelPipeline
         from repro.models.policy import init_policy
         from repro.optim import adam_init
@@ -123,6 +150,17 @@ class AsyncRunner:
         self.overlap = overlap
         self.controller = controller
         self.layout_builder = layout_builder
+        if communicator is not None and communicator.mesh is not None:
+            raise TypeError(
+                "AsyncRunner's round-interleaved trainer is eager; a "
+                "mesh-attached Communicator's sync closure is SPMD-only "
+                "(use allreduce in a shard_map launcher, or attach a "
+                "mesh-less Communicator for decision state)")
+        self.communicator = communicator
+        self.use_fused_kernels = use_fused_kernels
+        if controller is not None and communicator is not None \
+                and controller.communicator is None:
+            controller.communicator = communicator
         self.pipe = pipeline or MultiChannelPipeline(
             serving_gmis, trainer_gmis, gmi_gpu=gmi_gpu, overlap=overlap)
         self.params = init_policy(jax.random.key(seed), env.spec.policy_dims)
@@ -146,11 +184,18 @@ class AsyncRunner:
     def _train(self, routed):
         """Consume routed trainer batches; returns (losses, staleness)."""
         losses, stale = [], []
+        # a mesh-less communicator's sync closure is the identity (and is
+        # deliberately NOT timed: measured reduce seconds enter through
+        # RoundSample.reduce_s / Communicator.observe, never from no-ops)
+        sync = None if self.communicator is None \
+            else self.communicator.grad_sync_fn
         for _, batches in routed.items():
             for exp in batches:
                 stale.append(int(staleness(self.version, exp)))
                 self.params, self.opt_state, loss = trainer_update(
-                    self.params, self.opt_state, exp, lr=self.lr)
+                    self.params, self.opt_state, exp, lr=self.lr,
+                    grad_sync_fn=sync,
+                    use_fused_kernels=self.use_fused_kernels)
                 losses.append(float(loss))
                 self.trained_samples += int(exp.rewards.size)
                 self.version = self.version + 1
@@ -179,7 +224,13 @@ class AsyncRunner:
                 self.pipe, samples=self.trained_samples - before,
                 dt=time.perf_counter() - t0)
             if decision is not None:
-                self.replan(decision)
+                if decision.layout_changed:
+                    self.replan(decision)
+                elif decision.reduction_strategy \
+                        and self.communicator is not None:
+                    # strategy-only re-plan: pure communication plumbing,
+                    # no pipeline drain / actor rebuild needed
+                    self.communicator.switch(decision.reduction_strategy)
         return losses, stale
 
     def finish(self):
@@ -194,7 +245,10 @@ class AsyncRunner:
         everything still buffered (nothing is lost across the re-plan),
         then rebuild the pipeline — carrying the old pipeline's batching
         /ring/backend configuration — and the actors under the new
-        layout.  Model parameters, optimizer state, and version persist."""
+        layout.  Model parameters, optimizer state, and version persist.
+        A decision carrying a ``reduction_strategy`` additionally switches
+        the communicator's LGR schedule in place — by construction this
+        touches no model state."""
         if not hasattr(self.pipe, "clone_for"):
             raise TypeError(
                 f"online re-planning needs a pipeline with clone_for "
@@ -202,6 +256,15 @@ class AsyncRunner:
         self._train(self.pipe.drain())
         layout = (self.layout_builder(decision) if self.layout_builder
                   else self.controller.plan_layout())
+        if self.communicator is not None:
+            # the communicator's grid/cost model must track the NEW
+            # layout, or later strategy decisions are scored (and
+            # validated) against a stale instance grid
+            self.communicator.rebind(layout)
+            if getattr(decision, "reduction_strategy", None):
+                strat = decision.reduction_strategy
+                if strat in self.communicator.candidates():
+                    self.communicator.switch(strat)
         gmi_gpu = {g.gmi_id: g.gpu_id for g in layout.manager.gmis.values()}
         self.serving_gmis = list(layout.serving_gmis)
         self.pipe = self.pipe.clone_for(layout.serving_gmis,

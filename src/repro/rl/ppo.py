@@ -3,9 +3,10 @@ training workload (Isaac Gym's official algorithm).
 
 One ``train_iteration`` = experience collection (m simulator-agent rounds)
 + minibatched clipped-surrogate updates — the two sequential stages of §5.1.
-Gradient synchronization across trainer GMIs plugs in via ``grad_sync_fn``
-(identity on a single instance; an LGR schedule from ``repro.core.lgr`` on a
-multi-instance layout).
+Gradient synchronization across trainer GMIs plugs in via ``grad_sync_fn``,
+which accepts either a bare closure or a ``repro.comm.Communicator`` (the
+communication subsystem object owning mesh + LGR strategy); identity on a
+single instance.
 """
 from __future__ import annotations
 
@@ -57,7 +58,9 @@ def train_iteration(params, opt_state: AdamState, env, env_state, obs, key,
                     cfg: PPOConfig, grad_sync_fn: Optional[Callable] = None,
                     policy_fn=policy_apply):
     """One full PPO iteration.  Returns (params, opt_state, env_state, obs,
-    key, metrics)."""
+    key, metrics).  ``grad_sync_fn`` may be a closure or a Communicator."""
+    from repro.comm.api import as_grad_sync   # lazy: rl <-> comm layering
+    grad_sync_fn = as_grad_sync(grad_sync_fn)
     traj, env_state, obs, last_value, key = collect(
         params, env, env_state, obs, key, cfg.num_steps, policy_fn)
     if cfg.use_fused_kernels:
@@ -121,7 +124,12 @@ def train_iteration(params, opt_state: AdamState, env, env_state, obs, key,
 
 def make_train_step(env, cfg: PPOConfig, grad_sync_fn=None,
                     policy_fn=policy_apply):
-    """jit-compiled PPO iteration bound to an env instance."""
+    """jit-compiled PPO iteration bound to an env instance.
+
+    ``grad_sync_fn`` may be a closure or a ``repro.comm.Communicator`` —
+    resolved once here so the jitted step holds a stable callable."""
+    from repro.comm.api import as_grad_sync   # lazy: rl <-> comm layering
+    grad_sync_fn = as_grad_sync(grad_sync_fn)
 
     # donate only the env state: params may be SHARED between GMI instances
     # right after a global policy sync (donating would delete the shared

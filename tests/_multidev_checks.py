@@ -14,7 +14,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core.lgr import lgr_allreduce, mpr_host  # noqa: E402
+from repro.comm import lgr_allreduce, mpr_host  # noqa: E402
 
 
 def check_lgr_equivalence():
@@ -48,6 +48,81 @@ def check_har_equals_mrr_2x2():
         np.testing.assert_allclose(np.asarray(har[k]), np.asarray(mrr[k]),
                                    rtol=1e-6, atol=1e-6)
     print("har == mrr on 2x2 ok")
+
+
+def check_comm_schedule_parity_vs_host_oracle():
+    """Every schedule (2-level and 3-level) must match the mpr_host host
+    oracle on 2x2 and 2x2x2 device grids, for both average and raw-sum
+    semantics (ISSUE 3 satellite: single average switch)."""
+    key = jax.random.key(11)
+    grids = [((2, 2), ("gpu", "inst"), ("mrr", "har", "mpr")),
+             ((2, 2, 2), ("gpu", "inst", "dev"),
+              ("mrr", "har", "har3", "mpr"))]
+    for shape, axes, strategies in grids:
+        n = int(np.prod(shape))
+        devs = np.array(jax.devices()[:n]).reshape(shape)
+        mesh = Mesh(devs, axes)
+        grads = {"w": jax.random.normal(key, shape + (33, 7)),  # pad path
+                 "b": jax.random.normal(key, shape + (8,))}     # exact path
+        idx = list(np.ndindex(*shape))
+        per_inst = [jax.tree.map(lambda x, i=i: x[i], grads) for i in idx]
+        want_mean = mpr_host(per_inst)
+        want_sum = mpr_host(per_inst, average=False)
+        for strat in strategies:
+            out = lgr_allreduce(grads, mesh, strat)
+            out_sum = lgr_allreduce(grads, mesh, strat, average=False)
+            for k in grads:
+                got = np.asarray(out[k])[(0,) * len(shape)]
+                np.testing.assert_allclose(got, want_mean[k],
+                                           rtol=1e-5, atol=1e-5)
+                # every replica must agree
+                np.testing.assert_allclose(
+                    np.asarray(out[k]),
+                    np.broadcast_to(want_mean[k], out[k].shape),
+                    rtol=1e-5, atol=1e-5)
+                got_sum = np.asarray(out_sum[k])[(0,) * len(shape)]
+                np.testing.assert_allclose(got_sum, want_sum[k],
+                                           rtol=1e-5, atol=1e-5)
+        print(f"comm parity ok on {shape}")
+
+
+def check_multi_device_gmi_end_to_end():
+    """Acceptance (ISSUE 3): the (gpu, inst, dev) mesh that
+    GMIManager.instance_mesh builds for multi-device GMIs reduces
+    correctly through the layout's Communicator — no ValueError, parity
+    with the mpr_host oracle to <=1e-5."""
+    from repro.comm import Communicator, ReduceCostModel
+    from repro.core.gmi import GMIManager
+    from repro.core.placement import Layout
+
+    mgr = GMIManager(devices=jax.devices(), devices_per_gpu=4)
+    for gid, gpu in [(0, 0), (1, 0), (2, 1), (3, 1)]:
+        mgr.add_gmi(gid, "trainer", 0.5)     # 2 chips per GMI
+        mgr.set_gpu(gid, gpu)
+    layout = Layout("multidev", mgr, [], [0, 1, 2, 3])
+    comm = Communicator.from_layout(layout, cost_model=ReduceCostModel(),
+                                    with_mesh=True)
+    assert comm.strategy == "har3", comm     # cost model picks 3-level
+    assert comm.mesh.axis_names == ("gpu", "inst", "dev")
+    key = jax.random.key(5)
+    grads = {"w": jax.random.normal(key, (2, 2, 2, 17, 3)),
+             "b": jax.random.normal(key, (2, 2, 2, 5))}
+    out = comm.allreduce(grads)
+    per_inst = [jax.tree.map(lambda x, i=i: x[i], grads)
+                for i in np.ndindex(2, 2, 2)]
+    want = comm.reduce_host(per_inst)
+    for k in grads:
+        np.testing.assert_allclose(
+            np.asarray(out[k]),
+            np.broadcast_to(want[k], out[k].shape), rtol=1e-5, atol=1e-5)
+    # online strategy switch keeps reducing correctly on the same mesh
+    for strat in ("mpr", "har"):
+        out2 = comm.switch(strat).allreduce(grads)
+        np.testing.assert_allclose(np.asarray(out2["w"]),
+                                   np.broadcast_to(want["w"],
+                                                   out2["w"].shape),
+                                   rtol=1e-5, atol=1e-5)
+    print("multi-device GMI communicator ok")
 
 
 def check_mpr_host():
@@ -108,6 +183,8 @@ def check_gmi_instance_mesh():
 if __name__ == "__main__":
     check_lgr_equivalence()
     check_har_equals_mrr_2x2()
+    check_comm_schedule_parity_vs_host_oracle()
+    check_multi_device_gmi_end_to_end()
     check_mpr_host()
     check_sharded_train_step()
     check_gmi_instance_mesh()

@@ -1,0 +1,410 @@
+"""The unified repro.comm subsystem: Algorithm-1 / cost-model strategy
+selection, the Communicator object, single-switch average semantics, the
+core.lgr deprecation shim, and the controller's reduction-strategy
+re-plan loop.  (Numerical schedule parity on real multi-device grids
+lives in tests/_multidev_checks.py — this file runs on one device.)"""
+import importlib
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (Communicator, ReduceCostModel, STRATEGIES,
+                        algorithm1, as_grad_sync, make_grad_sync, mpr_host,
+                        select_reduction_strategy)
+from repro.core.cost_model import (lgr_time_har, lgr_time_har3, lgr_time_mpr)
+from repro.core.placement import (plan_async, plan_tcg_ex_training,
+                                  plan_tcg_serving)
+
+
+# ------------------------------------------------------------- selection ---
+def test_algorithm1_verbatim_reexport():
+    """placement.select_reduction_strategy is the comm one, and the
+    Algorithm-1 shape logic is unchanged."""
+    from repro.core import placement
+    assert placement.select_reduction_strategy is select_reduction_strategy
+    assert algorithm1([[0, 1, 2]]) == "mpr"
+    assert algorithm1([[0], [1]]) == "mrr"
+    assert algorithm1([[0, 1, 2], [3, 4]]) == "har"
+    assert select_reduction_strategy([[0, 1], [2, 3]]) == "mrr"
+
+
+def test_cost_model_candidates_and_feasibility():
+    cm = ReduceCostModel(dev_per_inst=2)
+    assert cm.candidates((2, 2, 2)) == ["mpr", "har", "har3"]   # t*d > g
+    assert "mrr" in cm.candidates((4, 2, 1))                    # t <= g
+    assert "har3" not in cm.candidates((4, 2, 1))               # no dev axis
+    assert cm.candidates((1, 4, 1)) == ["mpr"]                  # single GPU
+    with pytest.raises(ValueError, match="dev axis"):
+        cm.time("har3", (2, 2, 1))
+
+
+def test_cost_model_prefers_har3_on_fast_dev_links():
+    """Table-2 ordering: with intra-instance links much faster than the
+    instance-level domain, the 3-level schedule must win on a
+    (gpu, inst, dev) grid — and the verbatim shape logic alone (which is
+    dev-blind) would not have picked it."""
+    M = 6e6
+    B1, B2, B3 = 5e9, 200e9, 400e9
+    assert lgr_time_har3(2, 2, 2, M, B1, B2, B3) \
+        < lgr_time_har(2, 4, M, B1, B2) < lgr_time_mpr(2, 4, M, B1, B2)
+    cm = ReduceCostModel(bw_intra=B1, bw_gpu=B2, bw_dev=B3,
+                         bytes_per_round=M, dev_per_inst=2)
+    mpl = [[0, 1], [2, 3]]
+    assert select_reduction_strategy(mpl) == "mrr"              # shape only
+    assert select_reduction_strategy(mpl, cm) == "har3"         # cost-aware
+    # ragged layouts can't build an axis mesh: cost path stays in mpr/har
+    assert select_reduction_strategy([[0, 1, 2], [3, 4]], cm) in ("mpr",
+                                                                  "har")
+
+
+def test_cost_model_degenerates_without_dev_axis():
+    """On a plain (gpu, inst) grid the cost-scored choice agrees with the
+    Table-2 best_lgr ordering (har beats mpr on fast interconnects)."""
+    cm = ReduceCostModel(bytes_per_round=6e6, dev_per_inst=1)
+    s = select_reduction_strategy([[0, 1, 2], [3, 4, 5]], cm)
+    assert s == "har"                       # t=3 > g=2: mrr infeasible
+
+
+# ---------------------------------------------------------- Communicator ---
+def test_communicator_from_layouts():
+    ex = plan_tcg_ex_training(2, 2, devices=list(range(4)),
+                              devices_per_gpu=2)
+    comm = ex.communicator()
+    assert comm.strategy == ex.reduction_strategy() == "mrr"
+    assert comm.grid == (2, 2)
+    assert plan_tcg_serving(2, 2, devices=list(range(8)),
+                            devices_per_gpu=4).communicator() is None
+
+
+def test_communicator_multi_device_grid_carries_dev_axis():
+    from repro.core.gmi import GMIManager
+    from repro.core.placement import Layout
+    mgr = GMIManager(devices=list(range(8)), devices_per_gpu=4)
+    for gid, gpu in [(0, 0), (1, 0), (2, 1), (3, 1)]:
+        mgr.add_gmi(gid, "trainer", 0.5)     # 2 devices each
+        mgr.set_gpu(gid, gpu)
+    layout = Layout("t", mgr, [], [0, 1, 2, 3])
+    comm = layout.communicator()
+    assert comm.grid == (2, 2, 2)
+    assert comm.cost_model.dev_per_inst == 2
+    assert comm.num_instances == 8
+    # Algorithm 1 is dev-blind and would say "mrr" here, but mrr breaks
+    # the one-ring-endpoint-per-chip rule on this grid (t*d=4 > g=2):
+    # construction must land on a FEASIBLE strategy, never a state its
+    # own switch() would reject
+    assert comm.strategy in comm.candidates()
+    # cost-aware construction picks the 3-level schedule here
+    comm3 = layout.communicator(cost_model=ReduceCostModel())
+    assert comm3.strategy == "har3"
+
+
+def test_communicator_ragged_layout_restricts_candidates():
+    """A ragged layout (unequal GMIs per GPU) has no axis mesh, so the
+    communicator's candidate set must stay in mpr/har — switch() to mrr
+    must refuse even when the flattened grid shape would allow it."""
+    from repro.core.gmi import GMIManager
+    from repro.core.placement import Layout
+    mgr = GMIManager(devices=list(range(8)), devices_per_gpu=4)
+    for gid, gpu, frac in [(0, 0, 0.25), (1, 1, 0.25), (2, 1, 0.25)]:
+        mgr.add_gmi(gid, "trainer", frac)
+        mgr.set_gpu(gid, gpu)
+    layout = Layout("ragged", mgr, [], [0, 1, 2])
+    comm = layout.communicator()
+    assert comm.uniform is False
+    assert set(comm.candidates()) == {"mpr", "har"}
+    with pytest.raises(ValueError, match="not feasible"):
+        comm.switch("mrr")
+
+
+def test_communicator_rebind_tracks_new_layout():
+    """AsyncRunner.replan rebinds the communicator to the re-planned
+    layout: grid/dev axis refresh, stale measurements clear, and an
+    infeasible current strategy is coerced to a feasible one."""
+    from repro.core.gmi import GMIManager
+    from repro.core.placement import Layout
+    cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
+    comm = Communicator("har3", grid=(2, 2, 2), cost_model=cm)
+    comm.observe(1.0)
+    mgr = GMIManager(devices=list(range(8)), devices_per_gpu=2)
+    for gid, gpu in [(0, 0), (1, 0), (2, 1), (3, 1)]:
+        mgr.add_gmi(gid, "trainer", 0.5)     # 1 chip each now
+        mgr.set_gpu(gid, gpu)
+    layout = Layout("replanned", mgr, [], [0, 1, 2, 3])
+    comm.rebind(layout)
+    assert comm.grid == (2, 2)
+    assert comm.cost_model.dev_per_inst == 1
+    assert comm.measured("har3") is None     # stale table cleared
+    assert comm.strategy in comm.candidates()   # har3 no longer feasible
+
+
+def test_communicator_from_layout_rejects_mixed_device_counts():
+    """Planning as if every GMI were single-chip would silently drop the
+    dev axis — mirror instance_mesh and refuse mixed sizes loudly."""
+    from repro.core.gmi import GMIManager
+    from repro.core.placement import Layout
+    mgr = GMIManager(devices=list(range(8)), devices_per_gpu=4)
+    mgr.add_gmi(0, "trainer", 0.5)           # 2 devices
+    mgr.set_gpu(0, 0)
+    mgr.add_gmi(1, "trainer", 0.25)          # 1 device
+    mgr.set_gpu(1, 1)
+    layout = Layout("mixed", mgr, [], [0, 1])
+    with pytest.raises(ValueError, match="mixed devices-per-GMI"):
+        layout.communicator()
+
+
+def test_communicator_duck_types_as_grad_sync():
+    comm = Communicator("mrr", grid=(2, 2))
+    fn = as_grad_sync(comm)
+    g = {"w": jnp.ones((3,))}
+    assert fn(g)["w"].shape == (3,)          # identity without a mesh
+    assert as_grad_sync(None) is None
+    plain = lambda x: x                                         # noqa: E731
+    assert as_grad_sync(plain) is plain
+
+
+def test_communicator_switch_is_pure_plumbing():
+    comm = Communicator("mpr", grid=(2, 2, 2),
+                        cost_model=ReduceCostModel(dev_per_inst=2))
+    comm.observe(1.0, 6e6)
+    comm.observe(0.1, 6e6, strategy="har3")
+    assert comm.switch("har3") is comm
+    assert comm.strategy == "har3"
+    # stale measurements of non-active strategies are dropped (one bad
+    # early sample must not outrank the model forever); the new active
+    # strategy keeps its live record
+    assert comm.measured("mpr") is None
+    assert comm.measured("har3") == 0.1
+    with pytest.raises(ValueError, match="not feasible"):
+        comm.switch("mrr")                   # t*d > g on this grid
+    with pytest.raises(ValueError, match="unknown"):
+        comm.switch("ring-of-fire")
+
+
+def test_make_drl_train_step_rejects_mesh_attached_communicator():
+    """Same guard as AsyncRunner: the jitted per-instance PPO step cannot
+    host an SPMD-only sync closure — fail clearly, not at trace time."""
+    from repro.envs import make_env
+    from repro.launch.steps import make_drl_train_step
+
+    class _FakeMesh:
+        axis_names = ("gpu", "inst")
+    comm = Communicator("mrr", grid=(2, 2))
+    comm.mesh = _FakeMesh()
+    with pytest.raises(TypeError, match="SPMD-only"):
+        make_drl_train_step(make_env("Ant"), communicator=comm)
+
+
+def test_propose_switch_measured_hysteresis():
+    cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
+    comm = Communicator("mpr", grid=(2, 2, 2), cost_model=cm)
+    assert comm.propose_switch() is None     # nothing measured yet
+    comm.observe(1.0)                        # measured: mpr is slow
+    assert comm.propose_switch(1.05) == "har3"
+    # measured evidence on a candidate beats the model: once har3 has
+    # actually measured WORSE than mpr it drops out, and the proposal
+    # falls back to the next-best (model-scaled) candidate
+    comm.observe(2.0, strategy="har3")
+    assert comm.propose_switch(1.05) == "har"
+    # marginal disagreement stays put (hysteresis)
+    best = Communicator("har3", grid=(2, 2, 2), cost_model=cm)
+    best.observe(1.0)
+    assert best.propose_switch(1.05) is None
+
+
+# ------------------------------------------------------ average semantics --
+def test_mpr_host_single_average_switch():
+    gs = [{"w": jnp.full((4,), float(i))} for i in range(1, 5)]
+    mean = mpr_host(gs)
+    total = mpr_host(gs, average=False)
+    np.testing.assert_allclose(mean["w"], np.full(4, 2.5))
+    np.testing.assert_allclose(total["w"], np.full(4, 10.0))
+
+
+def test_make_grad_sync_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="unknown"):
+        make_grad_sync("nccl", ("gpu", "inst"))
+    with pytest.raises(ValueError, match="at least"):
+        make_grad_sync("mrr", ("gpu",))
+
+
+# -------------------------------------------------------------- lgr shim ---
+def test_core_lgr_shim_deprecation_and_reexports():
+    sys.modules.pop("repro.core.lgr", None)
+    with pytest.warns(DeprecationWarning, match="repro.comm"):
+        import repro.core.lgr as lgr
+        importlib.reload(lgr)
+    from repro.comm import schedules
+    assert lgr.mpr_host is schedules.mpr_host
+    assert lgr.flat_psum is schedules.flat_psum
+    # the shim keeps the OLD calling conventions: lgr_allreduce accepts
+    # the legacy axis-name kwargs, and make_grad_sync keeps the raw-sum
+    # contract (callers of the deprecated surface divided by g*t
+    # themselves)
+    import inspect
+    sig = inspect.signature(lgr.lgr_allreduce)
+    assert "intra_axis" in sig.parameters and "inter_axis" in sig.parameters
+    gs = [{"w": jnp.ones((3,))}]
+    np.testing.assert_allclose(lgr.mpr_host(gs)["w"], np.ones(3))
+
+
+# --------------------------------------- controller reduction re-planning --
+def _slow_mpr_comm():
+    cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
+    comm = Communicator("mpr", grid=(2, 2, 2), cost_model=cm)
+    comm.observe(1.0)                        # measured: current is slow
+    return comm
+
+
+def test_controller_emits_reduction_strategy_replan():
+    from repro.core.controller import ControllerConfig, OnlineGMIController
+    comm = _slow_mpr_comm()
+    c = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=2,
+                            num_env=512,
+                            cfg=ControllerConfig(epoch_rounds=1,
+                                                 probe=False),
+                            communicator=comm)
+    from repro.core.controller import RoundSample
+    d = c.record(RoundSample(samples=1000, dt=0.1, occupancy=0.5,
+                             spills=0, mem_bytes=1e6))
+    assert d is not None
+    assert d.reduction_strategy == "har3"
+    assert "reduce time" in d.reason
+    # model state is not the controller's business: nothing else moved,
+    # and the decision says so (runners switch in place, no rebuild)
+    assert (d.num_env, d.gmi_per_gpu, d.serving_gpus) == (512, 2, 2)
+    assert d.layout_changed is False
+
+
+def test_controller_reduce_hysteresis_no_replan_when_best():
+    from repro.core.controller import (ControllerConfig,
+                                       OnlineGMIController, RoundSample)
+    cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
+    comm = Communicator("har3", grid=(2, 2, 2), cost_model=cm)
+    comm.observe(1.0)
+    c = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=2,
+                            num_env=512,
+                            cfg=ControllerConfig(epoch_rounds=1,
+                                                 probe=False),
+                            communicator=comm)
+    assert c.record(RoundSample(samples=1000, dt=0.1, occupancy=0.5,
+                                spills=0, mem_bytes=1e6)) is None
+
+
+def test_controller_round_sample_reduce_s_feeds_communicator():
+    from repro.core.controller import (ControllerConfig,
+                                       OnlineGMIController, RoundSample)
+    cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
+    comm = Communicator("mpr", grid=(2, 2, 2), cost_model=cm)
+    c = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=2,
+                            num_env=512,
+                            cfg=ControllerConfig(epoch_rounds=2,
+                                                 probe=False),
+                            communicator=comm)
+    c.record(RoundSample(samples=1000, dt=0.1, occupancy=0.5, spills=0,
+                         mem_bytes=1e6, reduce_s=0.5))
+    assert comm.measured("mpr") == 0.5       # flowed through record()
+
+
+def test_async_runner_replan_switches_strategy_keeps_model_state():
+    """Acceptance: a reduction-strategy re-plan applies through
+    AsyncRunner.replan as communication plumbing only — parameters,
+    optimizer state, and version survive bit-identically."""
+    from repro.core.controller import Decision
+    from repro.envs import make_env
+    from repro.launch.steps import make_async_runner
+    env = make_env("Ant")
+    # devices_per_gpu=4 with 2 GMIs/GPU -> 2 chips per GMI: the trainer
+    # grid keeps its dev axis across the re-plan, so har3 stays feasible
+    layout = plan_async(4, 2, 2, devices=list(range(16)),
+                        devices_per_gpu=4)
+    comm = _slow_mpr_comm()
+    runner = make_async_runner(env, layout, overlap=True,
+                               communicator=comm, num_envs=8, num_steps=4)
+    runner.round()
+    runner.round()
+    runner.finish()                          # drain: nothing left in flight
+    params_before = jax.tree.map(np.asarray, runner.params)
+    opt_mu_before = jax.tree.map(np.asarray, runner.opt_state.mu)
+    version_before = int(runner.version)
+    runner.layout_builder = lambda d: plan_async(
+        4, d.serving_gpus, d.gmi_per_gpu, devices=list(range(16)),
+        devices_per_gpu=4)
+    runner.replan(Decision(num_env=8, gmi_per_gpu=2, serving_gpus=2,
+                           projected_throughput=0.0, reason="test",
+                           reduction_strategy="har3"))
+    assert runner.communicator.strategy == "har3"
+    # the strategy switch is communication plumbing only: params,
+    # optimizer state, and version survive bit-identically
+    assert int(runner.version) == version_before
+    for a, b in zip(jax.tree.leaves(params_before),
+                    jax.tree.leaves(jax.tree.map(np.asarray,
+                                                 runner.params))):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(jax.tree.leaves(opt_mu_before),
+                    jax.tree.leaves(jax.tree.map(np.asarray,
+                                                 runner.opt_state.mu))):
+        np.testing.assert_array_equal(a, b)
+    # rounds keep working under the switched schedule
+    ls, stale = runner.round()
+    ls2, _ = runner.round()
+    assert all(np.isfinite(ls + ls2))
+    runner.finish()
+    assert runner.trained_samples == runner.predictions
+
+
+def test_async_runner_communicator_contract():
+    """The eager runner never times the mesh-less identity closure into
+    the switch hysteresis (measured reduce seconds only enter through
+    RoundSample.reduce_s / direct observe), and rejects mesh-attached
+    communicators outright — their sync closure is SPMD-only."""
+    from repro.envs import make_env
+    from repro.launch.steps import make_async_runner
+    env = make_env("Ant")
+    layout = plan_async(2, 1, 2, devices=list(range(4)), devices_per_gpu=2)
+    comm = Communicator("mrr", grid=(2, 2))
+    runner = make_async_runner(env, layout, communicator=comm,
+                               num_envs=8, num_steps=4)
+    runner.round()
+    runner.round()
+    assert comm.measured("mrr") is None      # no-op timings never recorded
+
+    class _FakeMesh:
+        axis_names = ("gpu", "inst")
+    meshy = Communicator("mrr", grid=(2, 2))
+    meshy.mesh = _FakeMesh()
+    with pytest.raises(TypeError, match="SPMD-only"):
+        make_async_runner(env, layout, communicator=meshy,
+                          num_envs=8, num_steps=4)
+
+
+def test_strategy_only_decision_switches_in_place_without_replan():
+    """A decision that moves ONLY the reduction strategy must not pay the
+    drain-and-rebuild re-plan: the runner switches the communicator in
+    place mid-round-loop."""
+    from repro.core.controller import ControllerConfig
+    from repro.envs import make_env
+    from repro.launch.steps import make_async_runner
+    env = make_env("Ant")
+    layout = plan_async(4, 2, 2, devices=list(range(8)), devices_per_gpu=2)
+    comm = _slow_mpr_comm()
+    runner = make_async_runner(
+        env, layout, overlap=True, online_controller=True,
+        communicator=comm,
+        controller_cfg=ControllerConfig(epoch_rounds=1, probe=False,
+                                        occ_low=0.0),
+        num_envs=8, num_steps=4)
+    pipe_before = runner.pipe
+    runner.round()                           # overlap: trains one behind
+    runner.round()                           # epoch boundary: decision
+    assert runner.controller.decisions, "expected a decision"
+    d = runner.controller.decisions[0]
+    assert d.reduction_strategy == "har3" and not d.layout_changed
+    assert runner.communicator.strategy == "har3"
+    assert runner.pipe is pipe_before        # no rebuild
+    assert runner.replans == 0
+    runner.finish()
+    assert runner.trained_samples == runner.predictions

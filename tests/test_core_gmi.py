@@ -173,20 +173,31 @@ def test_instance_mesh_multi_device_keeps_all_chips():
     assert sorted(mesh.devices.reshape(-1).tolist()) == list(range(8))
 
 
-def test_lgr_allreduce_rejects_multi_device_instance_mesh():
+def test_multi_device_instance_mesh_is_reducible():
     """The (gpu, inst, dev) meshes instance_mesh builds for multi-device
-    GMIs are not reducible by the 2-axis LGR schedules yet — they must
-    be rejected loudly, not mis-reduced over the first chip only."""
+    GMIs are first-class in repro.comm (the old 2-axis-only lgr_allreduce
+    rejected them): every 3-axis schedule constructs, har3 refuses 2-axis
+    grids, and >3-axis grids are still rejected loudly.  Numerical parity
+    on real device grids lives in tests/_multidev_checks.py."""
     import jax.numpy as jnp
-    from repro.core.lgr import lgr_allreduce
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.comm import lgr_allreduce, make_grad_sync
 
     mgr = GMIManager(devices=list(range(8)), devices_per_gpu=4)
     for gid, gpu in [(0, 0), (1, 0), (2, 1), (3, 1)]:
         mgr.add_gmi(gid, "trainer", 0.5)
         mgr.set_gpu(gid, gpu)
     mesh = mgr.instance_mesh("trainer")
-    with pytest.raises(ValueError, match="2-axis"):
-        lgr_allreduce({"w": jnp.ones((2, 2, 3))}, mesh, "mrr")
+    assert mesh.axis_names == ("gpu", "inst", "dev")
+    for strat in ("mpr", "mrr", "har", "har3"):
+        assert callable(make_grad_sync(strat, mesh.axis_names))
+    with pytest.raises(ValueError, match="3-axis"):
+        make_grad_sync("har3", ("gpu", "inst"))
+    mesh4 = Mesh(np.arange(8).reshape(1, 2, 2, 2),
+                 ("pod", "gpu", "inst", "dev"))
+    with pytest.raises(ValueError, match="2-axis .* or 3-axis"):
+        lgr_allreduce({"w": jnp.ones((1, 2, 2, 2, 3))}, mesh4, "mrr")
 
 
 def test_instance_mesh_rejects_mixed_device_counts():

@@ -122,6 +122,35 @@ def test_gae_scan_kernel_matches_unfused_gae():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("shape", [(8, 4), (12, 5), (32, 64), (7, 128)])
+@pytest.mark.parametrize("gamma", [0.99, 1.0, 0.5])
+def test_nstep_scan_kernel(shape, gamma):
+    T, N = shape
+    ks = jax.random.split(KEY, 3)
+    rewards = jax.random.normal(ks[0], (T, N))
+    dones = (jax.random.uniform(ks[1], (T, N)) < 0.2).astype(jnp.float32)
+    boot = jax.random.normal(ks[2], (N,))
+    rets = ops.nstep_returns(rewards, dones, boot, gamma=gamma)
+    want = ref.nstep_returns_ref(rewards, dones, boot, gamma)
+    np.testing.assert_allclose(np.asarray(rets), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_nstep_scan_kernel_matches_unfused_a3c_path():
+    """The fused kernel must agree with rl.a3c.nstep_returns (the unfused
+    lax.scan the trainer uses when use_fused_kernels=False)."""
+    from repro.rl.a3c import nstep_returns
+    T, N = 16, 12
+    ks = jax.random.split(KEY, 3)
+    rewards = jax.random.normal(ks[0], (T, N))
+    dones = (jax.random.uniform(ks[1], (T, N)) < 0.1).astype(jnp.float32)
+    boot = jax.random.normal(ks[2], (N,))
+    fused = nstep_returns(rewards, dones, boot, use_fused_kernels=True)
+    unfused = nstep_returns(rewards, dones, boot)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("slots,pushes", [(1, 1), (3, 3), (2, 5)])
 def test_channel_pack_kernel(slots, pushes):
     """Pallas pack == .at[] oracle across slot writes incl. wraparound."""

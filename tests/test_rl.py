@@ -99,6 +99,22 @@ def test_ppo_fused_kernels_improve_and_match_metric_shapes():
                for k_ in mf)
 
 
+def test_async_runner_fused_nstep_trains():
+    """use_fused_kernels routes the trainer's n-step returns through the
+    fused Pallas scan; training must stay finite and lossless."""
+    from repro.rl.a3c import AsyncRunner
+    env = make_env("Ant")
+    runner = AsyncRunner(env, [0, 1], [100, 101],
+                         gmi_gpu={0: 0, 1: 1, 100: 0, 101: 1},
+                         num_envs=16, num_steps=8, use_fused_kernels=True)
+    losses = []
+    for _ in range(3):
+        ls, stale = runner.round()
+        losses += ls
+    assert losses and all(np.isfinite(losses))
+    assert runner.trained_samples == runner.predictions
+
+
 def test_async_runner_over_ring_pipeline():
     from repro.rl.a3c import AsyncRunner
     env = make_env("Ant")
