@@ -10,6 +10,8 @@
 #   bench_backend        — Fig 8     backend isolation comparison
 #   bench_reward         — Fig 9     reward accumulation over time
 #   bench_kernels        — Pallas kernels (interpret-mode correctness cost)
+#   bench_calibration    — Table-2 bandwidth calibration (synthetic
+#                          recovery; rides in the lgr suite)
 #   roofline             — §Roofline terms from the dry-run artifacts
 #
 # ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels
@@ -21,6 +23,7 @@
 # --quick.
 import json
 import os
+import subprocess
 import sys
 import traceback
 
@@ -48,37 +51,78 @@ def _dump_rows(path: str, suite: str, rows) -> None:
     print(f"# wrote {path}", file=sys.stderr)
 
 
-def _check_regressions(path: str, rows) -> list:
-    """Compare fresh rows against the committed baseline; a timing row
-    more than REGRESSION_FACTOR slower is a regression.  Ratio rows
-    (us_per_call == 0) and rows new to this baseline are skipped."""
+def _check_regressions(path: str, rows, strict: bool = False) -> tuple:
+    """Compare fresh rows against the committed baseline.
+
+    Returns ``(regressions, missing)``: a timing row more than
+    REGRESSION_FACTOR slower is a regression; ratio rows (us_per_call ==
+    0) and rows new to this baseline are skipped.  ``missing`` lists
+    baseline rows ABSENT from the fresh run — a deleted or renamed bench
+    would otherwise hide its regression forever, because rewriting the
+    baseline silently drops the old row.  Missing rows are warnings by
+    default and additionally folded into ``regressions`` (i.e. failures)
+    when ``strict``."""
     if not os.path.exists(path):
-        return []
+        return [], []
     with open(path) as f:
         base = {r["name"]: r["us_per_call"] for r in json.load(f)["rows"]}
+    fresh = {r["name"]: r for r in _parse_rows(rows)}
     regs = []
-    for r in _parse_rows(rows):
+    for r in fresh.values():
         old = base.get(r["name"], 0.0)
         if old > 0.0 and r["us_per_call"] > REGRESSION_FACTOR * old:
             regs.append(f"{r['name']}: {r['us_per_call']:.1f}us vs "
                         f"baseline {old:.1f}us "
                         f"({r['us_per_call'] / old:.2f}x > "
                         f"{REGRESSION_FACTOR}x)")
-    return regs
+    missing = sorted(n for n in base if n not in fresh)
+    if strict:
+        regs.extend(f"{n}: baseline row missing from this run (deleted "
+                    f"or renamed bench?)" for n in missing)
+    return regs, missing
+
+
+def _tracked_pyc(root: str) -> list:
+    """Tracked ``__pycache__``/``.pyc`` artifacts (they have been
+    committed to this repo twice; the bench runner refuses to measure a
+    tree that still ships them).  Empty when git is unavailable."""
+    try:
+        proc = subprocess.run(["git", "ls-files"], cwd=root,
+                              capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.SubprocessError):
+        return []
+    if proc.returncode != 0:
+        return []
+    return [f for f in proc.stdout.splitlines()
+            if f.endswith(".pyc") or "__pycache__" in f.split("/")]
 
 
 def main() -> None:
-    from benchmarks import (bench_async, bench_backend, bench_kernels,
-                            bench_lgr, bench_mcc, bench_num_env,
-                            bench_reward, bench_selection, bench_serving,
-                            bench_sync_training, roofline)
+    from benchmarks import (bench_async, bench_backend, bench_calibration,
+                            bench_kernels, bench_lgr, bench_mcc,
+                            bench_num_env, bench_reward, bench_selection,
+                            bench_serving, bench_sync_training, roofline)
     from benchmarks.common import ROWS, emit
+
+    pyc = _tracked_pyc(_ROOT)
+    if pyc:
+        print("# TRACKED BYTECODE ARTIFACTS (git rm --cached them; "
+              ".gitignore should cover __pycache__/):", file=sys.stderr)
+        for f in pyc:
+            print(f"#   {f}", file=sys.stderr)
+        raise SystemExit(1)
+
+    def lgr_suite():
+        # calibration rows ride in the lgr suite: both land in
+        # BENCH_lgr.json under the same regression gate
+        bench_lgr.run()
+        bench_calibration.run()
 
     print("name,us_per_call,derived")
     suites = [
         ("serving", bench_serving.run),
         ("sync_training", bench_sync_training.run),
-        ("lgr", bench_lgr.run),
+        ("lgr", lgr_suite),
         ("mcc", bench_mcc.run),
         ("num_env", bench_num_env.run),
         ("async", bench_async.run),
@@ -88,8 +132,13 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]
-    args = [a for a in sys.argv[1:] if a != "--quick"]
+    flags = {"--quick", "--strict"}
+    args = [a for a in sys.argv[1:] if a not in flags]
     quick = "--quick" in sys.argv[1:]
+    # strict: a baseline row missing from the fresh run (deleted/renamed
+    # bench) is a gate FAILURE instead of a warning
+    strict = "--strict" in sys.argv[1:] \
+        or bool(os.environ.get("BENCH_STRICT"))
     only = args[0].split(",") if args else None
     if quick and only is None:
         only = ["mcc", "kernels", "lgr"]   # an explicit selection wins;
@@ -112,7 +161,13 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
         if quick and ok:
             path = f"BENCH_{name}.json"
-            regs = _check_regressions(path, ROWS[start:])
+            regs, missing = _check_regressions(path, ROWS[start:],
+                                               strict=strict)
+            for m in missing:
+                print(f"# WARNING: {name}: baseline row {m!r} absent "
+                      f"from this run — deleting/renaming a bench hides "
+                      f"its regression (run with --strict to fail)",
+                      file=sys.stderr)
             if regs and not allow_regression:
                 # keep the last good baseline so the next run still has
                 # something honest to diff against

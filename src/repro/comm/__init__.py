@@ -8,11 +8,45 @@ Public surface:
 * select — Algorithm-1 shape selection with an optional Table-2
   ``ReduceCostModel`` layered on top (``select_reduction_strategy``);
 * api — the :class:`Communicator` object every training layer consumes
-  instead of string-passing strategy names.
+  instead of string-passing strategy names;
+* calibrate — the :class:`BandwidthCalibrator` that inverts the Table-2
+  recurrences over live telemetry, replacing the model's static per-axis
+  bandwidth defaults with measured ones.
+
+Calibration knobs
+-----------------
+``Communicator(..., calibrate=True)`` (or ``enable_calibration()``, or
+``make_async_runner(..., calibrate=True)`` at the launch layer) attaches a
+:class:`BandwidthCalibrator`.  From then on:
+
+* every steady-state ``observe()`` sample (the compile-round first sample
+  per strategy is discarded) and every ``observe_transfer()`` channel
+  timing accumulates toward a least-squares fit of effective B1
+  (instance-level domain), B2 (cross-GPU), and B3 (intra-instance dev)
+  bandwidths — ``time = c1/B1 + c2/B2 + c3/B3`` per Table 2;
+* ``calibrated_cost_model()`` returns the fitted ``ReduceCostModel`` once
+  the system is well conditioned — and ``estimate()``, ``candidates()``,
+  and ``propose_switch()`` silently re-score against it — or ``None``
+  while it is not;
+* ``propose_probe()`` names a feasible strategy the fit still lacks
+  evidence for; the online controller schedules it as an in-place
+  measurement, one visit per candidate — a probe in progress is left
+  alone until its cell fills (Algorithm 2's explore step for
+  communication).
+
+``BandwidthCalibrator`` knobs: ``min_count`` (steady-state samples per
+(strategy, grid) cell before it enters the fit, default 2),
+``min_strategies`` (distinct evidence kinds before any fit, default 2 —
+a single strategy cannot separate the axes it mixes),
+``max_rel_residual`` (refuse fits that cannot explain their own inputs,
+default 0.35), ``transfer_weight``/``use_transfers`` (down-weight or
+disable the channel-transfer B1 evidence, defaults 0.25/on).
 
 ``repro.core.lgr`` remains as a thin deprecation shim over this package.
 """
 from repro.comm.api import Communicator, as_grad_sync  # noqa: F401
+from repro.comm.calibrate import (BandwidthCalibrator,  # noqa: F401
+                                  FitResult)
 from repro.comm.schedules import (STRATEGIES, flat_psum,  # noqa: F401
                                   hierarchical_psum, lgr_allreduce,
                                   make_grad_sync, mpr_host)

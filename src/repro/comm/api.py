@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.comm.calibrate import BandwidthCalibrator
 from repro.comm.schedules import (STRATEGIES, lgr_allreduce, make_grad_sync,
                                   mpr_host)
 from repro.comm.select import ReduceCostModel, select_reduction_strategy
@@ -63,7 +64,7 @@ class Communicator:
     def __init__(self, strategy: str, *, mesh=None,
                  grid: Optional[Sequence[int]] = None, average: bool = True,
                  cost_model: Optional[ReduceCostModel] = None,
-                 uniform: bool = True):
+                 uniform: bool = True, calibrate: bool = False):
         if strategy not in STRATEGIES:
             raise ValueError(f"unknown reduction strategy {strategy!r}; "
                              f"expected one of {STRATEGIES}")
@@ -82,12 +83,22 @@ class Communicator:
         self.cost_model = cost_model
         # strategy -> [ema_seconds, ema_bytes, observation_count]
         self._measured: Dict[str, list] = {}
+        # measured-bandwidth calibration (opt-in): steady-state observe()
+        # samples and channel-transfer timings accumulate here, and once
+        # the Table-2 inversion is well conditioned estimate()/best() are
+        # re-scored against the fitted bandwidths instead of the defaults
+        self.calibrator: Optional[BandwidthCalibrator] = None
+        self._calibrated: Optional[ReduceCostModel] = None
+        self._calibrated_at = -1          # calibrator.version of the cache
+        if calibrate:
+            self.enable_calibration()
 
     # ------------------------------------------------------ construction --
     @classmethod
     def from_layout(cls, layout, *, cost_model: Optional[ReduceCostModel]
                     = None, average: bool = True, with_mesh: bool = False,
-                    role: Optional[str] = None) -> Optional["Communicator"]:
+                    role: Optional[str] = None,
+                    calibrate: bool = False) -> Optional["Communicator"]:
         """Build from a placement layout: grid off the trainer MPL (the
         dev axis off the GMIs' device counts), strategy from Algorithm 1 —
         or the Table-2 cost model when one is supplied.  Returns ``None``
@@ -113,7 +124,7 @@ class Communicator:
             strategy = cm.best(grid, uniform)
         mesh = layout.manager.instance_mesh(role) if with_mesh else None
         return cls(strategy, mesh=mesh, grid=grid, average=average,
-                   cost_model=cm, uniform=uniform)
+                   cost_model=cm, uniform=uniform, calibrate=calibrate)
 
     def rebind(self, layout) -> "Communicator":
         """Re-derive the instance grid from a re-planned layout IN PLACE
@@ -121,8 +132,12 @@ class Communicator:
         times are cleared — they were taken against the old grid — and
         the active strategy is coerced to a feasible candidate of the new
         one (cost-scored best when the current choice no longer fits).
-        The mesh, if any, is NOT rebuilt here: mesh-attached communicators
-        belong to SPMD launchers that own their own re-layout."""
+        CALIBRATION observations survive: bandwidths are machine
+        properties, not layout properties, and every observation carries
+        the grid it was measured on — only the calibrator's base model is
+        refreshed to track the new dev axis.  The mesh, if any, is NOT
+        rebuilt here: mesh-attached communicators belong to SPMD
+        launchers that own their own re-layout."""
         mpl, grid, d, uniform, _ = _layout_grid(layout)
         self.grid = grid
         self.uniform = uniform
@@ -130,8 +145,11 @@ class Communicator:
             self.cost_model = dataclasses.replace(self.cost_model,
                                                   dev_per_inst=d)
         self._measured.clear()
+        if self.calibrator is not None:
+            self.calibrator.base = self.cost_model
+            self._calibrated_at = -1         # re-derive from the new base
         if self.strategy not in self.candidates():
-            self.strategy = self.cost_model.best(grid, uniform)
+            self.strategy = self.effective_cost_model.best(grid, uniform)
         return self
 
     # ---------------------------------------------------------- reduce ----
@@ -185,50 +203,118 @@ class Communicator:
                 strategy: Optional[str] = None):
         """Record one measured reduce round (EMA over rounds).  ``nbytes``
         defaults to the cost model's bytes-per-round when the caller
-        cannot cheaply size the gradient tree."""
+        cannot cheaply size the gradient tree.
+
+        The FIRST observation per strategy is provisional: on any jitted
+        path it is the compile round — exactly the stale one-off sample
+        the ``switch()`` docstring warns about — so the second observation
+        RESEEDS the EMA instead of averaging against it (a 100x compile
+        round would otherwise contaminate the EMA for ~7 half-lives).
+        Only steady-state samples (second onward) feed the calibrator.
+        """
         s = strategy or self.strategy
         if nbytes is None:
             nbytes = self.cost_model.bytes_per_round
         rec = self._measured.get(s)
         if rec is None:
             self._measured[s] = [float(seconds), float(nbytes), 1]
+            return
+        if rec[2] == 1:
+            # discard the provisional compile-round sample entirely
+            self._measured[s] = [float(seconds), float(nbytes), 2]
         else:
             a = 0.5                          # smooth but responsive
             rec[0] = (1 - a) * rec[0] + a * float(seconds)
             rec[1] = (1 - a) * rec[1] + a * float(nbytes)
             rec[2] += 1
+        if self.calibrator is not None and self.grid is not None:
+            self.calibrator.add(s, self.grid, seconds, float(nbytes))
+
+    def observe_transfer(self, seconds: float, nbytes: float):
+        """Feed one per-round channel-transfer timing (experience moved
+        over the instance-level domain) into the calibration fit as B1
+        evidence.  No-op unless calibration is enabled."""
+        if self.calibrator is not None:
+            self.calibrator.add_transfer(seconds, nbytes)
 
     def measured(self, strategy: Optional[str] = None) -> Optional[float]:
         rec = self._measured.get(strategy or self.strategy)
         return rec[0] if rec else None
 
+    def measurements(self) -> Dict[str, Tuple[float, float, int]]:
+        """Per-strategy ``(ema_seconds, ema_bytes, count)`` snapshot of
+        the live table (telemetry/inspection; the calibrator is fed
+        sample by sample from ``observe()``, not from these EMAs)."""
+        return {s: (rec[0], rec[1], rec[2])
+                for s, rec in self._measured.items()}
+
+    # --------------------------------------------------- calibration ------
+    def enable_calibration(self, **knobs) -> BandwidthCalibrator:
+        """Attach a :class:`BandwidthCalibrator` (idempotent).  From here
+        on, steady-state ``observe()`` samples and ``observe_transfer()``
+        timings accumulate toward a measured-bandwidth fit, and
+        ``estimate()``/``best()``/``propose_switch()`` re-score against
+        the calibrated model the moment it is well conditioned."""
+        if self.calibrator is None:
+            self.calibrator = BandwidthCalibrator(base=self.cost_model,
+                                                  **knobs)
+        return self.calibrator
+
+    def calibrated_cost_model(self) -> Optional[ReduceCostModel]:
+        """The measured-bandwidth ``ReduceCostModel``, or ``None`` while
+        calibration is disabled or the fit is still ill-conditioned.
+        Cached per calibrator version — refitting is cheap but not free
+        on the per-round path."""
+        if self.calibrator is None:
+            return None
+        if self._calibrated_at != self.calibrator.version:
+            self._calibrated = self.calibrator.calibrated_model()
+            self._calibrated_at = self.calibrator.version
+        return self._calibrated
+
+    @property
+    def calibrated(self) -> bool:
+        return self.calibrated_cost_model() is not None
+
+    @property
+    def effective_cost_model(self) -> ReduceCostModel:
+        """What scoring actually runs against: the calibrated model once
+        one exists, the static-default ``cost_model`` until then."""
+        cm = self.calibrated_cost_model()
+        return cm if cm is not None else self.cost_model
+
     def candidates(self):
         if self.grid is None:
             return [self.strategy]
-        return self.cost_model.candidates(self.grid, self.uniform)
+        return self.effective_cost_model.candidates(self.grid, self.uniform)
 
     def estimate(self, strategy: Optional[str] = None,
                  nbytes: Optional[float] = None) -> float:
-        """Table-2 predicted reduce seconds on this grid."""
+        """Table-2 predicted reduce seconds on this grid — against the
+        calibrated bandwidths once the fit is conditioned."""
         if self.grid is None:
             raise ValueError("Communicator has no instance grid")
-        return self.cost_model.time(strategy or self.strategy, self.grid,
-                                    nbytes)
+        return self.effective_cost_model.time(
+            strategy or self.strategy, self.grid, nbytes)
 
-    def propose_switch(self, min_gain: float = 1.05) -> Optional[str]:
+    def propose_switch(self, min_gain: float = 1.05,
+                       min_count: int = 3) -> Optional[str]:
         """The strategy the measured evidence says we should be running,
         or ``None`` to stay put.
 
-        Candidates with their own measurements answer with measured time;
-        unmeasured candidates answer with the Table-2 estimate scaled by
-        the current strategy's measured/modelled ratio (so the model's
+        Candidates with their own steady-state measurements answer with
+        measured time; unmeasured candidates answer with the Table-2
+        estimate (calibrated bandwidths once available) scaled by the
+        current strategy's measured/modelled ratio (so the model's
         absolute bandwidth guesses cancel out and only the *relative*
-        Table-2 structure is trusted).  A switch needs the current
-        measured time to exceed the best alternative by ``min_gain`` —
+        Table-2 structure is trusted).  A switch needs ``min_count``
+        observations of the current strategy — one GC pause or compile
+        round must never trigger a drain-free switch — and the current
+        measured time to exceed the best alternative by ``min_gain``,
         the same hysteresis the controller applies to layout re-plans.
         """
         cur = self._measured.get(self.strategy)
-        if cur is None or self.grid is None:
+        if cur is None or self.grid is None or cur[2] < min_count:
             return None
         t_cur, nbytes, _ = cur
         model_cur = self.estimate(self.strategy, nbytes)
@@ -238,11 +324,40 @@ class Communicator:
             if s == self.strategy:
                 continue
             rec = self._measured.get(s)
-            t_s = rec[0] if rec else self.estimate(s, nbytes) * scale
+            # a candidate's lone sample is its compile round: fall back
+            # to the scaled model until it has a steady-state record
+            t_s = rec[0] if rec and rec[2] >= 2 \
+                else self.estimate(s, nbytes) * scale
             if t_s < best_t:
                 best, best_t = s, t_s
         if best != self.strategy and t_cur > min_gain * best_t:
             return best
+        return None
+
+    def propose_probe(self) -> Optional[str]:
+        """A feasible candidate strategy the calibration fit still lacks
+        measurements for, or ``None``.  The controller schedules the
+        probe as an in-place strategy switch (Algorithm 2's explore step
+        applied to communication): without it a fit over a single
+        strategy stays ill-conditioned forever.  ``None`` while the
+        CURRENT strategy's calibration cell is still filling — a probe
+        in progress is left alone until it has the samples it was
+        scheduled for, so every candidate is visited once, not bounced
+        to and revisited.  Only meaningful while calibration is on."""
+        if self.calibrator is None or self.grid is None:
+            return None
+        cur = self._measured.get(self.strategy)
+        if cur is None or cur[2] < 2:
+            return None              # measure where we stand first
+        if self.calibrator.samples(self.strategy, self.grid) \
+                < self.calibrator.min_count:
+            return None              # current probe still collecting
+        for s in self.candidates():
+            if s == self.strategy:
+                continue
+            if self.calibrator.samples(s, self.grid) \
+                    < self.calibrator.min_count:
+                return s
         return None
 
     def switch(self, strategy: str) -> "Communicator":
@@ -252,7 +367,10 @@ class Communicator:
         state is involved.  Measurements of OTHER strategies are dropped:
         a stale one-off sample (compile round, GC pause) would otherwise
         outrank the model forever and permanently exclude a strategy that
-        is never active to re-measure itself.  Returns self."""
+        is never active to re-measure itself.  Calibration observations
+        persist — the fit wants evidence from every strategy, and its
+        conditioning checks guard it against sparse cells.  Returns
+        self."""
         if strategy not in STRATEGIES:
             raise ValueError(f"unknown reduction strategy {strategy!r}; "
                              f"expected one of {STRATEGIES}")
@@ -266,9 +384,11 @@ class Communicator:
         return self
 
     def __repr__(self):
+        calib = "off" if self.calibrator is None else \
+            ("fit" if self.calibrated else "collecting")
         return (f"Communicator(strategy={self.strategy!r}, grid={self.grid},"
                 f" axes={self.axes}, average={self.average}, "
-                f"measured={sorted(self._measured)})")
+                f"measured={sorted(self._measured)}, calibration={calib})")
 
 
 def as_grad_sync(fn_or_comm):

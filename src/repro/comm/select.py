@@ -88,27 +88,33 @@ class ReduceCostModel:
                 cands.append("har3")
         return cands
 
-    def time(self, strategy: str, grid: Sequence[int],
-             nbytes: Optional[float] = None) -> float:
-        """Predicted reduce seconds for one strategy on one grid."""
-        from repro.core.cost_model import (lgr_time_har, lgr_time_har3,
-                                           lgr_time_mpr, lgr_time_mrr)
+    def coeffs(self, strategy: str, grid: Sequence[int],
+               nbytes: Optional[float] = None) -> Tuple[float, float, float]:
+        """Per-axis coefficients ``(c1, c2, c3)`` of the Table-2 form
+        ``time == c1/bw_intra + c2/bw_gpu + c3/bw_dev`` on one grid, with
+        the same axis-merging conventions as :meth:`time` (the 2-level
+        forms run on the merged (inst, dev) plane).  This is the design
+        row the :class:`~repro.comm.calibrate.BandwidthCalibrator`
+        inverts — prediction and calibration share one source of truth.
+        """
+        from repro.core.cost_model import lgr_coeffs
         g, t, d = _grid3(grid)
         mp = float(nbytes if nbytes is not None else self.bytes_per_round)
-        if strategy == "mpr":
-            return lgr_time_mpr(g, t * d, mp, self.bw_intra, self.bw_gpu)
-        if strategy == "mrr":
-            return lgr_time_mrr(g, t * d, mp, self.bw_intra, self.bw_gpu)
-        if strategy == "har":
-            # 2-level: the merged (inst, dev) plane is the intra domain
-            return lgr_time_har(g, t * d, mp, self.bw_intra, self.bw_gpu)
         if strategy == "har3":
             if d <= 1:
                 raise ValueError("har3 needs a dev axis (dev_per_inst > 1)")
-            return lgr_time_har3(g, t, d, mp, self.bw_intra, self.bw_gpu,
-                                 self.bw_dev)
+            return lgr_coeffs("har3", g, t, d, mp)
+        if strategy in ("mpr", "mrr", "har"):
+            # 2-level: the merged (inst, dev) plane is the intra domain
+            return lgr_coeffs(strategy, g, t * d, 1, mp)
         raise ValueError(f"unknown reduction strategy {strategy!r}; "
                          f"expected one of {STRATEGIES}")
+
+    def time(self, strategy: str, grid: Sequence[int],
+             nbytes: Optional[float] = None) -> float:
+        """Predicted reduce seconds for one strategy on one grid."""
+        c1, c2, c3 = self.coeffs(strategy, grid, nbytes)
+        return c1 / self.bw_intra + c2 / self.bw_gpu + c3 / self.bw_dev
 
     def best(self, grid: Sequence[int], uniform: bool = True,
              nbytes: Optional[float] = None) -> str:

@@ -71,6 +71,7 @@ granularity instead.  The seed host-staging path survives as
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -383,6 +384,9 @@ class MultiChannelPipeline:
         self.spill_count = 0
         self.occupancy_high_water = 0.0
         self.delivered_samples = 0
+        # per-round (seconds, bytes) channel-transfer timings for the
+        # bandwidth calibrator; bounded so an idle consumer can't grow it
+        self._transfer_samples: List[Tuple[float, int]] = []
 
     def _ring_for(self, agent_gmi: int, exp: Experience) -> ChannelRing:
         group = self._group_of[agent_gmi]
@@ -422,6 +426,7 @@ class MultiChannelPipeline:
         materialize while pushes kept landing in the front halves.  The
         first flush returns ``{}``; :meth:`drain` delivers the tail.
         """
+        t0 = time.perf_counter()
         current: List[Tuple[int, Dict[str, jax.Array]]] = []
         for gkey, snaps in self._pending.items():
             current.extend((gkey, ch) for ch in snaps)
@@ -435,6 +440,7 @@ class MultiChannelPipeline:
             groups = current
         if not groups:
             return {}
+        bytes_before = self.compressor.stats.total_bytes
         self.compressor.record_flush([ch for _, ch in groups])
         out: Dict[int, List[Experience]] = {}
         for gkey, ch in groups:
@@ -442,7 +448,24 @@ class MultiChannelPipeline:
                 ch, agent_gpu=None if gkey == -1 else gkey)
             out.setdefault(dst, []).extend(self.batchers[dst].prepare(ch))
             self.delivered_samples += int(np.prod(ch["rewards"].shape))
+        nbytes = self.compressor.stats.total_bytes - bytes_before
+        if nbytes > 0:
+            # one (seconds, bytes) sample per delivering flush — the live
+            # channel-transfer evidence the bandwidth calibrator consumes
+            # (overlap mode undercounts: the back generation materialized
+            # during the previous round, which is why the calibrator
+            # down-weights transfer rows relative to reduce rows)
+            self._transfer_samples.append(
+                (time.perf_counter() - t0, int(nbytes)))
+            del self._transfer_samples[:-64]
         return out
+
+    def take_transfer_samples(self) -> List[Tuple[float, int]]:
+        """Per-flush (seconds, bytes) channel-transfer timings since the
+        last call — drained by the controller into the communicator's
+        bandwidth calibrator."""
+        samples, self._transfer_samples = self._transfer_samples, []
+        return samples
 
     def drain(self) -> Dict[int, List[Experience]]:
         """Pipeline-ending flush: deliver the in-flight back buffers AND

@@ -37,6 +37,15 @@ running against *live* measurements.  This controller closes that loop:
   choice by more than the same ``min_gain`` hysteresis, the decision
   carries a ``reduction_strategy`` — applied by ``AsyncRunner.replan``
   as pure communication plumbing (model/optimizer state untouched).
+  With calibration enabled on the communicator, those same measured
+  reduce times (plus the pipeline's channel-transfer timings, forwarded
+  by :meth:`OnlineGMIController.observe_pipeline`) feed a
+  :class:`~repro.comm.calibrate.BandwidthCalibrator`; once its Table-2
+  inversion is conditioned the switch decision is scored against
+  *measured* per-axis bandwidths instead of the static defaults; while
+  feasible candidates remain unmeasured the controller schedules
+  in-place probes of them (one visit each — a probe in progress is left
+  alone until its calibration cell fills) to condition the fit.
 
 ``plan_layout`` materializes the current decision as a
 ``placement.plan_async`` layout so the runner can rebuild its pipeline
@@ -121,7 +130,14 @@ class OnlineGMIController:
     def observe_pipeline(self, pipeline, samples: int,
                          dt: float) -> Optional[Decision]:
         """Convenience: pull occupancy/spill/bytes deltas off a
-        ``MultiChannelPipeline`` after one round and :meth:`record`."""
+        ``MultiChannelPipeline`` after one round and :meth:`record`.
+        When the communicator is calibrating, the pipeline's per-round
+        channel-transfer timings are forwarded as B1 evidence."""
+        if self.communicator is not None:
+            take = getattr(pipeline, "take_transfer_samples", None)
+            if take is not None:
+                for sec, nbytes in take():
+                    self.communicator.observe_transfer(sec, nbytes)
         if pipeline.spill_count < self._spill_mark \
                 or pipeline.stats.total_bytes < self._bytes_mark:
             # fresh pipeline after a re-plan: counters restarted at zero
@@ -262,17 +278,33 @@ class OnlineGMIController:
         # 3. reduction strategy from measured reduce time: when the live
         #    per-round reduce measurements disagree with the current LGR
         #    choice by more than the same min_gain hysteresis, fold a
-        #    strategy switch into the re-plan (Table-2 cost model scaled
-        #    by the measured/modelled ratio — see Communicator)
+        #    strategy switch into the re-plan (Table-2 cost model —
+        #    calibrated per-axis bandwidths once the fit is conditioned,
+        #    the static defaults until then — scaled by the measured/
+        #    modelled ratio; see Communicator).  While feasible
+        #    candidates remain unmeasured, propose an in-place probe of
+        #    one instead (the communication analogue of the num_env
+        #    ladder walk above).
         reduction_strategy = None
         if self.communicator is not None:
-            switch = self.communicator.propose_switch(cfg.min_gain)
+            comm = self.communicator
+            switch = comm.propose_switch(cfg.min_gain)
             if switch is not None:
                 reduction_strategy = switch
+                basis = "calibrated Table-2 bandwidths" \
+                    if getattr(comm, "calibrated", False) \
+                    else "default Table-2 bandwidths"
                 note = (f"measured reduce time favors {switch} over "
-                        f"{self.communicator.strategy} "
-                        f"(> {cfg.min_gain:.2f}x)")
+                        f"{comm.strategy} (> {cfg.min_gain:.2f}x, "
+                        f"{basis})")
                 reason = f"{reason}; {note}" if reason else note
+            elif cfg.probe and reason is None:
+                probe_strategy = comm.propose_probe() \
+                    if hasattr(comm, "propose_probe") else None
+                if probe_strategy is not None:
+                    reduction_strategy = probe_strategy
+                    reason = (f"probe reduction strategy {probe_strategy} "
+                              "(unmeasured by the bandwidth calibration)")
 
         if reason is None:
             return None

@@ -54,6 +54,32 @@ def lgr_time_har3(g: int, t: int, d: int, M_p: float, B1: float,
 LGR_TIMES = {"mpr": lgr_time_mpr, "mrr": lgr_time_mrr, "har": lgr_time_har}
 
 
+def lgr_coeffs(strategy: str, g: int, t: int, d: int, M_p: float) \
+        -> tuple:
+    """Per-axis byte coefficients of the Table-2 recurrences.
+
+    Every ``lgr_time_*`` form above is linear in the *inverse* bandwidths:
+    ``time == c1/B1 + c2/B2 + c3/B3``.  This returns ``(c1, c2, c3)`` —
+    the design row the bandwidth calibrator
+    (:class:`repro.comm.calibrate.BandwidthCalibrator`) inverts to fit
+    effective B1/B2/B3 from measured reduce seconds.  The 2-level forms
+    (mpr/mrr/har) take the merged instance count as ``t`` and ignore
+    ``d``, mirroring how :class:`repro.comm.select.ReduceCostModel`
+    evaluates them.
+    """
+    if strategy == "mpr":
+        return (2 * (g * t - 1) * M_p / (g * t), 0.0, 0.0)
+    if strategy == "mrr":
+        return (0.0, 2 * (g - 1) * (t + 1) * M_p / g, 0.0)
+    if strategy == "har":
+        return (2 * (t - 1) * M_p / t, 2 * (g - 1) * M_p / g, 0.0)
+    if strategy == "har3":
+        return (2 * (t - 1) * M_p / (d * t),
+                2 * (g - 1) * M_p / (t * d * g),
+                2 * (d - 1) * M_p / d)
+    raise ValueError(f"unknown reduction strategy {strategy!r}")
+
+
 def best_lgr(g: int, t: int, M_p: float, B1: float, B2: float) -> str:
     feasible = {"mpr", "har"} | ({"mrr"} if t <= g else set())
     return min(feasible, key=lambda s: LGR_TIMES[s](g, t, M_p, B1, B2))

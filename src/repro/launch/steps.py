@@ -236,13 +236,19 @@ def make_serve_step(cfg: ModelConfig, mesh, shape: InputShape,
 # compiles to and how the experience pipeline is laid out over GMIs.
 
 def make_communicator(layout, cost_model=None, *, average: bool = True,
-                      with_mesh: bool = False):
+                      with_mesh: bool = False, calibrate: bool = False):
     """The layout's ``repro.comm.Communicator``: instance grid off the
     trainer MPL (incl. the trailing ``dev`` axis for multi-device GMIs),
     strategy from Algorithm 1 — or Table-2 cost-scored when a
-    ``ReduceCostModel`` is supplied.  ``None`` for serving-only layouts."""
-    return layout.communicator(cost_model, average=average,
+    ``ReduceCostModel`` is supplied.  ``None`` for serving-only layouts.
+    ``calibrate=True`` attaches a ``BandwidthCalibrator`` so measured
+    reduce/transfer timings replace the model's static per-axis
+    bandwidth defaults once the Table-2 inversion is conditioned."""
+    comm = layout.communicator(cost_model, average=average,
                                with_mesh=with_mesh)
+    if comm is not None and calibrate:
+        comm.enable_calibration()
+    return comm
 
 
 def make_drl_train_step(env, ppo_cfg=None, grad_sync_fn=None,
@@ -312,7 +318,8 @@ def make_online_controller(layout, num_env: int, controller_cfg=None,
 
 def make_async_runner(env, layout, overlap: bool = False,
                       online_controller: bool = False,
-                      controller_cfg=None, communicator=None, **kwargs):
+                      controller_cfg=None, communicator=None,
+                      calibrate: bool = False, **kwargs):
     """Async A3C driver over ``make_experience_pipeline(layout)``.
 
     ``overlap=True`` runs the double-buffered serve-while-train pipeline;
@@ -320,10 +327,17 @@ def make_async_runner(env, layout, overlap: bool = False,
     re-plans the GMI layout between training epochs from live stats.
     ``communicator=True`` builds the layout's Communicator (gradient
     reduction through ``repro.comm``, timed per round); an explicit
-    Communicator instance is used as-is."""
+    Communicator instance is used as-is.  ``calibrate=True`` enables
+    measured-bandwidth calibration on the communicator (building one
+    from the layout if none was asked for): live reduce and
+    channel-transfer timings then feed the Table-2 inversion, and the
+    controller's strategy decisions re-score against the fitted
+    bandwidths instead of the static defaults."""
     from repro.rl.a3c import AsyncRunner
-    if communicator is True:
-        communicator = make_communicator(layout)
+    if communicator is True or (calibrate and communicator is None):
+        communicator = make_communicator(layout, calibrate=calibrate)
+    elif calibrate and communicator is not None:
+        communicator.enable_calibration()
     controller = None
     layout_builder = None
     if online_controller:

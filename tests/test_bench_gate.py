@@ -1,0 +1,117 @@
+"""The benchmark regression gate and repo-hygiene guards.
+
+``benchmarks/run.py::_check_regressions`` used to skip rows new to the
+baseline AND silently ignore baseline rows absent from the fresh run —
+deleting or renaming a bench hid its regression forever (the rewrite
+dropped the old row).  These tests pin the gate's behavior for an added,
+a removed, and a regressed row, plus the strict mode that turns missing
+rows into failures; and they pin that no ``__pycache__``/``.pyc``
+artifact is ever tracked again (it has happened twice: 8436fa0 removed
+six, bd262a9 re-committed them)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from benchmarks.run import (REGRESSION_FACTOR,  # noqa: E402
+                            _check_regressions, _tracked_pyc)
+
+
+def _write_baseline(path, rows):
+    with open(path, "w") as f:
+        json.dump({"suite": "x", "rows": [
+            {"name": n, "us_per_call": us, "derived": ""}
+            for n, us in rows]}, f)
+
+
+@pytest.fixture
+def baseline(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    _write_baseline(path, [("steady", 100.0), ("regressor", 100.0),
+                           ("removed", 100.0), ("ratio", 0.0)])
+    return path
+
+
+# fresh run: steady row fine, regressor 3x slower, "removed" gone,
+# "added" new to this baseline, ratio row still a ratio row
+FRESH = ["steady,110.0,ok",
+         f"regressor,{100.0 * REGRESSION_FACTOR * 1.5},bad",
+         "added,10.0,new",
+         "ratio,0.0,still_a_ratio"]
+
+
+def test_gate_regressed_row_flagged(baseline):
+    regs, missing = _check_regressions(baseline, FRESH)
+    assert len(regs) == 1 and regs[0].startswith("regressor:")
+    assert "3.00x" in regs[0]
+
+
+def test_gate_added_row_skipped(baseline):
+    regs, missing = _check_regressions(baseline, FRESH)
+    assert not any("added" in r for r in regs)
+    assert "added" not in missing
+
+
+def test_gate_removed_row_reported_not_fatal_by_default(baseline):
+    regs, missing = _check_regressions(baseline, FRESH)
+    assert missing == ["removed"]
+    assert not any("removed" in r for r in regs)
+
+
+def test_gate_removed_row_fails_under_strict(baseline):
+    regs, missing = _check_regressions(baseline, FRESH, strict=True)
+    assert missing == ["removed"]
+    assert any(r.startswith("removed:") and "missing" in r for r in regs)
+    # the genuine regression is still reported alongside
+    assert any(r.startswith("regressor:") for r in regs)
+
+
+def test_gate_no_baseline_is_clean(tmp_path):
+    regs, missing = _check_regressions(str(tmp_path / "nope.json"), FRESH,
+                                       strict=True)
+    assert regs == [] and missing == []
+
+
+def test_gate_within_factor_is_clean(baseline):
+    rows = ["steady,199.0,ok", "regressor,150.0,ok", "removed,100.0,ok",
+            "ratio,0.0,r"]
+    regs, missing = _check_regressions(baseline, rows, strict=True)
+    assert regs == [] and missing == []
+
+
+# ------------------------------------------------------- repo hygiene ------
+def _git_ls_files():
+    try:
+        proc = subprocess.run(["git", "ls-files"], cwd=ROOT,
+                              capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return proc.stdout.splitlines() if proc.returncode == 0 else None
+
+
+def test_no_tracked_bytecode_artifacts():
+    """`git ls-files` must contain no __pycache__/.pyc entries — the
+    guard that keeps the bd262a9 re-commit from happening a third time
+    (benchmarks/run.py refuses to run against such a tree too)."""
+    files = _git_ls_files()
+    if files is None:
+        pytest.skip("git unavailable or not a work tree")
+    bad = [f for f in files
+           if f.endswith(".pyc") or "__pycache__" in f.split("/")]
+    assert not bad, f"tracked bytecode artifacts: {bad}"
+    # the bench runner's pre-flight check agrees
+    assert _tracked_pyc(ROOT) == []
+
+
+def test_gitignore_covers_bytecode():
+    with open(os.path.join(ROOT, ".gitignore")) as f:
+        patterns = [ln.strip() for ln in f if ln.strip()
+                    and not ln.startswith("#")]
+    assert "__pycache__/" in patterns
+    assert any(p in ("*.pyc", "*.py[cod]") for p in patterns)

@@ -109,6 +109,30 @@ def test_bytes_per_transfer_zero_transfers():
     assert MultiChannelPipeline([0], [1]).stats.bytes_per_transfer == 0.0
 
 
+def test_transfer_samples_track_delivering_flushes():
+    """Each delivering flush leaves one (seconds, bytes) sample for the
+    bandwidth calibrator; empty flushes leave none; take drains."""
+    pipe = MultiChannelPipeline([0, 1], [9])
+    pipe.push(0, _exp())
+    pipe.push(1, _exp(base=10.0))
+    assert pipe.flush()
+    assert pipe.flush() == {}                  # drained: no second sample
+    samples = pipe.take_transfer_samples()
+    assert len(samples) == 1
+    sec, nbytes = samples[0]
+    assert sec > 0.0 and nbytes == pipe.stats.total_bytes
+    assert pipe.take_transfer_samples() == []  # drained the telemetry too
+    # overlap mode: the swap flush delivers one round late but still
+    # yields exactly one sample per DELIVERING flush
+    over = MultiChannelPipeline([0, 1], [9], overlap=True)
+    over.push(0, _exp())
+    assert over.flush() == {}                  # first flush: swap only
+    assert over.take_transfer_samples() == []
+    over.push(0, _exp(base=5.0))
+    assert over.flush()                        # delivers round 1's swap
+    assert len(over.take_transfer_samples()) == 1
+
+
 def test_pipeline_uneven_batch_envs_slicing():
     pipe = MultiChannelPipeline([0, 1], [7], batch_mode="slice",
                                 batch_envs=5)

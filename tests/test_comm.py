@@ -202,17 +202,56 @@ def test_propose_switch_measured_hysteresis():
     cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
     comm = Communicator("mpr", grid=(2, 2, 2), cost_model=cm)
     assert comm.propose_switch() is None     # nothing measured yet
-    comm.observe(1.0)                        # measured: mpr is slow
+    for _ in range(3):                       # persistent: mpr is slow
+        comm.observe(1.0)
     assert comm.propose_switch(1.05) == "har3"
     # measured evidence on a candidate beats the model: once har3 has
-    # actually measured WORSE than mpr it drops out, and the proposal
-    # falls back to the next-best (model-scaled) candidate
+    # actually measured WORSE than mpr (steady state, not a lone compile
+    # round) it drops out, and the proposal falls back to the next-best
+    # (model-scaled) candidate
+    comm.observe(2.0, strategy="har3")
     comm.observe(2.0, strategy="har3")
     assert comm.propose_switch(1.05) == "har"
     # marginal disagreement stays put (hysteresis)
     best = Communicator("har3", grid=(2, 2, 2), cost_model=cm)
-    best.observe(1.0)
+    for _ in range(3):
+        best.observe(1.0)
     assert best.propose_switch(1.05) is None
+
+
+def test_observe_discards_compile_round_first_sample():
+    """Satellite bugfix: the per-strategy EMA used to be SEEDED with the
+    first observation — on any jitted path the compile round, exactly
+    the stale one-off sample switch() warns about.  A synthetic 100x
+    slower first sample must vanish from the EMA at the second."""
+    comm = Communicator("mpr", grid=(2, 2))
+    comm.observe(100.0)                      # compile round: 100x slower
+    assert comm.measured("mpr") == 100.0     # provisional until steady
+    comm.observe(1.0)
+    assert comm.measured("mpr") == 1.0       # reseeded, poison discarded
+    comm.observe(1.0)
+    assert comm.measured("mpr") == pytest.approx(1.0)
+    # had the 100x sample stayed in a 0.5-EMA it would still be ~25x off
+    # here; the steady-state table must not remember it at all
+    sec, nbytes, count = comm.measurements()["mpr"]
+    assert sec == pytest.approx(1.0) and count == 3
+
+
+def test_propose_switch_needs_min_observation_count():
+    """Satellite bugfix: propose_switch used to fire off a SINGLE
+    observation of the current strategy — one GC pause could trigger a
+    drain-free switch.  1-2 noisy samples never switch; persistent
+    evidence still does."""
+    cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
+    comm = Communicator("mpr", grid=(2, 2, 2), cost_model=cm)
+    comm.observe(50.0)                       # one GC-pause-sized outlier
+    assert comm.propose_switch(1.05) is None
+    comm.observe(1.0)
+    assert comm.propose_switch(1.05) is None  # still below min_count
+    comm.observe(1.0)
+    assert comm.propose_switch(1.05) == "har3"   # persistent evidence
+    # the knob is honest: a higher floor keeps refusing
+    assert comm.propose_switch(1.05, min_count=10) is None
 
 
 # ------------------------------------------------------ average semantics --
@@ -251,11 +290,245 @@ def test_core_lgr_shim_deprecation_and_reexports():
     np.testing.assert_allclose(lgr.mpr_host(gs)["w"], np.ones(3))
 
 
+# ------------------------------------------------- bandwidth calibration ---
+def _planted_truth():
+    """This-host-like ground truth: the host-staged instance-level domain
+    is FAST and the cross-GPU interconnect slow — the regime where the
+    static defaults mis-rank strategies (ROADMAP: mpr wins here while
+    the Table-2 defaults say otherwise)."""
+    return ReduceCostModel(bw_intra=400e9, bw_gpu=5e9, bw_dev=50e9,
+                           bytes_per_round=6e6, dev_per_inst=2)
+
+
+def _feed(comm_or_cal, truth, grid, strategies, n=3, noise=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    for s in strategies:
+        for _ in range(n):
+            sec = truth.time(s, grid) * (1 + noise * rng.standard_normal())
+            if isinstance(comm_or_cal, Communicator):
+                comm_or_cal.observe(sec, 6e6, strategy=s)
+            else:
+                comm_or_cal.add(s, grid, sec, 6e6)
+
+
+def _feed_transfers(comm, truth, n=2, nbytes=1e6):
+    """Channel-transfer telemetry consistent with the planted B1 — the
+    redundant evidence the fit demands before trusting its residual."""
+    for _ in range(n):
+        comm.observe_transfer(nbytes / truth.bw_intra, nbytes)
+
+
+def test_calibrator_recovers_planted_bandwidths_2x2():
+    from repro.comm import BandwidthCalibrator
+    truth = _planted_truth()
+    cal = BandwidthCalibrator(base=ReduceCostModel(bytes_per_round=6e6))
+    _feed(cal, truth, (2, 2), ("mpr", "mrr", "har"))
+    fit = cal.fit()
+    assert fit is not None
+    assert fit.bw_intra == pytest.approx(400e9, rel=0.10)
+    assert fit.bw_gpu == pytest.approx(5e9, rel=0.10)
+    # no dev axis anywhere in the evidence: B3 stays the base default
+    assert fit.solved == ("B1", "B2")
+    assert fit.bw_dev == cal.base.bw_dev
+
+
+def test_calibrator_recovers_planted_bandwidths_2x2x2_all_strategies():
+    """Acceptance: all four strategy forms, both grids, noisy timings —
+    every planted bandwidth recovered within 10%."""
+    from repro.comm import BandwidthCalibrator
+    truth = _planted_truth()
+    cal = BandwidthCalibrator(base=ReduceCostModel(bytes_per_round=6e6,
+                                                   dev_per_inst=2))
+    _feed(cal, truth, (2, 2), ("mpr", "mrr", "har"), noise=0.02)
+    _feed(cal, truth, (2, 2, 2), ("mpr", "har", "har3"), noise=0.02,
+          seed=1)
+    fit = cal.fit()
+    assert fit is not None
+    assert fit.solved == ("B1", "B2", "B3")
+    assert sorted(fit.strategies) == ["har", "har3", "mpr", "mrr"]
+    assert fit.bw_intra == pytest.approx(400e9, rel=0.10)
+    assert fit.bw_gpu == pytest.approx(5e9, rel=0.10)
+    assert fit.bw_dev == pytest.approx(50e9, rel=0.10)
+
+
+def test_calibrator_refuses_ill_conditioned_input():
+    """One strategy observed — however many samples — cannot separate
+    the axes it mixes: no model is emitted.  Neither is one for an
+    exactly-determined system (zero residual by construction, so noise
+    would be accepted blindly)."""
+    from repro.comm import BandwidthCalibrator
+    cal = BandwidthCalibrator()
+    for _ in range(20):
+        cal.add("har", (2, 2), 1e-3, 6e6)
+    assert cal.fit() is None
+    assert cal.calibrated_model() is None
+    # below the per-cell sample floor nothing fits either
+    thin = BandwidthCalibrator(min_count=3)
+    thin.add("mpr", (2, 2), 1e-3, 6e6)
+    thin.add("har", (2, 2), 1e-3, 6e6)
+    assert thin.fit() is None
+    # two cells over two axes is square: refused until a redundant
+    # equation lets the residual gate actually see disagreement
+    truth = _planted_truth()
+    square = BandwidthCalibrator(base=ReduceCostModel(bytes_per_round=6e6))
+    _feed(square, truth, (2, 2), ("mpr", "har"))
+    assert square.fit() is None
+    _feed(square, truth, (4, 2), ("har",))
+    assert square.fit() is not None
+
+
+def test_calibrator_residual_gate_rejects_inconsistent_evidence():
+    """A redundant system whose equations disagree wildly (timings that
+    no bandwidth assignment explains) must not emit a model."""
+    from repro.comm import BandwidthCalibrator
+    truth = _planted_truth()
+    cal = BandwidthCalibrator(base=ReduceCostModel(bytes_per_round=6e6))
+    _feed(cal, truth, (2, 2), ("mpr", "mrr", "har"))
+    assert cal.fit() is not None
+    # an mpr cell on another grid claiming 50x the consistent B1 rate
+    for _ in range(3):
+        cal.add("mpr", (4, 2), truth.time("mpr", (4, 2)) * 50.0, 6e6)
+    assert cal.fit() is None                 # residual gate refuses
+
+
+def test_calibrator_transfer_timings_condition_b1():
+    """Channel-transfer timings are B1 evidence: mrr alone only sees B2,
+    but together with the pipeline's transfer stream the fit conditions."""
+    from repro.comm import BandwidthCalibrator
+    truth = _planted_truth()
+    cal = BandwidthCalibrator(base=ReduceCostModel(bytes_per_round=6e6))
+    _feed(cal, truth, (2, 2), ("mrr",))
+    _feed(cal, truth, (4, 2), ("mrr",))      # second cell, still B2-only
+    assert cal.fit() is None                 # ill-conditioned
+    for _ in range(3):
+        cal.add_transfer(1e6 / 400e9, 1e6)   # 1 MB over the planted B1
+    fit = cal.fit()
+    assert fit is not None
+    assert fit.bw_intra == pytest.approx(400e9, rel=0.10)
+    assert fit.bw_gpu == pytest.approx(5e9, rel=0.10)
+
+
+def test_calibrated_communicator_flips_selection():
+    """Acceptance: a Communicator under the calibrated model selects the
+    planted-best strategy on a grid where the static defaults pick
+    wrongly — and estimate()/candidates() re-score transparently."""
+    base = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
+    truth = _planted_truth()
+    comm = Communicator("har3", grid=(2, 2, 2), cost_model=base,
+                        calibrate=True)
+    assert base.best((2, 2, 2)) == "har3"        # static defaults: wrong
+    assert truth.best((2, 2, 2)) == "mpr"        # planted reality
+    assert comm.calibrated_cost_model() is None  # nothing measured yet
+    _feed(comm, truth, (2, 2, 2), comm.candidates(), noise=0.02)
+    _feed_transfers(comm, truth)                 # redundant B1 evidence
+    cm = comm.calibrated_cost_model()
+    assert cm is not None and comm.calibrated
+    assert cm.best((2, 2, 2)) == "mpr"
+    assert comm.effective_cost_model is cm
+    # estimate() now answers with measured-bandwidth predictions
+    assert comm.estimate("mpr") == pytest.approx(
+        truth.time("mpr", (2, 2, 2)), rel=0.10)
+    # and the live proposal agrees past the hysteresis
+    assert comm.propose_switch(1.05) == "mpr"
+
+
+def test_calibrated_flip_respects_hysteresis():
+    """A calibrated model that disagrees with the default flips selection
+    ONLY past the 1.05x hysteresis."""
+    def comm_with(bw_gpu):
+        truth = ReduceCostModel(bw_intra=100e9, bw_gpu=bw_gpu,
+                                bytes_per_round=6e6)
+        comm = Communicator("har", grid=(2, 2), calibrate=True,
+                            cost_model=ReduceCostModel(bytes_per_round=6e6))
+        _feed(comm, truth, (2, 2), ("har", "mrr"))
+        _feed_transfers(comm, truth)
+        assert comm.calibrated
+        return comm
+    # t_har/t_mpr = (x1+x2)/(1.5*x1): B2 = B1/0.545 -> ratio ~1.03 < 1.05
+    assert comm_with(100e9 / 0.545).propose_switch(1.05) is None
+    # B2 = B1/1.25 -> ratio 1.5 > 1.05: the flip to mpr goes through
+    assert comm_with(100e9 / 1.25).propose_switch(1.05) == "mpr"
+
+
+def test_communicator_propose_probe_conditions_the_fit():
+    """While the fit lacks evidence the communicator names feasible
+    strategies to measure; a probe in progress is left alone until its
+    cell fills (one visit per candidate, never bounced and revisited);
+    once every candidate is measured it stops."""
+    truth = _planted_truth()
+    base = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
+    comm = Communicator("mpr", grid=(2, 2, 2), cost_model=base,
+                        calibrate=True)
+    assert comm.propose_probe() is None      # measure where we stand first
+    _feed(comm, truth, (2, 2, 2), ("mpr",))
+    probe = comm.propose_probe()
+    assert probe in ("har", "har3")
+    comm.switch(probe)                       # what the controller applies
+    comm.observe(truth.time(probe, comm.grid))   # compile round: discarded
+    comm.observe(truth.time(probe, comm.grid))   # first steady sample
+    assert comm.propose_probe() is None      # probe still collecting: stay
+    comm.observe(truth.time(probe, comm.grid))   # cell reaches min_count
+    probe2 = comm.propose_probe()
+    assert probe2 not in (None, probe, "mpr")
+    _feed(comm, truth, (2, 2, 2), (probe2,))
+    assert comm.propose_probe() is None      # every candidate measured
+    _feed_transfers(comm, truth)             # redundancy -> fit conditions
+    assert comm.calibrated
+    # without calibration there is nothing to condition: never probes
+    plain = Communicator("mpr", grid=(2, 2, 2), cost_model=base)
+    _feed(plain, truth, (2, 2, 2), ("mpr",))
+    assert plain.propose_probe() is None
+
+
+def test_communicator_rebind_keeps_calibration_observations():
+    """Measured bandwidths are machine properties: a layout re-plan
+    clears the per-strategy EMA table but NOT the calibration evidence
+    (each observation carries its grid)."""
+    from repro.core.gmi import GMIManager
+    from repro.core.placement import Layout
+    truth = _planted_truth()
+    comm = Communicator("mpr", grid=(2, 2, 2),
+                        cost_model=ReduceCostModel(dev_per_inst=2,
+                                                   bytes_per_round=6e6),
+                        calibrate=True)
+    _feed(comm, truth, (2, 2, 2), ("mpr", "har", "har3"))
+    _feed_transfers(comm, truth)
+    assert comm.calibrated
+    mgr = GMIManager(devices=list(range(8)), devices_per_gpu=2)
+    for gid, gpu in [(0, 0), (1, 0), (2, 1), (3, 1)]:
+        mgr.add_gmi(gid, "trainer", 0.5)     # 1 chip each now
+        mgr.set_gpu(gid, gpu)
+    comm.rebind(Layout("replanned", mgr, [], [0, 1, 2, 3]))
+    assert comm.grid == (2, 2)
+    assert comm.measured("mpr") is None      # EMA table cleared...
+    assert comm.calibrated                   # ...calibration survives
+    # and the calibrated bandwidths keep steering the NEW grid, where
+    # the planted truth again favors the host-staged baseline
+    assert comm.effective_cost_model.best((2, 2)) == \
+        truth.best((2, 2))
+
+
+def test_make_async_runner_calibrate_wires_the_loop():
+    from repro.envs import make_env
+    from repro.launch.steps import make_async_runner
+    env = make_env("Ant")
+    layout = plan_async(2, 1, 2, devices=list(range(4)), devices_per_gpu=2)
+    runner = make_async_runner(env, layout, calibrate=True,
+                               num_envs=8, num_steps=4)
+    assert runner.communicator is not None
+    assert runner.communicator.calibrator is not None
+    # transfer telemetry flows: rounds produce pipeline transfer samples
+    runner.round()
+    assert runner.pipe.take_transfer_samples()
+    runner.finish()
+
+
 # --------------------------------------- controller reduction re-planning --
 def _slow_mpr_comm():
     cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
     comm = Communicator("mpr", grid=(2, 2, 2), cost_model=cm)
-    comm.observe(1.0)                        # measured: current is slow
+    for _ in range(3):
+        comm.observe(1.0)                    # persistent: current is slow
     return comm
 
 
@@ -284,7 +557,8 @@ def test_controller_reduce_hysteresis_no_replan_when_best():
                                        OnlineGMIController, RoundSample)
     cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
     comm = Communicator("har3", grid=(2, 2, 2), cost_model=cm)
-    comm.observe(1.0)
+    for _ in range(3):
+        comm.observe(1.0)
     c = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=2,
                             num_env=512,
                             cfg=ControllerConfig(epoch_rounds=1,
@@ -292,6 +566,80 @@ def test_controller_reduce_hysteresis_no_replan_when_best():
                             communicator=comm)
     assert c.record(RoundSample(samples=1000, dt=0.1, occupancy=0.5,
                                 spills=0, mem_bytes=1e6)) is None
+
+
+def test_controller_schedules_calibration_probe():
+    """Algorithm-2 explore for communication: while the calibration fit
+    lacks evidence the controller emits an in-place probe of an
+    unmeasured strategy (layout untouched)."""
+    from repro.core.controller import (ControllerConfig,
+                                       OnlineGMIController, RoundSample)
+    cm = ReduceCostModel(dev_per_inst=2, bytes_per_round=6e6)
+    comm = Communicator("mpr", grid=(2, 2, 2), cost_model=cm,
+                        calibrate=True)
+    for _ in range(3):
+        comm.observe(1.0)                    # current strategy measured
+    c = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=2,
+                            num_env=512,
+                            cfg=ControllerConfig(epoch_rounds=1,
+                                                 min_gain=1e9,  # no switch
+                                                 probe=True,
+                                                 num_env_sweep=(512,)),
+                            communicator=comm)
+    d = c.record(RoundSample(samples=1000, dt=0.1, occupancy=0.5,
+                             spills=0, mem_bytes=1e6))
+    assert d is not None
+    assert d.reduction_strategy in ("har", "har3")
+    assert d.layout_changed is False
+    assert "probe reduction strategy" in d.reason
+
+
+def test_controller_cites_calibrated_bandwidths():
+    """A switch decision taken under a conditioned fit says so — the
+    re-plan cites calibrated, not default, bandwidths."""
+    from repro.core.controller import (ControllerConfig,
+                                       OnlineGMIController, RoundSample)
+    truth = _planted_truth()
+    comm = Communicator("har3", grid=(2, 2, 2),
+                        cost_model=ReduceCostModel(dev_per_inst=2,
+                                                   bytes_per_round=6e6),
+                        calibrate=True)
+    _feed(comm, truth, (2, 2, 2), comm.candidates())
+    _feed_transfers(comm, truth)
+    c = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=2,
+                            num_env=512,
+                            cfg=ControllerConfig(epoch_rounds=1,
+                                                 probe=False),
+                            communicator=comm)
+    d = c.record(RoundSample(samples=1000, dt=0.1, occupancy=0.5,
+                             spills=0, mem_bytes=1e6))
+    assert d is not None and d.reduction_strategy == "mpr"
+    assert "calibrated Table-2 bandwidths" in d.reason
+
+
+def test_controller_forwards_pipeline_transfer_timings():
+    from repro.core.controller import ControllerConfig, OnlineGMIController
+
+    class _Pipe:
+        spill_count = 0
+
+        class stats:
+            total_bytes = 0
+
+        def take_occupancy_high_water(self):
+            return 0.5
+
+        def take_transfer_samples(self):
+            return [(0.001, 1_000_000)]
+
+    comm = Communicator("mpr", grid=(2, 2), calibrate=True)
+    c = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=2,
+                            num_env=512,
+                            cfg=ControllerConfig(epoch_rounds=4,
+                                                 probe=False),
+                            communicator=comm)
+    c.observe_pipeline(_Pipe(), samples=8, dt=0.1)
+    assert comm.calibrator.transfer_count == 1
 
 
 def test_controller_round_sample_reduce_s_feeds_communicator():
