@@ -1,6 +1,8 @@
 """Fig 7(a): DRL serving throughput — TCG (colocated simulator+agent, the
 paper's serving block) vs TDG (dedicated instances with a memory barrier
-between them).
+between them) — plus the request-serving engine rows (`run_engine`):
+tok/s and p50/p95 latency of the ``repro.serve`` continuous-batching
+engine under a synthetic open-loop arrival trace.
 
 On this host the memory barrier of the TDG baseline is reproduced
 faithfully as a host round-trip (device_get/device_put) between the
@@ -19,11 +21,18 @@ from repro.envs import make_env
 from repro.models.policy import init_policy, policy_apply, sample_action
 
 
+def rollout_key(seed: int):
+    """Single key-derivation idiom for BOTH serving paths (new-style typed
+    keys everywhere — the TCG/TDG rollouts used to mix ``jax.random.key``
+    and ``jax.random.PRNGKey`` in the same run)."""
+    return jax.random.key(seed)
+
+
 def run(num_env: int = 512, steps: int = 16, benches=("Ant", "Humanoid")):
     for bench in benches:
         env = make_env(bench)
-        params = init_policy(jax.random.key(0), env.spec.policy_dims)
-        est, obs = env.reset(jax.random.PRNGKey(0), num_envs=num_env)
+        params = init_policy(rollout_key(0), env.spec.policy_dims)
+        est, obs = env.reset(rollout_key(0), num_envs=num_env)
 
         # ---- TCG: one fused jitted serving block (COM = 0) --------------
         @jax.jit
@@ -39,8 +48,8 @@ def run(num_env: int = 512, steps: int = 16, benches=("Ant", "Humanoid")):
                                                length=steps)
             return est, obs, key, rs.sum()
 
-        key = jax.random.PRNGKey(1)
-        us_tcg = timeit(lambda: tcg_rollout(params, est, obs, key))
+        us_tcg = timeit(lambda: tcg_rollout(params, est, obs,
+                                            rollout_key(1)))
 
         # ---- TDG: simulator instance and agent instance with the GMI
         # memory barrier (host staging) between every interaction ----------
@@ -52,7 +61,7 @@ def run(num_env: int = 512, steps: int = 16, benches=("Ant", "Humanoid")):
         def tdg_rollout():
             nonlocal est, obs
             e, o = est, obs
-            k = jax.random.PRNGKey(1)
+            k = rollout_key(1)
             for _ in range(steps):
                 # agent GMI: obs crosses the barrier (S), action returns (A)
                 o_host = np.asarray(o)                  # device -> host
@@ -71,3 +80,48 @@ def run(num_env: int = 512, steps: int = 16, benches=("Ant", "Humanoid")):
              f"tcg_over_tdg={sps_tcg / sps_tdg:.2f}x_"
              f"(cost_model={serving_speedup_tcg_over_tdg():.2f}x_"
              f"paper~2.5x)")
+
+
+def run_engine(arch: str = "internlm2-1.8b", slots: int = 4,
+               n_requests: int = 12, arrivals_per_step: int = 1,
+               prompt_len: int = 16, gen: int = 12):
+    """Request-serving engine under a synthetic open-loop arrival trace:
+    ``arrivals_per_step`` requests join per decode round until
+    ``n_requests`` have arrived, then the engine drains.  Emits tok/s
+    (us-per-generated-token timing row) and p50/p95 request latency."""
+    from repro.configs import get_reduced
+    from repro.models import transformer as T
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_reduced(arch)
+    params = T.init_model(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, max_slots=slots,
+                         max_seq=prompt_len + gen + 4)
+    rng = np.random.default_rng(0)
+
+    def request():
+        return Request(tokens=rng.integers(0, cfg.vocab_size, prompt_len),
+                       max_new_tokens=gen)
+
+    # warmup: compile prefill (one prompt length) + the batched decode
+    engine.serve([request() for _ in range(2)])
+    engine.telemetry.take_epoch()
+
+    submitted = 0
+    while submitted < n_requests or engine.busy:
+        for _ in range(arrivals_per_step):
+            if submitted < n_requests:
+                engine.submit(request())
+                submitted += 1
+        engine.step()
+    load = engine.telemetry.take_epoch(engine.cache_bytes)
+
+    us_per_tok = load.dt / max(load.tokens, 1) * 1e6
+    emit(f"serving_engine_tok_{arch}", us_per_tok,
+         f"tok_s={load.tok_s:.0f}_slots={slots}_reqs={load.requests}")
+    emit(f"serving_engine_p50_{arch}", load.p50_s * 1e6,
+         f"p50_ms={load.p50_s*1e3:.1f}")
+    emit(f"serving_engine_p95_{arch}", load.p95_s * 1e6,
+         f"p95_ms={load.p95_s*1e3:.1f}")
+    emit(f"serving_engine_occupancy_{arch}", 0.0,
+         f"occ={load.occupancy_mean:.2f}_queue_mean={load.queue_depth_mean:.1f}")

@@ -1,6 +1,8 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows.  Mapping to the paper:
-#   bench_serving        — Fig 7(a)  TCG vs TDG serving throughput
+#   bench_serving        — Fig 7(a)  TCG vs TDG serving throughput, plus
+#                          repro.serve engine rows (tok/s, p50/p95 under
+#                          an open-loop arrival trace)
 #   bench_sync_training  — Fig 7(b,c) sync PPO: holistic GMI vs dedicated
 #   bench_lgr            — Table 7   LGR (MRR/HAR) vs MPR baseline
 #   bench_mcc            — Table 8   multi-channel vs uni-channel sharing
@@ -15,7 +17,8 @@
 #   roofline             — §Roofline terms from the dry-run artifacts
 #
 # ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels
-# + bench_lgr, interpret mode on CPU), writes BENCH_*.json artifacts so
+# + bench_lgr + bench_serving, interpret mode on CPU), writes BENCH_*.json
+# artifacts so
 # future PRs have before/after numbers to diff against, and FAILS (exit 1)
 # when any row regresses more than REGRESSION_FACTOR against the committed
 # baseline — the perf trajectory is enforced, not advisory.  Re-baselining
@@ -118,9 +121,16 @@ def main() -> None:
         bench_lgr.run()
         bench_calibration.run()
 
+    def serving_suite():
+        # Fig 7(a) TCG/TDG rows + the repro.serve continuous-batching
+        # engine rows (tok/s, p50/p95 under an open-loop arrival trace);
+        # both land in BENCH_serving.json under the regression gate
+        bench_serving.run()
+        bench_serving.run_engine()
+
     print("name,us_per_call,derived")
     suites = [
-        ("serving", bench_serving.run),
+        ("serving", serving_suite),
         ("sync_training", bench_sync_training.run),
         ("lgr", lgr_suite),
         ("mcc", bench_mcc.run),
@@ -141,9 +151,9 @@ def main() -> None:
         or bool(os.environ.get("BENCH_STRICT"))
     only = args[0].split(",") if args else None
     if quick and only is None:
-        only = ["mcc", "kernels", "lgr"]   # an explicit selection wins;
-                                           # --quick then only adds the
-                                           # JSON artifacts
+        only = ["mcc", "kernels", "lgr", "serving"]
+        # an explicit selection wins; --quick then only adds the JSON
+        # artifacts
     allow_regression = bool(os.environ.get("BENCH_ALLOW_REGRESSION"))
     failed = []
     regressions = []

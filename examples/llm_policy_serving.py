@@ -1,17 +1,17 @@
-"""Serve a (reduced) assigned architecture with batched requests — the
-framework's serving path across the architecture zoo: prefill + decode
-with KV/state caches, including SSM and hybrid caches.
+"""Serve a (reduced) assigned architecture with batched requests — a thin
+client of the ``repro.serve`` continuous-batching engine, across the
+architecture zoo: prefill + decode with KV/state caches, including SSM
+and hybrid caches.
 
     PYTHONPATH=src python examples/llm_policy_serving.py --arch zamba2-7b
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_reduced, shape_skips
 from repro.models import transformer as T
+from repro.serve import Request, ServeEngine
 
 
 def main():
@@ -28,36 +28,22 @@ def main():
     cfg = get_reduced(args.arch)
     print(f"serving {args.arch} (reduced: {cfg.d_model}d) — "
           f"family={cfg.family}")
-    key = jax.random.key(0)
-    params = T.init_model(key, cfg)
+    params = T.init_model(jax.random.key(0), cfg)
     B, P = args.batch, args.prompt_len
     toks = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)
-    max_seq = P + args.gen + 4
 
-    prefill = jax.jit(
-        lambda p, b: T.prefill(p, cfg, b, max_seq))
-    decode = jax.jit(
-        lambda p, t, pos, c: T.decode_step(p, cfg, t, pos, c))
+    engine = ServeEngine(cfg, params, max_slots=B, max_seq=P + args.gen + 4)
+    done = engine.serve([Request(tokens=toks[i], max_new_tokens=args.gen)
+                         for i in range(B)])
 
-    t0 = time.time()
-    logits, caches = prefill(params, {"tokens": toks})
-    jax.block_until_ready(logits)
-    print(f"prefill {B}x{P}: {1e3*(time.time()-t0):.1f} ms")
-
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    seq = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.full((B,), P + i, jnp.int32)
-        logits, caches = decode(params, tok, pos, caches)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        seq.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    print(f"decode {args.gen-1} steps: {1e3*dt:.1f} ms "
-          f"({B*(args.gen-1)/dt:,.0f} tok/s batched)")
-    print("first sequence token ids:",
-          [int(t[0]) for t in seq][:12], "...")
+    tel = engine.telemetry
+    print(f"prefill {B}x{P}: {1e3 * tel.total_prefill_s:.1f} ms")
+    gen_tokens = tel.total_tokens - B          # first tokens came from prefill
+    print(f"decode {tel.total_decode_steps} steps: "
+          f"{1e3 * tel.total_decode_s:.1f} ms "
+          f"({gen_tokens/max(tel.total_decode_s, 1e-9):,.0f} tok/s batched)")
+    first = min(done, key=lambda c: c.rid)
+    print("first sequence token ids:", first.tokens[:12], "...")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,15 @@
-"""MIG-style serving: two models co-located on ONE device pool, each owning
-a hard-isolated sub-mesh (paper §3: MIG backend for serving; DESIGN.md §2
-maps MIG → disjoint Mesh objects).
+"""MIG-style serving: models co-located on ONE device pool, each GMI
+owning a hard-isolated sub-mesh (paper §3: MIG backend for serving;
+DESIGN.md §2 maps MIG → disjoint Mesh objects) — now through the
+``repro.serve`` subsystem.
 
 Each GMI gets its own devices, its own model, its own compiled program —
-no collectives can cross the boundary; experience/requests route through
-the host exactly as MIG forces on GPU.
+no collectives can cross the boundary; requests/results route through the
+host exactly as MIG forces on GPU.  Part 1 runs two heterogeneous
+``ServingRole`` instances (paper Listing 1's serving GMI) side by side;
+part 2 puts a ``RequestRouter`` front over two same-model GMIs and routes
+an open-loop request trace by queue depth, printing per-GMI latency and
+throughput stats.
 
 Run with multiple CPU devices to see real isolation:
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
@@ -15,64 +20,73 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_reduced
 from repro.core.gmi import GMIManager
 from repro.models import transformer as T
+from repro.serve import Request, RequestRouter, ServingRole
 
 
 def main():
     devs = jax.devices()
     per_gpu = max(len(devs) // 2, 1)
-    mgr = GMIManager(devices=devs, devices_per_gpu=per_gpu, backend="submesh")
-    # two serving instances, each on its own slice ("MIG" partition)
-    mgr.add_gmi(0, role="serving", resource_fraction=1.0)
-    mgr.set_gpu(0, 0)
-    mgr.add_gmi(1, role="serving", resource_fraction=1.0)
-    mgr.set_gpu(1, min(1, len(devs) - 1) if len(devs) > per_gpu else 0)
-    print(mgr.summary())
 
+    # ---- part 1: two hard-isolated serving GMIs, different models --------
+    mgr = GMIManager(devices=devs, devices_per_gpu=per_gpu,
+                     backend="submesh")
     archs = ["internlm2-1.8b", "xlstm-1.3b"]
-    instances = []
+    roles = []
     for gmi_id, arch in zip([0, 1], archs):
-        mesh = mgr.submesh(gmi_id)
         cfg = get_reduced(arch)
         params = T.init_model(jax.random.key(gmi_id), cfg)
-        # place the replica entirely inside the instance's sub-mesh
-        sharding = NamedSharding(mesh, P())
-        params = jax.device_put(params, sharding)
-        step = jax.jit(
-            lambda p, t, pos, c, cfg=cfg: T.decode_step(p, cfg, t, pos, c))
-        prefill = jax.jit(
-            lambda p, b, cfg=cfg: T.prefill(p, cfg, b, max_seq=48))
-        instances.append((gmi_id, arch, cfg, params, prefill, step, mesh))
+        gpu = min(gmi_id, len(devs) // per_gpu - 1)
+        role = ServingRole(mgr, gmi_id, gpu, cfg, params,
+                           max_slots=4, max_seq=48)
+        roles.append((role, arch, cfg))
+        mesh = role.engine.mesh
         print(f"GMI {gmi_id}: {arch} on devices "
               f"{[d.id for d in mesh.devices.flatten()]}")
+    print(mgr.summary())
 
-    # batched requests served round-robin across isolated instances
-    for gmi_id, arch, cfg, params, prefill, step, mesh in instances:
-        B, Plen = 4, 24
-        toks = jax.random.randint(jax.random.key(7), (B, Plen), 0,
-                                  cfg.vocab_size)
-        toks = jax.device_put(toks, NamedSharding(mesh, P()))
+    for role, arch, cfg in roles:
+        B, plen = 4, 24
+        toks = np.asarray(jax.random.randint(jax.random.key(7), (B, plen),
+                                             0, cfg.vocab_size))
         t0 = time.time()
-        logits, caches = prefill(params, {"tokens": toks})
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        outs = [tok]
-        for i in range(12):
-            pos = jnp.full((B,), Plen + i, jnp.int32)
-            pos = jax.device_put(pos, NamedSharding(mesh, P()))
-            logits, caches = step(params, tok, pos, caches)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            outs.append(tok)
-        jax.block_until_ready(tok)
-        # the result leaves the instance through the host (MIG barrier)
-        host_tokens = np.stack([np.asarray(t) for t in outs], 1)
-        print(f"GMI {gmi_id} [{arch}] served {B} reqs x 13 tokens in "
+        done = role.gmi_run([Request(tokens=toks[i], max_new_tokens=13)
+                             for i in range(B)])
+        # results left the instance through the host (the MIG barrier)
+        print(f"GMI {role.gmi_id} [{arch}] served {B} reqs x "
+              f"{len(done[0].tokens)} tokens in "
               f"{1e3 * (time.time() - t0):.0f} ms; "
-              f"sample: {host_tokens[0][:8].tolist()}")
+              f"sample: {done[0].tokens[:8]}")
+
+    # ---- part 2: a router front over two same-model serving GMIs --------
+    arch = "internlm2-1.8b"
+    cfg = get_reduced(arch)
+    params = T.init_model(jax.random.key(0), cfg)
+    mgr2 = GMIManager(devices=devs, devices_per_gpu=per_gpu,
+                      backend="submesh")
+    front = []
+    for gmi_id in (0, 1):
+        gpu = min(gmi_id, len(devs) // per_gpu - 1)
+        front.append(ServingRole(mgr2, gmi_id, gpu, cfg, params,
+                                 max_slots=2, max_seq=48))
+    router = RequestRouter([r.engine for r in front])
+    rng = np.random.default_rng(0)
+    print(f"\nrouter front: {router.num_engines} x {arch} GMIs")
+    # open-loop trace: 2 arrivals per decode round, 10 rounds
+    for _ in range(10):
+        for _ in range(2):
+            router.submit(Request(
+                tokens=rng.integers(0, cfg.vocab_size, 12),
+                max_new_tokens=8))
+        router.step()
+    router.drain()
+    for role, stats in zip(front, router.per_gmi_stats()):
+        print(f"GMI {role.gmi_id}: {stats.requests} reqs, "
+              f"{stats.tokens} tokens, {stats.tok_s:,.0f} tok/s, "
+              f"p50={stats.p50_s*1e3:.1f}ms p95={stats.p95_s*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

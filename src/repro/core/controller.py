@@ -47,6 +47,23 @@ running against *live* measurements.  This controller closes that loop:
   in-place probes of them (one visit each — a probe in progress is left
   alone until its calibration cell fills) to condition the fit.
 
+Since PR 5 the controller also closes the loop for the *request-serving*
+half (paper §4's adaptive GMI management under inference traffic): each
+serving engine's telemetry epoch (a duck-typed
+:class:`repro.serve.telemetry.ServingLoad` — queue depth, decode-slot
+occupancy, p50/p95 latency, tok/s) folds into its own measured
+ProfilePoint table via :meth:`OnlineGMIController.observe_serving`, keyed
+(gmi_per_gpu, decode slots) so the slot ladder plays the role num_env
+plays for rollouts.  Sustained admission backlog (every round of the
+epoch ends with requests waiting and all slots busy) moves a GPU *to*
+serving; an idle epoch (occupancy under the low-water mark, empty queues)
+gives one back; when the split cannot grow, the controller probes the
+next decode-slot count up the ladder instead (Algorithm 2's explore step
+under traffic); and ``selection.explore`` re-runs over the measured
+serving table under the same ``min_gain`` hysteresis.
+``repro.serve.RequestRouter.maybe_replan`` applies the resulting
+``Decision`` by scaling its engine set.
+
 ``plan_layout`` materializes the current decision as a
 ``placement.plan_async`` layout so the runner can rebuild its pipeline
 between training epochs.
@@ -60,6 +77,9 @@ from repro.core.selection import (NUM_ENV_SWEEP, ProfilePoint,
                                   estimate_system_throughput, explore)
 
 
+SLOT_SWEEP = (1, 2, 4, 8, 16, 32, 64)
+
+
 @dataclass
 class ControllerConfig:
     alpha: float = 0.1             # explore()'s saturation threshold
@@ -68,6 +88,7 @@ class ControllerConfig:
     occ_low: float = 0.25          # trainer starvation -> grow serving side
     num_env_sweep: Tuple[int, ...] = NUM_ENV_SWEEP
     probe: bool = True             # walk the num_env ladder when unmeasured
+    slot_sweep: Tuple[int, ...] = SLOT_SWEEP  # decode-slot ladder (serving)
 
 
 @dataclass
@@ -97,12 +118,42 @@ class Decision:
     # switches the communicator in place instead of paying the full
     # drain-and-rebuild re-plan
     layout_changed: bool = True
+    # set by serving decisions: decode slots per engine (the serving
+    # analogue of the num_env ladder); None for rollout decisions
+    slots: Optional[int] = None
 
 
 @dataclass
 class _Recorded:
     point: ProfilePoint
     epochs: int = 0
+
+
+def _fold_point(table: Dict[Tuple[int, int], "_Recorded"],
+                key: Tuple[int, int], top: float, mem: float) -> None:
+    """Fold one measured (throughput, memory) epoch into a recorded table
+    as a running mean — shared by the rollout and serving tables."""
+    rec = table.get(key)
+    if rec is None:
+        table[key] = _Recorded(ProfilePoint(True, top, mem), 1)
+        return
+    n = rec.epochs
+    rec.point = ProfilePoint(
+        True, (rec.point.throughput * n + top) / (n + 1),
+        (rec.point.memory * n + mem) / (n + 1))
+    rec.epochs = n + 1
+
+
+def _frozen_profile(table: Dict[Tuple[int, int], "_Recorded"]):
+    """A recorded table as an ``explore``-compatible profile callable:
+    measured configs answer with their point, everything else is
+    not-runnable (the online search never extrapolates)."""
+    frozen = {k: r.point for k, r in table.items()}
+
+    def profile(bench: str, first: int, second: int) -> ProfilePoint:
+        return frozen.get((first, second), ProfilePoint(False, 0.0, 0.0))
+
+    return profile
 
 
 class OnlineGMIController:
@@ -125,6 +176,12 @@ class OnlineGMIController:
         self._spill_mark = 0
         self._bytes_mark = 0
         self.decisions: List[Decision] = []
+        # request-serving loop (PR 5): its own measured table, keyed
+        # (gmi_per_gpu, decode slots) — the slot ladder is the serving
+        # analogue of the num_env ladder
+        self.serving_slots = 0         # learned from the first epoch
+        self._serving_table: Dict[Tuple[int, int], _Recorded] = {}
+        self._serving_epoch: List = []
 
     # ------------------------------------------------------- observation --
     def observe_pipeline(self, pipeline, samples: int,
@@ -173,33 +230,143 @@ class OnlineGMIController:
         n_inst = max(self.serving_gpus * self.gmi_per_gpu, 1)
         top = samples / dt / n_inst
         mem = sum(s.mem_bytes for s in rounds) / len(rounds)
-        key = (self.gmi_per_gpu, self.num_env)
-        rec = self._table.get(key)
-        if rec is None:
-            self._table[key] = _Recorded(ProfilePoint(True, top, mem), 1)
-        else:                       # running mean over decision epochs
-            n = rec.epochs
-            rec.point = ProfilePoint(
-                True, (rec.point.throughput * n + top) / (n + 1),
-                (rec.point.memory * n + mem) / (n + 1))
-            rec.epochs = n + 1
+        _fold_point(self._table, (self.gmi_per_gpu, self.num_env), top, mem)
         occ = max(s.occupancy for s in rounds)
         spills = sum(s.spills for s in rounds)
         return self._decide(occ, spills)
 
+    # ------------------------------------------------- serving observation --
+    def observe_serving(self, load) -> Optional[Decision]:
+        """Fold one serving telemetry epoch (a duck-typed
+        :class:`repro.serve.telemetry.ServingLoad`: needs ``dt, tokens,
+        occupancy_mean, queue_depth_mean, queue_depth_max, backlog,
+        p95_s``; ``slots`` and ``mem_bytes`` optional) into the serving
+        half of the Algorithm-2 loop.  Loads are expected at ROUTER level
+        (aggregated over the serving engines, e.g.
+        ``RequestRouter.take_epoch``): ``slots`` is the total decode-slot
+        count, divided by the live instance count to key the measured
+        table.  Emits a Decision at epoch boundaries when measured
+        traffic says the serving side should grow, shrink, or
+        re-shape."""
+        self._serving_epoch.append(load)
+        if len(self._serving_epoch) < self.cfg.epoch_rounds:
+            return None
+        rounds, self._serving_epoch = self._serving_epoch, []
+        n_inst = max(self.serving_gpus * self.gmi_per_gpu, 1)
+        # the slot ladder state follows what the telemetry says actually
+        # ran — an unapplied probe decision resets here instead of
+        # mis-keying every later epoch under a width that never existed
+        obs = [float(getattr(l, "slots", 0)) for l in rounds]
+        per_inst = int(round(sum(obs) / len(obs) / n_inst))
+        if per_inst >= 1:
+            self.serving_slots = per_inst
+        elif self.serving_slots <= 0:
+            self.serving_slots = 1
+        dt = sum(l.dt for l in rounds)
+        tokens = sum(l.tokens for l in rounds)
+        if dt > 0.0 and tokens > 0:
+            # per-serving-instance tok/s, comparable across gmi_per_gpu
+            # exactly like the rollout table
+            top = tokens / dt / n_inst
+            mem = sum(float(getattr(l, "mem_bytes", 0.0))
+                      for l in rounds) / len(rounds)
+            _fold_point(self._serving_table,
+                        (self.gmi_per_gpu, self.serving_slots), top, mem)
+        return self._decide_serving(rounds)
+
+    def _decide_serving(self, rounds) -> Optional[Decision]:
+        cfg = self.cfg
+        # sustained pressure: every round of the epoch ended with requests
+        # waiting while all decode slots were busy (a transient queue
+        # blip inside one round is not pressure)
+        backlogged = all(l.backlog > 0 for l in rounds)
+        idle = (max(l.occupancy_mean for l in rounds) <= cfg.occ_low
+                and all(l.backlog == 0 for l in rounds)
+                and max(l.queue_depth_max for l in rounds) == 0)
+        serving = self.serving_gpus
+        slots = self.serving_slots
+        reason = None
+        q = sum(l.queue_depth_mean for l in rounds) / len(rounds)
+        p95 = max(l.p95_s for l in rounds)
+        if backlogged and serving < self.num_gpu - 1:
+            serving += 1
+            reason = (f"serving backlog (queue={q:.1f}, "
+                      f"p95={p95 * 1e3:.0f}ms): +1 serving GPU")
+        elif backlogged and cfg.probe:
+            # the split cannot grow: walk the decode-slot ladder instead
+            # (Algorithm 2's explore step under traffic) — to the next
+            # UNMEASURED rung, so a measured neighbor can't stall the walk
+            nxt = next(
+                (s for s in cfg.slot_sweep if s > slots
+                 and (self.gmi_per_gpu, s) not in self._serving_table),
+                None)
+            if nxt is not None:
+                slots = nxt
+                reason = (f"serving backlog at max split (queue={q:.1f}): "
+                          f"probe slots={nxt}")
+        elif idle and serving > 1:
+            serving -= 1
+            occ = max(l.occupancy_mean for l in rounds)
+            reason = (f"serving idle (occ={occ:.2f}, empty queue): "
+                      "+1 training GPU")
+
+        # explore over the measured serving table: same search, with the
+        # slot ladder standing in for the num_env sweep.  The search is
+        # PINNED to the live gmi_per_gpu — that knob belongs to the
+        # rollout re-plan loop; a serving decision moving it would
+        # corrupt the rollout table's keying without anything re-planning
+        # the training side.  A just-decided probe is never overwritten:
+        # exploitation waits until the probed rung has been measured.
+        probing = slots != self.serving_slots
+        keys = [k for k in self._serving_table if k[0] == self.gmi_per_gpu]
+        if not probing and len(keys) > 1:
+            slot_sweep = sorted(k[1] for k in keys)
+            trace = explore(self._serving_profile(), "serving",
+                            self.num_gpu, alpha=cfg.alpha,
+                            gmi_per_gpu_range=[self.gmi_per_gpu],
+                            num_env_sweep=slot_sweep)
+            sl, _ = trace.best_config
+            cur = self._serving_table.get(
+                (self.gmi_per_gpu, self.serving_slots))
+            cur_top = estimate_system_throughput(
+                self.gmi_per_gpu, self.num_gpu,
+                cur.point.throughput) if cur else 0.0
+            if sl != self.serving_slots and trace.best_throughput \
+                    > cfg.min_gain * max(cur_top, 1e-12):
+                gain = trace.best_throughput / max(cur_top, 1e-12)
+                move = (f"measured serving optimum (slots={sl}) "
+                        f"projects {gain:.2f}x")
+                reason = f"{reason}; {move}" if reason else move
+                slots = sl
+
+        if reason is None:
+            return None
+        layout_changed = (serving != self.serving_gpus
+                          or slots != self.serving_slots)
+        decision = Decision(num_env=self.num_env,
+                            gmi_per_gpu=self.gmi_per_gpu,
+                            serving_gpus=serving,
+                            projected_throughput=sum(
+                                l.tokens for l in rounds) / max(
+                                sum(l.dt for l in rounds), 1e-12),
+                            reason=reason, slots=slots,
+                            layout_changed=layout_changed)
+        self.serving_gpus = serving
+        self.serving_slots = slots
+        self.decisions.append(decision)
+        return decision
+
+    def _serving_profile(self):
+        """The measured serving table as an ``explore`` profile callable
+        (slots stand in for num_env; unmeasured configs not runnable)."""
+        return _frozen_profile(self._serving_table)
+
     # -------------------------------------------------------- Algorithm 2 --
     def recorded_profile(self):
-        """The live table as an ``explore``-compatible profile callable:
-        measured configs answer with their recorded point, everything
-        else is not-runnable (the online search never extrapolates)."""
-        frozen = {k: r.point for k, r in self._table.items()}
-
-        def profile(bench: str, gmi_per_gpu: int,
-                    num_env: int) -> ProfilePoint:
-            return frozen.get((gmi_per_gpu, num_env),
-                              ProfilePoint(False, 0.0, 0.0))
-
-        return profile
+        """The live rollout table as an ``explore``-compatible profile
+        callable (measured configs answer with their recorded point,
+        everything else is not-runnable)."""
+        return _frozen_profile(self._table)
 
     def _projected(self, key: Tuple[int, int]) -> float:
         rec = self._table.get(key)
@@ -343,6 +510,11 @@ class OnlineGMIController:
         for (gpg, ne), rec in sorted(self._table.items()):
             lines.append(f"  (gpg={gpg}, ne={ne}): "
                          f"top/inst={rec.point.throughput:.0f}/s "
+                         f"mem={rec.point.memory:.2e}B "
+                         f"epochs={rec.epochs}")
+        for (gpg, sl), rec in sorted(self._serving_table.items()):
+            lines.append(f"  serving (gpg={gpg}, slots={sl}): "
+                         f"tok/inst={rec.point.throughput:.0f}/s "
                          f"mem={rec.point.memory:.2e}B "
                          f"epochs={rec.epochs}")
         return "\n".join(lines)

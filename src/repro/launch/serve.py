@@ -1,5 +1,6 @@
-"""Serving launcher: batched prefill + decode for any architecture
-(reduced configs run for real on this host; full configs via dryrun).
+"""Serving launcher — a thin CLI over the ``repro.serve`` engine
+(batched prefill + continuous-batching decode for any architecture;
+reduced configs run for real on this host, full configs via dryrun).
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b \
@@ -8,17 +9,12 @@ Example:
 from __future__ import annotations
 
 import argparse
-import time
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
 
 from repro.configs import get_reduced
 from repro.configs.base import InputShape
 from repro.data import make_batch
 from repro.models import transformer as T
+from repro.serve import Request, ServeEngine
 
 
 def main():
@@ -31,51 +27,42 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    import jax
+
     cfg = get_reduced(args.arch)
     if cfg.is_encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving "
                          f"(see DESIGN.md shape/skip matrix)")
-    key = jax.random.key(args.seed)
-    params = T.init_model(key, cfg)
+    params = T.init_model(jax.random.key(args.seed), cfg)
     shape = InputShape("serve", args.prompt_len, args.batch, "prefill")
     batch = make_batch(cfg, shape, seed=args.seed)
-    batch = {k: jnp.asarray(v) for k, v in batch.items()}
-    max_seq = args.prompt_len + args.gen + 8
 
-    prefill = jax.jit(lambda p, b: T.prefill(p, cfg, b, max_seq))
-    decode = jax.jit(lambda p, t, pos, c: T.decode_step(p, cfg, t, pos, c))
+    engine = ServeEngine(cfg, params, max_slots=args.batch,
+                         max_seq=args.prompt_len + args.gen + 8)
+    requests = []
+    for i in range(args.batch):
+        extras = {"patches": batch["patches"][i]} \
+            if cfg.frontend == "vision" else None
+        requests.append(Request(tokens=batch["tokens"][i],
+                                max_new_tokens=args.gen,
+                                temperature=args.temperature,
+                                seed=args.seed + i, extras=extras))
+    done = engine.serve(requests)
 
-    t0 = time.time()
-    logits, caches = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
+    tel = engine.telemetry
     B = args.batch
-    prompt_tokens = batch["tokens"].shape[1] + (
+    prompt_tokens = len(requests[0].tokens) + (
         cfg.num_patches if cfg.frontend == "vision" else 0)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.full((B,), prompt_tokens + i, jnp.int32)
-        logits, caches = decode(params, tok, pos, caches)
-        if args.temperature > 0:
-            key, sk = jax.random.split(key)
-            tok = jax.random.categorical(sk, logits / args.temperature)
-            tok = tok.astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    gen = np.stack([np.asarray(t) for t in out_tokens], 1)
+    gen_tokens = tel.total_tokens - B          # B first tokens are prefill's
+    first = next(c for c in done if c.rid == requests[0].rid)
     print(f"arch={args.arch} batch={B} prompt={prompt_tokens} "
           f"gen={args.gen}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms "
-          f"({B*prompt_tokens/t_prefill:,.0f} tok/s)")
-    print(f"decode:  {t_decode*1e3:.1f} ms "
-          f"({B*(args.gen-1)/max(t_decode,1e-9):,.0f} tok/s)")
-    print("sample token ids:", gen[0][:16].tolist())
+    print(f"prefill: {tel.total_prefill_s*1e3:.1f} ms "
+          f"({tel.total_prompt_tokens/max(tel.total_prefill_s,1e-9):,.0f} "
+          f"tok/s)")
+    print(f"decode:  {tel.total_decode_s*1e3:.1f} ms "
+          f"({gen_tokens/max(tel.total_decode_s,1e-9):,.0f} tok/s)")
+    print("sample token ids:", first.tokens[:16])
 
 
 if __name__ == "__main__":

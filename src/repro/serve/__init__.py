@@ -1,0 +1,47 @@
+"""``repro.serve`` — the first-class serving subsystem (paper §3–§4).
+
+GMI-DRL's serving half builds resource-adjustable GMIs that host inference
+workloads and an adaptive management loop that resizes them under load.
+This package is that half for the reproduction, mirroring how
+``repro.comm`` owns the communication layer:
+
+Paper concept → code map
+------------------------
+* §3 "GMI hosting an inference workload" →
+  :class:`~repro.serve.engine.ServeEngine`: one model replica with a
+  fixed-slot continuous-batching decode loop over the existing
+  ``transformer.prefill`` / ``decode_step`` cache machinery (KV, ring,
+  SSM, and hybrid caches).  Requests of different prompt lengths and
+  generation budgets join and leave the decode batch without
+  recompilation; greedy output is token-identical to the single-request
+  oracle path (:meth:`~repro.serve.engine.ServeEngine.oracle_generate`).
+* §3 MIG-style isolation (``GMIManager.submesh``) →
+  :class:`~repro.serve.router.ServingRole`: the concrete ``DRLRole``
+  (paper Listing 1) whose ``gmi_run`` executes the engine loop inside the
+  instance's dedicated mesh slice.
+* §4 request admission across instances →
+  :class:`~repro.serve.router.RequestRouter`: the multi-GMI front —
+  queue-depth routing, per-GMI p50/p95 latency + tok/s, lossless worker
+  drain on scale-down.
+* §4 adaptive GMI management (Algorithm 2 under traffic) →
+  :class:`~repro.serve.telemetry.ServingTelemetry` epochs
+  (:class:`~repro.serve.telemetry.ServingLoad`) fold into
+  ``OnlineGMIController.observe_serving``; sustained backlog moves a GPU
+  to serving, idle slots give one back, and
+  :meth:`~repro.serve.router.RequestRouter.maybe_replan` applies the
+  decision by scaling the engine set — the same measured-load loop that
+  already rebalances serve/train for rollouts (arXiv:2012.04210).
+
+``launch/serve.py``, ``examples/llm_policy_serving.py``,
+``examples/submesh_serving.py``, and ``benchmarks/bench_serving.py`` are
+thin clients of this package.
+"""
+from repro.serve.engine import Completion, Request, ServeEngine
+from repro.serve.router import RequestRouter, ServingRole
+from repro.serve.telemetry import ServingLoad, ServingTelemetry, merge_loads
+
+__all__ = [
+    "Completion", "Request", "ServeEngine",
+    "RequestRouter", "ServingRole",
+    "ServingLoad", "ServingTelemetry", "merge_loads",
+]

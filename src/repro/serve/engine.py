@@ -1,0 +1,374 @@
+"""Slot-based continuous-batching request engine (paper §3: one serving
+GMI's execution loop).
+
+The engine owns a fixed-slot decode batch over the existing
+``transformer.prefill`` / ``transformer.decode_step`` cache machinery — KV
+caches, sliding-window ring caches, mLSTM/sLSTM/Mamba2 recurrent states,
+and zamba-style hybrid stacks all work because every stacked cache leaf
+carries its batch dimension at axis 1, so one jitted *insert* splices a
+single request's prefilled cache into its slot.
+
+Request lifecycle::
+
+    submit -> queue -> [admit: B=1 prefill -> cache splice -> first token]
+           -> decode slot (one batched decode_step per engine step)
+           -> retire (budget exhausted / eos) -> slot freed for the queue
+
+Design points:
+
+* **No decode recompilation.**  The decode batch has a fixed slot count,
+  so requests of different prompt lengths and generation budgets join and
+  leave without retracing — ``decode_step`` already takes per-row absolute
+  positions, which is all continuous batching needs.  Prefill traces once
+  per distinct prompt length (B=1), never per batch composition.
+* **Idle slots cost one row of compute.**  They decode token 0 at
+  position 0 against an empty cache (``slot_pos == -1`` masks everything;
+  the softmax degrades to uniform, not NaN) and their garbage is fully
+  overwritten by the next cache splice.
+* **Single-request oracle.**  :meth:`ServeEngine.oracle_generate` runs the
+  same compiled functions at B=1; greedy decoding in the batch is
+  token-identical to it (pinned in ``tests/test_serve_engine.py`` across
+  attention, SSM, and hybrid cache families).  Sampling uses per-request
+  keys (``fold_in(key(seed), position)`` vmapped per row) so it is also
+  batch-composition independent.  The one known exception is MoE configs
+  with a finite ``moe_capacity_factor``: expert capacity is shared across
+  the batch, so a dropped token can depend on who else is in the batch.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serve.telemetry import ServingTelemetry
+
+_REQUEST_IDS = itertools.count()
+
+
+@dataclass
+class Request:
+    """One generation request.  ``tokens`` is the prompt (1-D int array);
+    ``max_new_tokens`` counts every generated token, including the one the
+    prefill emits.  ``extras`` carries additional prompt modalities (e.g.
+    ``{"patches": (num_patches, feat)}`` for vision frontends); each entry
+    gets a leading batch dim at admission."""
+    tokens: Any
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    seed: int = 0
+    eos_id: Optional[int] = None
+    extras: Optional[Dict[str, Any]] = None
+    rid: int = field(default_factory=lambda: next(_REQUEST_IDS))
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclass
+class Completion:
+    """A retired request: ``tokens`` are the generated ids (prefill token
+    first), ``latency_s`` is submit-to-retire wall time."""
+    request: Request
+    tokens: List[int]
+    prompt_tokens: int
+    latency_s: float
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+
+@dataclass
+class _Slot:
+    req: Request
+    pos: int                     # absolute position of the token being fed
+    remaining: int               # decode steps left (budget - prefill token)
+    generated: List[int]
+    submit_t: float
+
+
+class ServeEngine:
+    """Continuous-batching engine over one model replica.
+
+    Parameters
+    ----------
+    cfg, params : the model (any non-encoder-only architecture).
+    max_slots   : decode batch width — the fixed slot count.
+    max_seq     : cache depth; every request needs
+                  ``len(prompt) + max_new_tokens <= max_seq``.
+    window_override : sliding-window serving variant (ring caches).
+    mesh        : optional ``jax.sharding.Mesh`` (a GMI submesh) — params
+                  and all per-step inputs are committed to it, so the
+                  engine's compiled programs run inside the instance's
+                  MIG-style isolation boundary.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
+                 max_seq: int = 128, window_override: Optional[int] = None,
+                 mesh=None, telemetry: Optional[ServingTelemetry] = None,
+                 name: str = "engine"):
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.name}: encoder-only model has no decode "
+                             "step — nothing to serve")
+        self.cfg = cfg
+        self.max_slots = int(max_slots)
+        self.max_seq = int(max_seq)
+        self.window_override = window_override
+        self.mesh = mesh
+        self.name = name
+        self.telemetry = telemetry or ServingTelemetry(self.max_slots)
+        self._sharding = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._sharding = NamedSharding(mesh, PartitionSpec())
+            params = jax.device_put(params, self._sharding)
+        self.params = params
+
+        self._queue: Deque[Request] = deque()
+        self._slots: List[Optional[_Slot]] = [None] * self.max_slots
+        dt = jnp.dtype(cfg.dtype)
+        caches = T.init_cache(cfg, self.max_slots, self.max_seq,
+                              window_override, dt)
+        self._caches = self._put(caches)
+        self._cache_bytes = sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(caches)
+            if hasattr(x, "dtype"))
+        # host-side mirrors of the decode-batch inputs; idle rows feed
+        # (token=0, pos=0, temp=0) and are ignored on the way out
+        self._tok = np.zeros((self.max_slots,), np.int32)
+        self._pos = np.zeros((self.max_slots,), np.int32)
+        self._seed = np.zeros((self.max_slots,), np.int32)
+        self._temp = np.zeros((self.max_slots,), np.float32)
+
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(p, cfg, b, self.max_seq, window_override))
+        # the cache pytree is rebound to the jit output on every call:
+        # donate it so decode and splice update in place instead of
+        # copying the full multi-slot cache per token
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------- jitted bodies --
+    def _decode_fn(self, params, caches, tok, pos, seed, temp):
+        logits, caches = T.decode_step(params, self.cfg, tok, pos, caches,
+                                       self.window_override)
+        return _pick_tokens(logits, pos, seed, temp), caches
+
+    @staticmethod
+    def _insert_fn(full, one, slot):
+        # every stacked cache leaf is (layers_or_super, batch, ...): splice
+        # the single-request cache (batch dim 1) into its decode slot
+        return jax.tree.map(
+            lambda f, o: jax.lax.dynamic_update_index_in_dim(
+                f, o[:, 0], slot, 1), full, one)
+
+    def _put(self, tree):
+        if self._sharding is None:
+            return tree
+        return jax.device_put(tree, self._sharding)
+
+    # ------------------------------------------------------------- queries --
+    @property
+    def active_count(self) -> int:
+        return sum(1 for s in self._slots if s is not None)
+
+    @property
+    def free_slots(self) -> int:
+        return self.max_slots - self.active_count
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._queue)
+
+    @property
+    def load(self) -> int:
+        """Outstanding work — the router's queue-depth routing key."""
+        return self.active_count + self.queue_len
+
+    @property
+    def busy(self) -> bool:
+        return self.load > 0
+
+    @property
+    def cache_bytes(self) -> int:
+        return self._cache_bytes
+
+    # ----------------------------------------------------------- lifecycle --
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its id.  Admission happens at the next
+        :meth:`step` when a slot frees up."""
+        total = len(req.tokens) + self._extra_tokens(req) + req.max_new_tokens
+        if total > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt+budget {total} exceeds engine "
+                f"max_seq {self.max_seq}")
+        self.telemetry.on_submit(req.rid)
+        self._queue.append(req)
+        return req.rid
+
+    def _extra_tokens(self, req: Request) -> int:
+        if self.cfg.frontend == "vision" and req.extras \
+                and "patches" in req.extras:
+            return int(req.extras["patches"].shape[0])
+        return 0
+
+    def _admit(self) -> List[Completion]:
+        done: List[Completion] = []
+        while self._queue and self.free_slots > 0:
+            req = self._queue.popleft()
+            slot = self._slots.index(None)
+            t0 = time.perf_counter()
+            batch = {"tokens": jnp.asarray(req.tokens[None])}
+            if req.extras:
+                for k, v in req.extras.items():
+                    batch[k] = jnp.asarray(np.asarray(v)[None])
+            batch = self._put(batch)
+            logits, cache = self._prefill(self.params, batch)
+            prompt_tokens = len(req.tokens) + self._extra_tokens(req)
+            first = _pick_tokens(logits,
+                                 jnp.asarray([prompt_tokens - 1], jnp.int32),
+                                 jnp.asarray([req.seed], jnp.int32),
+                                 jnp.asarray([req.temperature], jnp.float32))
+            self._caches = self._insert(self._caches, cache,
+                                        np.int32(slot))
+            first_id = int(jax.block_until_ready(first)[0])
+            prefill_s = time.perf_counter() - t0
+            self.telemetry.on_admit(req.rid, prompt_tokens, prefill_s)
+            st = _Slot(req=req, pos=prompt_tokens,
+                       remaining=req.max_new_tokens - 1,
+                       generated=[first_id],
+                       submit_t=self.telemetry.submit_time(req.rid, t0))
+            if st.remaining == 0 or first_id == req.eos_id:
+                done.append(self._finish(st))
+                continue
+            self._slots[slot] = st
+            self._tok[slot] = first_id
+            self._pos[slot] = st.pos
+            self._seed[slot] = req.seed
+            self._temp[slot] = req.temperature
+        return done
+
+    def _finish(self, st: _Slot) -> Completion:
+        t = time.perf_counter()
+        self.telemetry.on_finish(st.req.rid, t)
+        # pos always trails the generated count by prompt_tokens - 1
+        return Completion(request=st.req, tokens=st.generated,
+                          prompt_tokens=st.pos - len(st.generated) + 1,
+                          latency_s=t - st.submit_t)
+
+    def step(self) -> List[Completion]:
+        """Admit from the queue, run ONE batched decode step, retire
+        finished requests.  Returns this step's completions."""
+        done = self._admit()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return done
+        t0 = time.perf_counter()
+        tok, self._caches = self._decode(
+            self.params, self._caches, *self._put(
+                (jnp.asarray(self._tok), jnp.asarray(self._pos),
+                 jnp.asarray(self._seed), jnp.asarray(self._temp))))
+        tok_host = np.asarray(jax.block_until_ready(tok))
+        dt = time.perf_counter() - t0
+        emitted = 0
+        for i in active:
+            st = self._slots[i]
+            tid = int(tok_host[i])
+            st.generated.append(tid)
+            st.pos += 1
+            st.remaining -= 1
+            emitted += 1
+            if st.remaining == 0 or tid == st.req.eos_id:
+                self._slots[i] = None
+                self._tok[i] = 0
+                self._pos[i] = 0
+                self._seed[i] = 0
+                self._temp[i] = 0.0
+                done.append(self._finish(st))
+            else:
+                self._tok[i] = tid
+                self._pos[i] = st.pos
+        self.telemetry.on_step(dt, len(active), len(self._queue), emitted)
+        return done
+
+    def take_queue(self) -> List[Request]:
+        """Remove and return every not-yet-admitted request (used by the
+        router when draining a worker before retiring it)."""
+        out = list(self._queue)
+        self._queue.clear()
+        return out
+
+    def run_until_idle(self, admit: bool = True) -> List[Completion]:
+        """Step until queue and slots are empty.  ``admit=False`` finishes
+        the in-flight slots only (the retire-a-worker drain)."""
+        pending = [] if admit else self.take_queue()
+        done: List[Completion] = []
+        while self.busy:
+            done.extend(self.step())
+        self._queue.extend(pending)
+        return done
+
+    def serve(self, requests: List[Request]) -> List[Completion]:
+        """Submit-and-drain convenience; completions in retire order."""
+        for r in requests:
+            self.submit(r)
+        return self.run_until_idle()
+
+    # -------------------------------------------------------------- oracle --
+    def oracle_generate(self, req: Request) -> List[int]:
+        """The single-request reference path: same compiled prefill, B=1
+        decode.  Continuous-batched greedy decoding must be token-identical
+        to this (the engine's core correctness property)."""
+        batch = {"tokens": jnp.asarray(req.tokens[None])}
+        if req.extras:
+            for k, v in req.extras.items():
+                batch[k] = jnp.asarray(np.asarray(v)[None])
+        batch = self._put(batch)
+        logits, caches = self._prefill(self.params, batch)
+        prompt_tokens = len(req.tokens) + self._extra_tokens(req)
+        tok = _pick_tokens(logits,
+                           jnp.asarray([prompt_tokens - 1], jnp.int32),
+                           jnp.asarray([req.seed], jnp.int32),
+                           jnp.asarray([req.temperature], jnp.float32))
+        out = [int(tok[0])]
+        pos = prompt_tokens
+        seed = jnp.asarray([req.seed], jnp.int32)
+        temp = jnp.asarray([req.temperature], jnp.float32)
+        for _ in range(req.max_new_tokens - 1):
+            if out[-1] == req.eos_id:
+                break
+            tok, caches = self._decode(
+                self.params, caches, *self._put(
+                    (tok.astype(jnp.int32),
+                     jnp.asarray([pos], jnp.int32), seed, temp)))
+            out.append(int(tok[0]))
+            pos += 1
+        return out
+
+
+def _pick_tokens(logits, pos, seed, temp):
+    """Next-token choice shared by prefill, decode, and the oracle.
+
+    Greedy rows take argmax; sampled rows draw from
+    ``categorical(fold_in(key(seed), pos), logits/temp)`` — the key depends
+    only on (request seed, absolute position), never on batch composition,
+    so sampling is continuous-batching stable too."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def draw(s, p, l, t):
+        k = jax.random.fold_in(jax.random.key(s), p)
+        return jax.random.categorical(k, l / jnp.maximum(t, 1e-6))
+
+    sampled = jax.vmap(draw)(seed, pos, logits, temp).astype(jnp.int32)
+    return jnp.where(temp > 0.0, sampled, greedy)

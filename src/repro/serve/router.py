@@ -1,0 +1,260 @@
+"""Multi-GMI serving front (paper §3–§4: resource-adjustable GMIs hosting
+inference workloads).
+
+Each serving GMI runs its own :class:`~repro.serve.engine.ServeEngine`
+(on a ``GMIManager.submesh`` — the MIG-style isolation boundary — when a
+mesh is attached); the :class:`RequestRouter` is the admission/queueing
+layer in front: requests route to the least-loaded engine by queue depth,
+per-GMI p50/p95 latency and tok/s accumulate in each engine's telemetry,
+and epoch snapshots feed the online controller so Algorithm 2 can scale
+the serving side under traffic (:meth:`RequestRouter.maybe_replan`).
+
+:class:`ServingRole` is the concrete ``DRLRole`` for serving (paper
+Listing 1): ``gmi_run(requests)`` executes the engine's request loop
+inside the instance's resource slice — the GMI programming model's
+serving instance.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable, List, Optional
+
+from repro.core.gmi import DRLRole, GMIManager
+from repro.serve.engine import Completion, Request, ServeEngine
+from repro.serve.telemetry import ServingLoad, merge_loads
+
+
+class RequestRouter:
+    """Admission/queueing front over N serving engines.
+
+    ``engine_factory(index) -> ServeEngine`` lets the router scale the
+    worker set at runtime (:meth:`scale_to`, usually driven by a
+    controller :class:`~repro.core.controller.Decision`); a factory that
+    also accepts a ``slots`` keyword lets the controller's decode-slot
+    ladder decisions re-shape the engines (:meth:`resize_slots`).
+    Constructing with a plain engine list disables scaling up beyond
+    that list unless a factory is supplied too."""
+
+    def __init__(self, engines: Optional[List[ServeEngine]] = None, *,
+                 engine_factory: Optional[
+                     Callable[[int], ServeEngine]] = None,
+                 num_engines: Optional[int] = None):
+        if engines is None and engine_factory is None:
+            raise ValueError("need engines or an engine_factory")
+        self._factory = engine_factory
+        self._factory_takes_slots = False
+        if engine_factory is not None:
+            try:
+                params = inspect.signature(engine_factory).parameters
+                self._factory_takes_slots = "slots" in params or any(
+                    p.kind == p.VAR_KEYWORD for p in params.values())
+            except (TypeError, ValueError):
+                pass
+        self._slots: Optional[int] = None
+        self._spawned = 0
+        self.engines: List[ServeEngine] = list(engines or [])
+        self._spawned = len(self.engines)
+        if num_engines is not None:
+            self.scale_to(num_engines)
+        self.completions: List[Completion] = []
+        # telemetry of workers retired mid-epoch: their drained tokens /
+        # latencies must still reach the next take_epoch, or a scale-down
+        # makes the system look idler than it was
+        self._retired_loads: List[ServingLoad] = []
+
+    # -------------------------------------------------------------- routing --
+    @property
+    def num_engines(self) -> int:
+        return len(self.engines)
+
+    @property
+    def queue_len(self) -> int:
+        return sum(e.queue_len for e in self.engines)
+
+    @property
+    def busy(self) -> bool:
+        return any(e.busy for e in self.engines)
+
+    def submit(self, req: Request) -> int:
+        """Route by queue depth: the engine with the least outstanding
+        work (queued + in decode slots) admits the request; ties break to
+        the lowest index for determinism."""
+        if not self.engines:
+            raise RuntimeError("router has no engines (scaled to zero?)")
+        # min() is stable: ties go to the lowest-index engine
+        eng = min(self.engines, key=lambda e: e.load)
+        return eng.submit(req)
+
+    def step(self) -> List[Completion]:
+        """Advance every busy engine one decode step."""
+        done: List[Completion] = []
+        for e in self.engines:
+            if e.busy:
+                done.extend(e.step())
+        self.completions.extend(done)
+        return done
+
+    def drain(self) -> List[Completion]:
+        """Step until every engine is idle."""
+        done: List[Completion] = []
+        while self.busy:
+            done.extend(self.step())
+        self.completions.extend(done)
+        return done
+
+    # ------------------------------------------------------------ telemetry --
+    @property
+    def total_slots(self) -> int:
+        """Live decode-slot capacity across the current engine set."""
+        return sum(e.max_slots for e in self.engines)
+
+    def snapshot(self) -> ServingLoad:
+        """Aggregate the engines' current epochs (no reset)."""
+        return merge_loads([e.telemetry.snapshot(e.cache_bytes)
+                            for e in self.engines] + self._retired_loads,
+                           live_slots=self.total_slots)
+
+    def take_epoch(self) -> ServingLoad:
+        """Aggregate AND reset every engine's telemetry epoch — the
+        router-level load the controller consumes.  Includes the final
+        epochs of workers retired since the last call (their tokens and
+        latencies count; the reported slot capacity is the LIVE engine
+        set's, so a resize epoch never shows phantom slots)."""
+        retired, self._retired_loads = self._retired_loads, []
+        return merge_loads([e.telemetry.take_epoch(e.cache_bytes)
+                            for e in self.engines] + retired,
+                           live_slots=self.total_slots)
+
+    def per_gmi_stats(self) -> List[ServingLoad]:
+        """Per-engine epoch snapshots (p50/p95 + tok/s per GMI)."""
+        return [e.telemetry.snapshot(e.cache_bytes) for e in self.engines]
+
+    # -------------------------------------------------------------- scaling --
+    def _spawn(self, index: int) -> ServeEngine:
+        if self._slots is not None and self._factory_takes_slots:
+            return self._factory(index, slots=self._slots)
+        return self._factory(index)
+
+    def _retire(self, engine: ServeEngine) -> List[Request]:
+        """Drain an engine being removed: in-flight slots finish, queued
+        requests come back (with their original submit timestamps), and
+        its final telemetry epoch is preserved for the next take_epoch."""
+        pending = engine.take_queue()
+        stamps = {r.rid: engine.telemetry.submit_time(r.rid, None)
+                  for r in pending}
+        self.completions.extend(engine.run_until_idle(admit=False))
+        self._retired_loads.append(
+            engine.telemetry.take_epoch(engine.cache_bytes))
+        for req in pending:
+            req._submit_t = stamps.get(req.rid)
+        return pending
+
+    def _resubmit(self, req: Request):
+        eng = min(self.engines, key=lambda e: e.load)
+        t0 = getattr(req, "_submit_t", None)
+        if t0 is not None:
+            # keep the original arrival: on_submit setdefaults, so the
+            # survivor's own submit() stamp cannot shorten the latency
+            eng.telemetry.on_submit(req.rid, t0)
+        eng.submit(req)
+
+    def scale_to(self, n: int) -> int:
+        """Grow or shrink the worker set to ``n`` engines.
+
+        Growing spawns via the factory.  Shrinking retires the
+        highest-index workers: their not-yet-admitted requests re-route to
+        the survivors (latency clocks intact) and their in-flight slots
+        run to completion first — no request is lost or truncated."""
+        n = max(int(n), 1)
+        while len(self.engines) < n:
+            if self._factory is None:
+                break
+            self.engines.append(self._spawn(self._spawned))
+            self._spawned += 1
+        while len(self.engines) > n:
+            for req in self._retire(self.engines.pop()):
+                self._resubmit(req)
+        return len(self.engines)
+
+    def resize_slots(self, slots: int) -> bool:
+        """Rebuild every engine with a new decode-slot width (the
+        controller's slot-ladder decisions).  Lossless like scale-down:
+        in-flight requests finish on the old engines, queued ones carry
+        over.  Returns False when the factory cannot build resized
+        engines."""
+        if self._factory is None or not self._factory_takes_slots:
+            return False
+        current = self._slots or (self.engines[0].max_slots
+                                  if self.engines else None)
+        if int(slots) == current:
+            return False
+        old, self.engines = self.engines, []
+        pending: List[Request] = []
+        for e in old:
+            pending.extend(self._retire(e))
+        self._slots = int(slots)
+        self.engines = [self._spawn(i) for i in range(len(old))]
+        self._spawned = max(self._spawned, len(old))
+        for req in pending:
+            self._resubmit(req)
+        return True
+
+    # ------------------------------------------------------------ controller --
+    def maybe_replan(self, controller, *,
+                     engines_per_gpu: Optional[int] = None) -> bool:
+        """Fold one telemetry epoch into the controller's serving loop; if
+        Algorithm 2 answers with a serving-split or slot-ladder decision,
+        apply it by scaling the worker set
+        (``serving_gpus * engines_per_gpu`` engines) and/or rebuilding the
+        engines at the decided slot width.  ``engines_per_gpu`` defaults
+        to the controller's ``gmi_per_gpu`` so the engine count matches
+        the instance count the controller divides telemetry by — a
+        mismatch would mis-key its measured slot table.  Returns True
+        when the worker set changed."""
+        if engines_per_gpu is None:
+            engines_per_gpu = max(int(getattr(controller,
+                                              "gmi_per_gpu", 1)), 1)
+        decision = controller.observe_serving(self.take_epoch())
+        if decision is None or not decision.layout_changed:
+            return False
+        changed = False
+        if decision.slots:
+            changed = self.resize_slots(decision.slots) or changed
+        before = self.num_engines
+        self.scale_to(decision.serving_gpus * engines_per_gpu)
+        # reconcile: a router that COULD not follow (no factory, fixed
+        # engine list) must not let the controller's committed split
+        # drift from the real fleet — its telemetry divisor would shrink
+        # per-instance throughput a little more every unapplied epoch
+        achieved = max(self.num_engines // engines_per_gpu, 1)
+        if achieved != controller.serving_gpus:
+            controller.serving_gpus = achieved
+        return changed or self.num_engines != before
+
+
+class ServingRole(DRLRole):
+    """Paper Listing 1's serving instance, made concrete: a GMI whose
+    execution routine is the continuous-batching engine loop.
+
+    Registers the GMI with the manager, carves its resource slice, and —
+    under the ``submesh`` backend — builds the engine inside the
+    instance's dedicated mesh so its compiled programs cannot touch
+    another instance's devices."""
+
+    def __init__(self, manager: GMIManager, gmi_id: int, gpu_id: int,
+                 cfg, params, *, resource_fraction: float = 1.0,
+                 max_slots: int = 4, max_seq: int = 128,
+                 window_override: Optional[int] = None):
+        super().__init__(manager, gmi_id, "serving", gpu_id,
+                         resource_fraction)
+        mesh = manager.submesh(gmi_id) \
+            if manager.backend == "submesh" else None
+        self.engine = ServeEngine(cfg, params, max_slots=max_slots,
+                                  max_seq=max_seq,
+                                  window_override=window_override,
+                                  mesh=mesh, name=f"gmi{gmi_id}")
+
+    def gmi_run(self, requests: List[Request]) -> List[Completion]:
+        """The GMI's execution routine: serve a batch of requests to
+        completion inside this instance's slice."""
+        return self.engine.serve(requests)

@@ -1,0 +1,28 @@
+"""Tier-1 guard: every example stays importable.
+
+The example zoo has been silently broken by refactors before (a renamed
+symbol only surfaces when someone actually runs the script).  Importing
+executes the module top level — all ``repro`` imports resolve, every
+``def`` compiles — without running ``main()`` (all examples are
+``__main__``-guarded)."""
+import importlib.util
+import pathlib
+
+import pytest
+
+EXAMPLES = sorted(
+    (pathlib.Path(__file__).resolve().parent.parent / "examples")
+    .glob("*.py"))
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.stem)
+def test_example_imports(path):
+    spec = importlib.util.spec_from_file_location(
+        f"_example_{path.stem}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)           # raises on any broken import
+    assert hasattr(mod, "main"), f"{path.name} has no main()"
+
+
+def test_example_zoo_not_empty():
+    assert len(EXAMPLES) >= 5

@@ -1,0 +1,180 @@
+"""Continuous-batching engine: request lifecycle (admit -> prefill ->
+decode slots -> retire), slot reuse after completion, and the core
+correctness property — batched decode is TOKEN-IDENTICAL to the
+single-request oracle path across attention, SSM, and hybrid cache
+families."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serve import Request, ServeEngine
+
+V = 64
+CASES = {
+    "attention": ModelConfig(name="d", num_layers=2, d_model=64, num_heads=4,
+                             num_kv_heads=2, d_ff=128, vocab_size=V),
+    "ssm": ModelConfig(name="x", d_model=64, num_heads=4, num_kv_heads=4,
+                       d_ff=0, vocab_size=V,
+                       block_pattern=("mlstm",) * 3 + ("slstm",),
+                       num_super=2),
+    "hybrid": ModelConfig(name="z", d_model=64, num_heads=4, num_kv_heads=4,
+                          d_ff=128, vocab_size=V, ssm_state_dim=16,
+                          block_pattern=("mamba2",) * 2 + ("attn_shared",),
+                          num_super=2),
+}
+
+_PARAMS = {}
+
+
+def make_engine(case: str, **kw) -> ServeEngine:
+    cfg = CASES[case]
+    if case not in _PARAMS:
+        _PARAMS[case] = T.init_model(jax.random.key(3), cfg)
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("max_seq", 40)
+    return ServeEngine(cfg, _PARAMS[case], **kw)
+
+
+def reqs_mixed(n=5, seed=1, budgets=(4, 7, 3, 6, 5), **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=rng.integers(0, V, int(rng.integers(3, 10))),
+                    max_new_tokens=budgets[i % len(budgets)], **kw)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------- lifecycle --
+def test_request_lifecycle_admit_decode_retire():
+    eng = make_engine("attention", max_slots=2)
+    reqs = reqs_mixed(5)
+    for r in reqs:
+        eng.submit(r)
+    assert eng.queue_len == 5 and eng.active_count == 0
+    done = []
+    seen_active = []
+    while eng.busy:
+        done.extend(eng.step())
+        seen_active.append(eng.active_count)
+    # the fixed-slot batch never exceeds its width, and it was actually used
+    assert max(seen_active, default=0) <= 2
+    assert 2 in seen_active
+    assert len(done) == 5 and eng.queue_len == 0 and eng.active_count == 0
+    by_rid = {c.rid: c for c in done}
+    for r in reqs:
+        c = by_rid[r.rid]
+        assert len(c.tokens) == r.max_new_tokens
+        assert c.prompt_tokens == len(r.tokens)
+        assert c.latency_s >= 0.0
+        assert all(0 <= t < V for t in c.tokens)
+
+
+def test_slot_reuse_after_completion():
+    eng = make_engine("attention", max_slots=2)
+    first = eng.serve(reqs_mixed(2, seed=2))
+    assert len(first) == 2 and eng.free_slots == 2
+    # a second wave reuses the freed slots (same engine, same caches)
+    second = eng.serve(reqs_mixed(3, seed=3))
+    assert len(second) == 3
+    assert {len(c.tokens) for c in second} == \
+        {r.max_new_tokens for r in reqs_mixed(3, seed=3)}
+
+
+def test_budget_one_retires_at_prefill():
+    eng = make_engine("attention")
+    done = eng.serve([Request(tokens=np.arange(5), max_new_tokens=1)])
+    assert len(done) == 1 and len(done[0].tokens) == 1
+    assert eng.telemetry.total_decode_steps == 0
+
+
+def test_submit_rejects_overlong_request():
+    eng = make_engine("attention", max_seq=16)
+    with pytest.raises(ValueError, match="exceeds engine max_seq"):
+        eng.submit(Request(tokens=np.arange(10), max_new_tokens=10))
+
+
+def test_encoder_only_rejected():
+    cfg = CASES["attention"].replace(causal=False)   # encoder-only
+    with pytest.raises(ValueError, match="encoder-only"):
+        ServeEngine(cfg, _PARAMS.get("attention") or
+                    T.init_model(jax.random.key(3), CASES["attention"]))
+
+
+def test_eos_early_retire_matches_oracle():
+    eng = make_engine("attention")
+    probe = reqs_mixed(1, seed=5, budgets=(8,))[0]
+    oracle = eng.oracle_generate(probe)
+    eos = oracle[2]
+    req = Request(tokens=probe.tokens, max_new_tokens=8, eos_id=int(eos))
+    done = eng.serve([reqs_mixed(1, seed=6)[0], req])  # batched with another
+    c = next(c for c in done if c.rid == req.rid)
+    assert c.tokens == oracle[:3]           # stops AT the first eos
+
+
+# -------------------------------------------------------------- equivalence --
+@pytest.mark.parametrize("case", list(CASES))
+def test_batched_decode_token_identical_to_oracle(case):
+    """The acceptance property: requests of different prompt lengths and
+    budgets, joining and leaving the decode batch at different times,
+    produce EXACTLY the oracle's tokens — KV, SSM, and hybrid caches."""
+    eng = make_engine(case, max_slots=2)
+    reqs = reqs_mixed(4, seed=11, budgets=(5, 8, 3, 6))
+    oracle = {r.rid: eng.oracle_generate(r) for r in reqs}
+    # staggered arrivals: two up front, the rest joining mid-decode
+    for r in reqs[:2]:
+        eng.submit(r)
+    done = []
+    done.extend(eng.step())
+    done.extend(eng.step())
+    for r in reqs[2:]:
+        eng.submit(r)
+    done.extend(eng.run_until_idle())
+    assert len(done) == len(reqs)
+    for c in done:
+        assert c.tokens == oracle[c.rid], \
+            f"{case}: slot tokens diverged from single-request oracle"
+
+
+def test_sampling_is_batch_composition_independent():
+    """Per-request keys fold (seed, position) — a sampled request draws
+    the same tokens alone or batched with strangers."""
+    eng = make_engine("attention", max_slots=3)
+    req = Request(tokens=np.arange(6), max_new_tokens=6,
+                  temperature=0.8, seed=42)
+    oracle = eng.oracle_generate(req)
+    others = reqs_mixed(2, seed=12)
+    done = eng.serve([others[0], Request(tokens=req.tokens,
+                                         max_new_tokens=6, temperature=0.8,
+                                         seed=42), others[1]])
+    c = [c for c in done if c.request.temperature > 0][0]
+    assert c.tokens == oracle
+
+
+def test_no_decode_recompilation_across_batch_composition():
+    """The decode batch has a fixed slot count: mixed prompt lengths,
+    budgets, admissions and retirements never retrace it."""
+    eng = make_engine("attention", max_slots=2)
+    eng.serve(reqs_mixed(5, seed=13))
+    cache_size = getattr(eng._decode, "_cache_size", None)
+    if cache_size is None:
+        pytest.skip("jit cache introspection unavailable")
+    assert cache_size() == 1
+    # prefill traces once per distinct prompt length, not per request
+    assert eng._prefill._cache_size() <= len(
+        {len(r.tokens) for r in reqs_mixed(5, seed=13)})
+
+
+# --------------------------------------------------------------- telemetry --
+def test_telemetry_epoch_counts():
+    eng = make_engine("attention", max_slots=2)
+    reqs = reqs_mixed(3, seed=14, budgets=(4, 4, 4))
+    eng.serve(reqs)
+    load = eng.telemetry.take_epoch(eng.cache_bytes)
+    assert load.tokens == 12 and load.requests == 3
+    assert load.slots == 2 and 0.0 < load.occupancy_mean <= 1.0
+    assert load.p95_s >= load.p50_s > 0.0
+    assert load.mem_bytes == eng.cache_bytes > 0
+    # epoch reset: a fresh epoch starts empty
+    empty = eng.telemetry.take_epoch()
+    assert empty.tokens == 0 and empty.requests == 0

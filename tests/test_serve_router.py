@@ -1,0 +1,389 @@
+"""Multi-GMI serving front: queue-depth routing, per-GMI stats, lossless
+scale-down, ServingRole (Listing 1), and the acceptance loop — the online
+controller scaling serving GMIs under a load ramp, pinned via the
+recorded telemetry."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import ControllerConfig, OnlineGMIController
+from repro.core.gmi import GMIManager
+from repro.models import transformer as T
+from repro.serve import (Request, RequestRouter, ServeEngine, ServingRole,
+                         ServingLoad, merge_loads)
+
+V = 64
+CFG = ModelConfig(name="d", num_layers=2, d_model=32, num_heads=2,
+                  num_kv_heads=2, d_ff=64, vocab_size=V)
+PARAMS = T.init_model(jax.random.key(0), CFG)
+
+
+def make_engine(i, slots=2):
+    return ServeEngine(CFG, PARAMS, max_slots=slots, max_seq=32,
+                       name=f"e{i}")
+
+
+def req(rng, gen=4, plen=6):
+    return Request(tokens=rng.integers(0, V, plen), max_new_tokens=gen)
+
+
+# ----------------------------------------------------------------- routing --
+def test_routes_by_queue_depth():
+    router = RequestRouter([make_engine(0), make_engine(1)])
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        router.submit(req(rng))
+    loads = [e.load for e in router.engines]
+    assert loads == [3, 3]          # least-loaded admission balances
+
+
+def test_router_drain_completes_everything():
+    router = RequestRouter([make_engine(0), make_engine(1)])
+    rng = np.random.default_rng(1)
+    reqs = [req(rng, gen=3 + i % 3) for i in range(7)]
+    for r in reqs:
+        router.submit(r)
+    done = router.drain()
+    assert {c.rid for c in done} == {r.rid for r in reqs}
+    assert not router.busy
+
+
+def test_scale_down_loses_no_request():
+    router = RequestRouter([make_engine(0), make_engine(1)],
+                           engine_factory=make_engine)
+    rng = np.random.default_rng(2)
+    reqs = [req(rng) for i in range(8)]        # deep queues on both
+    for r in reqs:
+        router.submit(r)
+    router.scale_to(1)                         # retire one worker mid-load
+    assert router.num_engines == 1
+    done = list(router.completions) + router.drain()
+    assert {c.rid for c in done} == {r.rid for r in reqs}
+    for c in done:
+        assert len(c.tokens) == c.request.max_new_tokens   # never truncated
+
+
+def test_scale_up_via_factory():
+    router = RequestRouter(engine_factory=make_engine, num_engines=1)
+    assert router.num_engines == 1
+    router.scale_to(3)
+    assert router.num_engines == 3
+    # without a factory the router cannot grow
+    fixed = RequestRouter([make_engine(0)])
+    fixed.scale_to(4)
+    assert fixed.num_engines == 1
+
+
+def test_resize_slots_is_lossless():
+    router = RequestRouter(engine_factory=make_engine, num_engines=2)
+    rng = np.random.default_rng(7)
+    reqs = [req(rng) for _ in range(6)]
+    for r in reqs:
+        router.submit(r)
+    router.step()
+    assert router.resize_slots(4)
+    assert all(e.max_slots == 4 for e in router.engines)
+    assert router.num_engines == 2
+    done = list(router.completions) + router.drain()
+    assert {c.rid for c in done} == {r.rid for r in reqs}
+    for c in done:
+        assert len(c.tokens) == c.request.max_new_tokens
+    # same width is a no-op; engines built without a slots-aware factory
+    # cannot resize
+    assert not router.resize_slots(4)
+    assert not RequestRouter([make_engine(0)]).resize_slots(8)
+
+
+def test_retired_worker_telemetry_reaches_next_epoch():
+    """Scale-down must not hide the retiring worker's drained tokens and
+    latencies from the controller — a loaded system would look idle."""
+    router = RequestRouter([make_engine(0), make_engine(1)],
+                           engine_factory=make_engine)
+    rng = np.random.default_rng(8)
+    reqs = [req(rng, gen=3) for _ in range(4)]
+    for r in reqs:
+        router.submit(r)
+    router.step()                     # both engines produce tokens
+    router.scale_to(1)                # retiring engine drains its slots
+    router.drain()
+    load = router.take_epoch()
+    assert load.tokens == 12          # 4 reqs x 3 tokens, none dropped
+    assert load.requests == 4
+    # slot capacity reflects the LIVE engine set, not live + retired —
+    # phantom slots would mis-key the controller's serving table
+    assert load.slots == 2
+
+
+def test_per_gmi_stats_and_epoch_merge():
+    router = RequestRouter([make_engine(0), make_engine(1)])
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        router.submit(req(rng, gen=3))
+    router.drain()
+    per = router.per_gmi_stats()
+    assert len(per) == 2 and all(s.tokens == 6 for s in per)
+    total = router.take_epoch()
+    assert total.tokens == 12 and total.requests == 4
+    assert total.slots == 4
+    # epochs were consumed
+    assert router.take_epoch().tokens == 0
+
+
+def test_merge_loads_empty():
+    z = merge_loads([])
+    assert z.tokens == 0 and z.tok_s == 0.0
+
+
+def test_backdated_submit_does_not_rewind_epoch_span():
+    """Re-routed requests keep their original LATENCY clock, but the
+    epoch span markers must follow the wall clock — otherwise a re-route
+    just after an epoch reset inflates the epoch's dt and collapses the
+    measured tok/s."""
+    from repro.serve.telemetry import ServingTelemetry
+    tel = ServingTelemetry(slots=2)
+    tel.take_epoch()
+    tel.on_submit(1, t=tel.clock() - 100.0)       # arrived long ago
+    tel.on_step(0.01, active=1, queued=0, tokens_out=1)
+    load = tel.snapshot()
+    assert load.dt < 50.0                          # span not rewound
+    tel.on_finish(1)
+    p50, _ = tel.percentiles()
+    assert p50 > 99.0                              # latency clock kept
+
+
+def test_maybe_replan_reconciles_when_fleet_cannot_follow():
+    """A fixed engine list cannot scale; the controller's committed split
+    must snap back to the real fleet instead of drifting up every epoch
+    (its telemetry divisor would otherwise keep shrinking)."""
+    router = RequestRouter([make_engine(0)])       # no factory
+    ctrl = OnlineGMIController(num_gpu=4, serving_gpus=1, gmi_per_gpu=1,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=1))
+    rng = np.random.default_rng(11)
+    for _ in range(3):
+        for _ in range(4):
+            for _ in range(4):
+                router.submit(req(rng, gen=6))
+            router.step()
+        router.maybe_replan(ctrl)
+        assert ctrl.serving_gpus == 1              # reconciled every epoch
+    assert router.num_engines == 1
+    router.drain()
+
+
+# ------------------------------------------------------------- ServingRole --
+def test_serving_role_gmi_run_on_submesh():
+    mgr = GMIManager(devices=jax.devices(), devices_per_gpu=1,
+                     backend="submesh")
+    role = ServingRole(mgr, 0, 0, CFG, PARAMS, max_slots=2, max_seq=32)
+    assert mgr.gmis[0].role == "serving"
+    assert role.engine.mesh is not None          # MIG-style isolation
+    rng = np.random.default_rng(4)
+    reqs = [req(rng, gen=4) for _ in range(3)]
+    done = role.gmi_run(reqs)
+    assert {c.rid for c in done} == {r.rid for r in reqs}
+    # engine must be token-identical inside the submesh too
+    probe = req(rng, gen=5)
+    oracle = role.engine.oracle_generate(probe)
+    out = role.gmi_run([probe])[0]
+    assert out.tokens == oracle
+
+
+# -------------------------------------------- controller under a load ramp --
+def test_controller_scales_serving_gmis_under_load_ramp():
+    """Acceptance: open-loop traffic outruns one engine; the recorded
+    telemetry shows sustained backlog; the controller answers by moving
+    GPUs to serving (1 -> 2 -> 3); when traffic stops, the idle epochs
+    move one back."""
+    router = RequestRouter(engine_factory=make_engine, num_engines=1)
+    ctrl = OnlineGMIController(num_gpu=4, serving_gpus=1, gmi_per_gpu=1,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=2))
+    rng = np.random.default_rng(5)
+    recorded = []           # the telemetry the decisions are based on
+
+    def one_epoch(arrivals_per_step):
+        for _ in range(4):
+            for _ in range(arrivals_per_step):
+                router.submit(req(rng, gen=6))
+            router.step()
+        load = router.take_epoch()
+        recorded.append(load)
+        return ctrl.observe_serving(load)
+
+    sizes = [router.num_engines]
+    for _ in range(8):              # overload: 3 arrivals/step vs ~2 tok/step
+        d = one_epoch(3)
+        if d is not None and d.layout_changed:
+            router.scale_to(d.serving_gpus)
+        sizes.append(router.num_engines)
+        if router.num_engines == 3:
+            break
+    assert router.num_engines == 3 and ctrl.serving_gpus == 3
+    assert sizes == sorted(sizes)                # monotone ramp up
+    # the decisions cite serving backlog, and the recorded telemetry
+    # actually shows it (queue growing with every slot busy)
+    ups = [d for d in ctrl.decisions if "+1 serving GPU" in d.reason]
+    assert len(ups) == 2
+    assert all("serving backlog" in d.reason for d in ups)
+    assert any(l.backlog > 0 and l.occupancy_mean > 0.9 for l in recorded)
+    # measured serving profile accumulated in the controller table
+    assert ctrl._serving_table and ctrl.serving_slots >= 2
+    assert "serving (gpg=" in ctrl.summary()
+
+    # traffic stops: drain, then idle epochs hand a GPU back
+    router.drain()
+    router.take_epoch()
+    for _ in range(2):
+        d = ctrl.observe_serving(router.take_epoch())
+    assert d is not None and d.serving_gpus == 2
+    assert "serving idle" in d.reason
+    router.scale_to(d.serving_gpus)
+    assert router.num_engines == 2
+
+
+def test_maybe_replan_applies_decision():
+    router = RequestRouter(engine_factory=make_engine, num_engines=1)
+    ctrl = OnlineGMIController(num_gpu=3, serving_gpus=1, gmi_per_gpu=1,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=1))
+    rng = np.random.default_rng(6)
+    changed = False
+    for _ in range(3):
+        for _ in range(4):
+            for _ in range(4):
+                router.submit(req(rng, gen=6))
+            router.step()
+        changed = router.maybe_replan(ctrl) or changed
+        if changed:
+            break
+    assert changed and router.num_engines == ctrl.serving_gpus == 2
+    router.drain()
+
+
+def test_maybe_replan_applies_slot_probe_by_resizing():
+    """At max split the controller's decision carries a slot-ladder probe;
+    maybe_replan applies it by rebuilding the engines wider (the factory
+    accepts ``slots``)."""
+    router = RequestRouter(engine_factory=make_engine, num_engines=1)
+    ctrl = OnlineGMIController(num_gpu=2, serving_gpus=1, gmi_per_gpu=1,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=1))
+    rng = np.random.default_rng(9)
+    changed = False
+    for _ in range(3):
+        for _ in range(4):
+            for _ in range(4):
+                router.submit(req(rng, gen=6))
+            router.step()
+        changed = router.maybe_replan(ctrl)
+        if changed:
+            break
+    assert changed
+    assert all(e.max_slots == 4 for e in router.engines)   # 2 -> 4
+    d = ctrl.decisions[-1]
+    assert "probe slots=4" in d.reason and d.serving_gpus == 1
+    router.drain()
+
+
+# --------------------------------------------- controller serving units ----
+def _load(backlog=0, occ=0.5, q=0.0, qmax=0, tokens=100, dt=1.0, slots=4,
+          p95=0.05):
+    return ServingLoad(dt=dt, tokens=tokens, requests=4, queue_depth_mean=q,
+                       queue_depth_max=qmax, occupancy_mean=occ,
+                       backlog=backlog, p50_s=p95 / 2, p95_s=p95,
+                       slots=slots)
+
+
+def test_backlog_stops_at_max_split_then_probes_slots():
+    ctrl = OnlineGMIController(num_gpu=3, serving_gpus=2, gmi_per_gpu=1,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=1))
+    # router-level load: 4 total slots over 2 serving instances -> 2 each
+    d = ctrl.observe_serving(_load(backlog=3, occ=1.0, q=5.0, qmax=6))
+    assert d is not None and d.serving_gpus == 2       # cannot grow past 2
+    assert d.slots == 4 and "probe slots=4" in d.reason
+    assert ctrl.serving_slots == 4
+    # the probe was never applied: the next epoch's telemetry still shows
+    # 2-slot engines, and the ladder state follows the OBSERVED width
+    # instead of mis-keying the table under a width that never ran
+    ctrl.observe_serving(_load(backlog=0, occ=0.5))
+    assert ctrl.serving_slots == 2
+    assert set(ctrl._serving_table) == {(1, 2)}
+
+
+def test_slot_probe_skips_measured_rungs_and_suppresses_explore():
+    """The ladder walk jumps over already-measured rungs (a measured
+    neighbor must not stall exploration), and a just-decided probe is not
+    overwritten by the exploitation pass in the same decision."""
+    ctrl = OnlineGMIController(num_gpu=3, serving_gpus=2, gmi_per_gpu=1,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=1))
+    ctrl.observe_serving(_load(slots=4, tokens=100, occ=0.5))   # (1, 2)
+    ctrl.observe_serving(_load(slots=8, tokens=500, occ=0.5))   # (1, 4)
+    assert set(ctrl._serving_table) == {(1, 2), (1, 4)}
+    d = ctrl.observe_serving(_load(slots=4, backlog=3, occ=1.0,
+                                   q=5.0, qmax=6))
+    assert d is not None
+    assert d.slots == 8 and "probe slots=8" in d.reason   # 4 is measured
+    assert "measured serving optimum" not in d.reason     # probe stands
+
+
+def test_maybe_replan_matches_controller_instance_count():
+    """The router's engine count follows serving_gpus * gmi_per_gpu — the
+    same instance count the controller divides telemetry by."""
+    router = RequestRouter(engine_factory=make_engine, num_engines=2)
+    ctrl = OnlineGMIController(num_gpu=4, serving_gpus=1, gmi_per_gpu=2,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=1))
+    rng = np.random.default_rng(10)
+    for _ in range(4):
+        for _ in range(4):
+            for _ in range(6):
+                router.submit(req(rng, gen=6))
+            router.step()
+        if router.maybe_replan(ctrl):
+            break
+    assert ctrl.serving_gpus == 2
+    assert router.num_engines == 4          # 2 GPUs x 2 GMIs each
+    router.drain()
+
+
+def test_transient_backlog_is_not_pressure():
+    ctrl = OnlineGMIController(num_gpu=4, serving_gpus=1, gmi_per_gpu=1,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=2))
+    assert ctrl.observe_serving(_load(backlog=2, occ=1.0)) is None
+    # second round of the epoch is clean -> no sustained pressure
+    assert ctrl.observe_serving(_load(backlog=0, occ=0.6)) is None
+    assert ctrl.serving_gpus == 1
+
+
+def test_idle_never_drops_last_serving_gpu():
+    ctrl = OnlineGMIController(num_gpu=4, serving_gpus=1, gmi_per_gpu=1,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=1))
+    assert ctrl.observe_serving(_load(occ=0.0, tokens=0, dt=0.0)) is None
+    assert ctrl.serving_gpus == 1
+
+
+def test_serving_explore_adopts_measured_optimum():
+    """The measured serving table feeds the same Algorithm-2 explore: a
+    slot config measured 5x faster is adopted under min_gain.  Table keys
+    come from the OBSERVED telemetry (total slots / instances), and the
+    search never moves gmi_per_gpu — that knob belongs to the rollout
+    loop."""
+    ctrl = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=1,
+                               num_env=64,
+                               cfg=ControllerConfig(epoch_rounds=1))
+    ctrl.observe_serving(_load(slots=4, tokens=100, occ=0.5))
+    assert ctrl.serving_slots == 2               # 4 total / 2 instances
+    ctrl.observe_serving(_load(slots=16, tokens=500, occ=0.5))
+    assert ctrl.serving_slots == 8               # a resize actually ran
+    d = ctrl.observe_serving(_load(slots=4, tokens=100, occ=0.5))
+    assert d is not None and d.slots == 8
+    assert "measured serving optimum (slots=8)" in d.reason
+    assert d.gmi_per_gpu == 1 and ctrl.gmi_per_gpu == 1
+    assert ctrl.serving_slots == 8
