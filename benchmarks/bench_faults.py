@@ -1,0 +1,137 @@
+"""Fault-tolerance microbench: what a failure costs and what survives.
+
+Timing rows (gated by the >2x regression check in ``run.py --quick``):
+
+* ``faults_round_baseline``        — one fault-free supervised round.
+* ``faults_serving_kill_recovery`` — the round in which a serving GMI
+  dies: classify + quarantine + lossless drain-train re-plan onto the
+  reduced pool.
+* ``faults_trainer_kill_recovery`` — same for a trainer GMI (includes
+  the spill-not-drop re-queue of its unconsumed batches).
+* ``faults_engine_fail_recovery``  — ``RequestRouter.fail_engine``:
+  requeue + capped-retry restart after an engine dies mid-decode.
+* ``faults_ckpt_save`` / ``faults_ckpt_restore`` — one atomic
+  params/opt/version checkpoint round-trip through ``repro.checkpoint``.
+
+Ratio rows (``us_per_call=0`` — informational, skipped by the gate):
+
+* ``faults_goodput_retention`` — trained samples under a two-kill fault
+  plan as a fraction of the fault-free run (same rounds, same seed).
+* ``faults_lossless``          — trained+poisoned == predictions after
+  recovery (1.0 = the spill-not-drop guarantee held).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.placement import plan_async
+from repro.envs import make_env
+from repro.fault import FaultEvent, FaultPlan
+from repro.launch.steps import make_fleet_supervisor
+
+ROUNDS = 5
+NUM_ENVS = 16
+NUM_STEPS = 4
+
+
+def _build(env, plan=None, **kw):
+    layout = plan_async(3, 2, 2, devices=list(range(6)), devices_per_gpu=2)
+    return make_fleet_supervisor(env, layout, plan=plan, num_envs=NUM_ENVS,
+                                 num_steps=NUM_STEPS, probation=ROUNDS + 1,
+                                 **kw)
+
+
+def run():
+    env = make_env("Ant")
+
+    # warm the jit caches so recovery timings measure recovery, not
+    # first-trace compilation
+    warm = _build(env)
+    warm.run(1)
+
+    # ---- baseline: fault-free rounds -----------------------------------
+    sup0 = _build(env)
+    t0 = time.perf_counter()
+    for _ in range(ROUNDS):
+        sup0.round()
+    base_round_us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    sup0.runner.finish()
+    base_trained = sup0.runner.trained_samples
+    emit("faults_round_baseline", base_round_us,
+         f"trained={base_trained}")
+
+    # ---- serving + trainer GMI kills mid-epoch (one run, two faults) ---
+    plan2 = FaultPlan([FaultEvent("kill_serving", round=1),
+                       FaultEvent("kill_trainer", round=3)])
+    sup2 = _build(env, plan=plan2)
+    round_us = []
+    for r in range(ROUNDS):
+        t0 = time.perf_counter()
+        sup2.round()
+        round_us.append((time.perf_counter() - t0) * 1e6)
+    sup2.runner.finish()
+    r2 = sup2.runner
+    lossless = (r2.trained_samples + r2.poisoned_samples == r2.predictions)
+    emit("faults_serving_kill_recovery", round_us[1],
+         f"lossless={lossless} replans={r2.replans}")
+    emit("faults_trainer_kill_recovery", round_us[3],
+         f"lossless={lossless}")
+    retention = r2.trained_samples / max(base_trained, 1)
+    emit("faults_goodput_retention", 0.0, f"{retention:.3f}x_of_faultfree")
+    emit("faults_lossless", 0.0, f"{1.0 if lossless else 0.0}")
+
+    # ---- engine fail: requeue + restart on survivors -------------------
+    from repro.configs.base import ModelConfig
+    from repro.models import transformer as T
+    from repro.serve import Request, RequestRouter, ServeEngine
+    cfg = ModelConfig(name="bench", num_layers=2, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64)
+    params = T.init_model(jax.random.key(0), cfg)
+
+    def engine(i):
+        return ServeEngine(cfg, params, max_slots=2, max_seq=32,
+                           name=f"e{i}")
+
+    router = RequestRouter([engine(0), engine(1), engine(2)])
+    rng = np.random.default_rng(0)
+    reqs = [Request(tokens=rng.integers(0, 64, 6), max_new_tokens=5)
+            for _ in range(9)]
+    for q in reqs:
+        router.submit(q)
+    router.step()                      # admit + one decode everywhere
+    victim = router.engines[1]
+    victim.dead = True
+    t0 = time.perf_counter()
+    router.fail_engine(victim, max_retries=2)
+    fail_us = (time.perf_counter() - t0) * 1e6
+    done = router.drain()
+    every = {c.rid for c in router.completions} >= {q.rid for q in reqs}
+    emit("faults_engine_fail_recovery", fail_us,
+         f"all_rids_complete={every} survivors={router.num_engines}")
+
+    # ---- checkpoint save / restore round-trip --------------------------
+    d = tempfile.mkdtemp(prefix="bench_faults_ckpt_")
+    try:
+        runner = sup0.runner
+        t0 = time.perf_counter()
+        runner.checkpoint(d, step=1)
+        save_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        step = runner.restore(d)
+        restore_us = (time.perf_counter() - t0) * 1e6
+        emit("faults_ckpt_save", save_us, f"step={step}")
+        emit("faults_ckpt_restore", restore_us, "params+opt+version")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -14,10 +14,13 @@
 #   bench_kernels        — Pallas kernels (interpret-mode correctness cost)
 #   bench_calibration    — Table-2 bandwidth calibration (synthetic
 #                          recovery; rides in the lgr suite)
+#   bench_faults         — fault-recovery cost (GMI kill / engine fail /
+#                          checkpoint round-trip) + goodput retention
 #   roofline             — §Roofline terms from the dry-run artifacts
 #
 # ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels
-# + bench_lgr + bench_serving, interpret mode on CPU), writes BENCH_*.json
+# + bench_lgr + bench_serving + bench_faults, interpret mode on CPU),
+# writes BENCH_*.json
 # artifacts so
 # future PRs have before/after numbers to diff against, and FAILS (exit 1)
 # when any row regresses more than REGRESSION_FACTOR against the committed
@@ -102,9 +105,10 @@ def _tracked_pyc(root: str) -> list:
 
 def main() -> None:
     from benchmarks import (bench_async, bench_backend, bench_calibration,
-                            bench_kernels, bench_lgr, bench_mcc,
-                            bench_num_env, bench_reward, bench_selection,
-                            bench_serving, bench_sync_training, roofline)
+                            bench_faults, bench_kernels, bench_lgr,
+                            bench_mcc, bench_num_env, bench_reward,
+                            bench_selection, bench_serving,
+                            bench_sync_training, roofline)
     from benchmarks.common import ROWS, emit
 
     pyc = _tracked_pyc(_ROOT)
@@ -140,6 +144,7 @@ def main() -> None:
         ("backend", bench_backend.run),
         ("reward", bench_reward.run),
         ("kernels", bench_kernels.run),
+        ("faults", bench_faults.run),
         ("roofline", roofline.run),
     ]
     flags = {"--quick", "--strict"}
@@ -151,7 +156,7 @@ def main() -> None:
         or bool(os.environ.get("BENCH_STRICT"))
     only = args[0].split(",") if args else None
     if quick and only is None:
-        only = ["mcc", "kernels", "lgr", "serving"]
+        only = ["mcc", "kernels", "lgr", "serving", "faults"]
         # an explicit selection wins; --quick then only adds the JSON
         # artifacts
     allow_regression = bool(os.environ.get("BENCH_ALLOW_REGRESSION"))

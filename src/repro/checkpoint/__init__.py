@@ -1,1 +1,2 @@
-from repro.checkpoint.ckpt import latest_step, load, save  # noqa: F401
+from repro.checkpoint.ckpt import (latest_step, load, load_manifest,  # noqa: F401
+                                   save, steps)

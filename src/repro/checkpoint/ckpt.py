@@ -3,17 +3,39 @@
 Sharding-aware restore: pass a sharding pytree and leaves are device_put
 shard-by-shard (host-side slicing would be needed for true multi-host; on a
 single controller device_put with a NamedSharding suffices).
+
+Crash safety (the preemption-tolerance contract the fault subsystem
+builds on):
+
+* Writes are atomic and ORDERED: the ``.npz`` is written to a temp file
+  and ``os.replace``d into place BEFORE the ``.json`` manifest (itself
+  temp+replace).  A crash at any point therefore leaves either (a) the
+  previous checkpoint pair intact, or (b) a new ``.npz`` with no
+  manifest — never a manifest pointing at a missing or torn array file.
+* ``latest_step``/``steps`` skip manifests whose ``.npz`` is absent
+  (externally deleted, or written by a pre-hardening saver).
+* ``load`` raises a clear error — never returns garbage — on a missing
+  or torn (truncated/unreadable) array file, so callers can fall back to
+  the previous step (see ``AsyncRunner.restore``).
+
+``fault_hook`` is the deterministic-injection seam used by
+``repro.fault``: it is called with a stage name at every durability
+boundary and may raise to simulate a crash exactly there.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+# stages at which a crash can be injected, in write order
+SAVE_STAGES = ("before_npz", "before_npz_replace", "before_manifest",
+               "before_manifest_replace")
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -21,22 +43,64 @@ def _flatten(tree) -> Dict[str, Any]:
     return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
 
 
-def save(path: str, tree, step: Optional[int] = None):
+def _fire(fault_hook: Optional[Callable[[str], None]], stage: str) -> None:
+    if fault_hook is not None:
+        fault_hook(stage)
+
+
+def save(path: str, tree, step: Optional[int] = None,
+         extra: Optional[Dict[str, Any]] = None,
+         fault_hook: Optional[Callable[[str], None]] = None):
+    """Atomically write ``path``.npz (arrays) then ``path``.json
+    (manifest).  ``extra`` is a JSON-serializable dict stored in the
+    manifest (e.g. controller tables, counters); read it back with
+    :func:`load_manifest`."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     arrays = {f"arr_{i}": np.asarray(jax.device_get(v))
               for i, v in enumerate(flat.values())}
-    manifest = {"keys": list(flat.keys()), "step": step}
-    np.savez(path + ".npz", **arrays)
-    with open(path + ".json", "w") as f:
+    manifest: Dict[str, Any] = {"keys": list(flat.keys()), "step": step}
+    if extra is not None:
+        manifest["extra"] = extra
+    tmp_npz = path + ".tmp.npz"
+    tmp_json = path + ".json.tmp"
+    _fire(fault_hook, "before_npz")
+    np.savez(tmp_npz, **arrays)
+    # the array file must be durable BEFORE any manifest names it: a crash
+    # between the two replaces leaves an orphan .npz (harmless), never a
+    # manifest pointing at a missing/torn array file
+    _fire(fault_hook, "before_npz_replace")
+    os.replace(tmp_npz, path + ".npz")
+    _fire(fault_hook, "before_manifest")
+    with open(tmp_json, "w") as f:
         json.dump(manifest, f)
+    _fire(fault_hook, "before_manifest_replace")
+    os.replace(tmp_json, path + ".json")
+
+
+def load_manifest(path: str) -> Dict[str, Any]:
+    with open(path + ".json") as f:
+        return json.load(f)
 
 
 def load(path: str, like, shardings=None):
-    """Restore into the structure of ``like`` (a pytree template)."""
-    with open(path + ".json") as f:
-        manifest = json.load(f)
-    data = np.load(path + ".npz")
+    """Restore into the structure of ``like`` (a pytree template).
+
+    Raises ``FileNotFoundError`` when the manifest's array file is
+    absent and ``ValueError`` when it is torn/unreadable — callers that
+    keep a checkpoint history can fall back to the previous step."""
+    manifest = load_manifest(path)
+    npz = path + ".npz"
+    if not os.path.exists(npz):
+        raise FileNotFoundError(
+            f"checkpoint {path}: manifest present but array file {npz} "
+            "is missing (torn pair)")
+    try:
+        data = np.load(npz)
+    except Exception as e:
+        raise ValueError(
+            f"checkpoint {path}: array file unreadable (torn write?): "
+            f"{e!r}") from e
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     by_key = {jax.tree_util.keystr(p): i for i, (p, _) in
               enumerate(flat_like)}
@@ -44,7 +108,12 @@ def load(path: str, like, shardings=None):
     for i, key in enumerate(manifest["keys"]):
         if key not in by_key:
             raise KeyError(f"checkpoint key {key} not in template")
-        leaves[by_key[key]] = data[f"arr_{i}"]
+        try:
+            leaves[by_key[key]] = data[f"arr_{i}"]
+        except Exception as e:
+            raise ValueError(
+                f"checkpoint {path}: array {i} ({key}) unreadable "
+                f"(torn write?): {e!r}") from e
     if any(x is None for x in leaves):
         missing = [k for k, i in by_key.items() if leaves[i] is None]
         raise KeyError(f"template keys missing from checkpoint: {missing}")
@@ -61,14 +130,23 @@ def load(path: str, like, shardings=None):
         jax.tree_util.tree_structure(like), leaves)
 
 
-def latest_step(directory: str) -> Optional[int]:
-    steps = []
+def steps(directory: str) -> List[int]:
+    """Checkpoint steps present in ``directory``, ascending.  A manifest
+    whose ``.npz`` is absent (torn pair) is skipped — it can never load."""
+    found = []
     if not os.path.isdir(directory):
-        return None
+        return []
     for name in os.listdir(directory):
         if name.startswith("ckpt_") and name.endswith(".json"):
             try:
-                steps.append(int(name[5:-5]))
+                s = int(name[5:-5])
             except ValueError:
-                pass
-    return max(steps) if steps else None
+                continue
+            if os.path.exists(os.path.join(directory, f"ckpt_{s}.npz")):
+                found.append(s)
+    return sorted(found)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    all_steps = steps(directory)
+    return all_steps[-1] if all_steps else None

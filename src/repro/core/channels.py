@@ -356,6 +356,15 @@ class MultiChannelPipeline:
                  interpret: Optional[bool] = None,
                  overlap: bool = False):
         self.agent_gmis = list(agent_gmis)
+        # fault-injection seam (repro.fault): called once per delivering
+        # group at flush time with (group_key, channels); may answer
+        # "drop" (the transfer is lost in transit — the pipeline
+        # RETRANSMITS it on the next flush, so the spill-not-drop
+        # guarantee survives a lossy link) or "poison" (delivered
+        # corrupted — the trainer-side non-finite guard must catch it)
+        self.fault_hook = None
+        self.dropped_flushes = 0
+        self.poisoned_flushes = 0
         self.gmi_gpu = gmi_gpu or {}
         self.compressor = Compressor()
         self.migrator = Migrator(trainer_gmis, gmi_gpu)
@@ -438,6 +447,22 @@ class MultiChannelPipeline:
             groups, self._inflight = self._inflight, current
         else:
             groups = current
+        if self.fault_hook is not None and groups:
+            kept = []
+            for gkey, ch in groups:
+                action = self.fault_hook(gkey, ch)
+                if action == "drop":
+                    # lost in transit: back into pending for the next
+                    # flush (retransmission) — lossy link, lossless data
+                    self._pending.setdefault(gkey, []).append(ch)
+                    self.dropped_flushes += 1
+                elif action == "poison":
+                    from repro.fault.inject import poison_channels
+                    kept.append((gkey, poison_channels(ch)))
+                    self.poisoned_flushes += 1
+                else:
+                    kept.append((gkey, ch))
+            groups = kept
         if not groups:
             return {}
         bytes_before = self.compressor.stats.total_bytes
@@ -467,12 +492,30 @@ class MultiChannelPipeline:
         samples, self._transfer_samples = self._transfer_samples, []
         return samples
 
+    def requeue(self, exps: Sequence[Experience]) -> None:
+        """Put consumed-but-untrained experience back into the delivery
+        stream (spill-not-drop for a trainer dying mid-update): the
+        batches rejoin ``_pending`` in order and re-deliver — re-routed by
+        the Migrator, which no longer counts the dead trainer — at the
+        next flush."""
+        for exp in exps:
+            self._pending.setdefault(-1, []).append(_payloads(exp))
+
     def drain(self) -> Dict[int, List[Experience]]:
         """Pipeline-ending flush: deliver the in-flight back buffers AND
         any still-buffered front pushes (two swap steps in overlap mode,
-        one plain flush otherwise) — the overlap tail is never lost."""
+        one plain flush otherwise) — the overlap tail is never lost.
+        Extra rounds cover retransmissions (dropped flushes re-entering
+        ``_pending``), bounded so a hook that drops everything forever
+        cannot livelock the drain."""
         out: Dict[int, List[Experience]] = {}
         for _ in range(2 if self.overlap else 1):
+            for dst, bs in self.flush().items():
+                out.setdefault(dst, []).extend(bs)
+        guard = 0
+        while guard < 8 and (self._pending or self._inflight
+                             or any(r.count for r in self._rings.values())):
+            guard += 1
             for dst, bs in self.flush().items():
                 out.setdefault(dst, []).extend(bs)
         return out

@@ -490,6 +490,44 @@ class OnlineGMIController:
         self.decisions.append(decision)
         return decision
 
+    # ------------------------------------------------------- persistence --
+    def state_dict(self) -> dict:
+        """The controller's learned state as a JSON-serializable dict —
+        the measured rollout/serving tables plus the committed knobs —
+        for the checkpoint manifest (``AsyncRunner.checkpoint``).  Losing
+        these to a preemption would restart Algorithm 2's online search
+        from scratch; the epoch-in-progress sample buffers are cheap and
+        deliberately not persisted."""
+
+        def dump(table):
+            return [[k[0], k[1], rec.point.throughput, rec.point.memory,
+                     rec.epochs] for k, rec in sorted(table.items())]
+
+        return {"num_gpu": self.num_gpu,
+                "serving_gpus": self.serving_gpus,
+                "gmi_per_gpu": self.gmi_per_gpu,
+                "num_env": self.num_env,
+                "serving_slots": self.serving_slots,
+                "table": dump(self._table),
+                "serving_table": dump(self._serving_table)}
+
+    def load_state_dict(self, state: dict) -> None:
+        def parse(rows):
+            return {(int(a), int(b)):
+                    _Recorded(ProfilePoint(True, float(top), float(mem)),
+                              int(epochs))
+                    for a, b, top, mem, epochs in rows}
+
+        self.num_gpu = int(state["num_gpu"])
+        self.serving_gpus = int(state["serving_gpus"])
+        self.gmi_per_gpu = int(state["gmi_per_gpu"])
+        self.num_env = int(state["num_env"])
+        self.serving_slots = int(state.get("serving_slots", 0))
+        self._table = parse(state.get("table", []))
+        self._serving_table = parse(state.get("serving_table", []))
+        self._epoch = []
+        self._serving_epoch = []
+
     # ----------------------------------------------------------- layouts --
     def plan_layout(self, devices=None, devices_per_gpu=None):
         """Materialize the current decision state as an async placement

@@ -1,0 +1,4 @@
+from repro.fault.inject import (KINDS, TEAR_MODES, FaultEvent,  # noqa: F401
+                                FaultPlan, InjectedFault,
+                                make_save_crash_hook, tear_checkpoint)
+from repro.fault.supervisor import FleetSupervisor  # noqa: F401

@@ -360,3 +360,26 @@ def make_async_runner(env, layout, overlap: bool = False,
                        overlap=overlap, controller=controller,
                        layout_builder=layout_builder,
                        communicator=communicator or None, **kwargs)
+
+
+def make_fleet_supervisor(env, layout, *, plan=None, router=None,
+                          ckpt_dir: Optional[str] = None,
+                          ckpt_every: int = 0, probation: int = 2,
+                          max_retries: int = 2, overlap: bool = False,
+                          online_controller: bool = False, **kwargs):
+    """Fault-tolerant elastic fleet over an async placement layout: a
+    ``make_async_runner`` runner wrapped in a
+    :class:`repro.fault.FleetSupervisor` — injection hooks armed at every
+    seam, per-round failure classification, GPU quarantine with
+    probation-gated re-admission, lossless re-plans onto the surviving
+    pool, and (with ``ckpt_dir``/``ckpt_every``) periodic preemption-safe
+    checkpoints through the atomic ``repro.checkpoint`` writer.  ``plan``
+    is an optional :class:`repro.fault.FaultPlan` (deterministic fault
+    schedule); ``router`` an optional serving front to supervise too."""
+    from repro.fault import FleetSupervisor
+    runner = make_async_runner(env, layout, overlap=overlap,
+                               online_controller=online_controller,
+                               **kwargs)
+    return FleetSupervisor(runner, layout, plan=plan, router=router,
+                           ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                           probation=probation, max_retries=max_retries)

@@ -172,6 +172,21 @@ class AsyncRunner:
         self.predictions = 0
         self.trained_samples = 0
         self.replans = 0
+        self.rounds = 0
+        # fault-injection seam (repro.fault): called with ("serving", gmi)
+        # before each actor collect and ("trainer", gmi) before each batch
+        # update; raising InjectedFault there kills that GMI mid-round.
+        # The trainer path re-queues every consumed-but-untrained batch
+        # into the pipeline (spill-not-drop) before propagating.
+        self.fault_hook = None
+        # non-finite guard (installed by the FleetSupervisor): a batch
+        # whose loss is NaN/inf — e.g. a poisoned channel flush — has its
+        # UPDATE discarded (params/opt/version untouched) instead of
+        # corrupting the model; the data itself is unrecoverable and is
+        # counted, not retrained
+        self.nonfinite_guard = False
+        self.poisoned_batches = 0
+        self.poisoned_samples = 0
 
     def _reset_actors(self):
         self.actors = {}
@@ -189,16 +204,36 @@ class AsyncRunner:
         # RoundSample.reduce_s / Communicator.observe, never from no-ops)
         sync = None if self.communicator is None \
             else self.communicator.grad_sync_fn
-        for _, batches in routed.items():
-            for exp in batches:
-                stale.append(int(staleness(self.version, exp)))
-                self.params, self.opt_state, loss = trainer_update(
-                    self.params, self.opt_state, exp, lr=self.lr,
-                    grad_sync_fn=sync,
-                    use_fused_kernels=self.use_fused_kernels)
-                losses.append(float(loss))
-                self.trained_samples += int(exp.rewards.size)
-                self.version = self.version + 1
+        # flat worklist so a mid-iteration trainer fault can re-queue the
+        # failing batch AND everything not yet consumed
+        work = [(dst, exp) for dst, batches in routed.items()
+                for exp in batches]
+        for i, (dst, exp) in enumerate(work):
+            if self.fault_hook is not None:
+                try:
+                    self.fault_hook("trainer", dst)
+                except BaseException:
+                    # spill, not drop: this batch's gradient is lost with
+                    # the trainer, but its experience — and every batch
+                    # behind it — rejoins the pipeline for the survivors
+                    self.pipe.requeue([e for _, e in work[i:]])
+                    raise
+            stale.append(int(staleness(self.version, exp)))
+            new_params, new_opt, loss = trainer_update(
+                self.params, self.opt_state, exp, lr=self.lr,
+                grad_sync_fn=sync,
+                use_fused_kernels=self.use_fused_kernels)
+            if self.nonfinite_guard and not bool(jnp.isfinite(loss)):
+                # discard the poisoned update: the pre-update pytrees are
+                # still live (JAX arrays are immutable — rollback is free);
+                # version stays put so staleness accounting is untouched
+                self.poisoned_batches += 1
+                self.poisoned_samples += int(exp.rewards.size)
+                continue
+            self.params, self.opt_state = new_params, new_opt
+            losses.append(float(loss))
+            self.trained_samples += int(exp.rewards.size)
+            self.version = self.version + 1
         return losses, stale
 
     def round(self):
@@ -209,6 +244,11 @@ class AsyncRunner:
         import time
         t0 = time.perf_counter()
         for a in self.serving_gmis:
+            if self.fault_hook is not None:
+                # a kill here loses only THIS GMI's not-yet-collected
+                # round; earlier actors' pushes are already ringed and
+                # survive into the recovery drain
+                self.fault_hook("serving", a)
             es, obs, k = self.actors[a]
             exp, es, obs, k = actor_collect(
                 self.actor_params, self.version, self.env, es, obs, k,
@@ -231,6 +271,7 @@ class AsyncRunner:
                     # strategy-only re-plan: pure communication plumbing,
                     # no pipeline drain / actor rebuild needed
                     self.communicator.switch(decision.reduction_strategy)
+        self.rounds += 1
         return losses, stale
 
     def finish(self):
@@ -240,7 +281,7 @@ class AsyncRunner:
         self.actor_params = self.params
         return losses, stale
 
-    def replan(self, decision):
+    def replan(self, decision, layout=None):
         """Apply a controller Decision between epochs: drain + train on
         everything still buffered (nothing is lost across the re-plan),
         then rebuild the pipeline — carrying the old pipeline's batching
@@ -248,14 +289,20 @@ class AsyncRunner:
         layout.  Model parameters, optimizer state, and version persist.
         A decision carrying a ``reduction_strategy`` additionally switches
         the communicator's LGR schedule in place — by construction this
-        touches no model state."""
+        touches no model state.
+
+        An explicit ``layout`` bypasses the controller/layout_builder —
+        the FleetSupervisor's failure-recovery path, where the layout is
+        planned against the reduced (quarantined) pool rather than the
+        controller's notion of the fleet."""
         if not hasattr(self.pipe, "clone_for"):
             raise TypeError(
                 f"online re-planning needs a pipeline with clone_for "
                 f"(MultiChannelPipeline), got {type(self.pipe).__name__}")
         self._train(self.pipe.drain())
-        layout = (self.layout_builder(decision) if self.layout_builder
-                  else self.controller.plan_layout())
+        if layout is None:
+            layout = (self.layout_builder(decision) if self.layout_builder
+                      else self.controller.plan_layout())
         if self.communicator is not None:
             # the communicator's grid/cost model must track the NEW
             # layout, or later strategy decisions are scored (and
@@ -274,3 +321,69 @@ class AsyncRunner:
         self.actor_params = self.params
         self.replans += 1
         return layout
+
+    # ------------------------------------------------- preemption safety --
+    def _ckpt_template(self):
+        return {"params": self.params, "opt_state": self.opt_state,
+                "version": self.version}
+
+    def checkpoint(self, directory, step=None, fault_hook=None):
+        """Preemption-safe checkpoint: params/opt_state/version as the
+        atomic npz+manifest pair (``repro.checkpoint``), with counters and
+        the controller's learned tables riding in the manifest ``extra``.
+        Returns the checkpoint path prefix."""
+        import os
+
+        from repro.checkpoint import ckpt
+        if step is None:
+            step = int(self.version)
+        extra = {"predictions": self.predictions,
+                 "trained_samples": self.trained_samples,
+                 "num_envs": self.num_envs,
+                 "rounds": self.rounds}
+        if self.controller is not None \
+                and hasattr(self.controller, "state_dict"):
+            extra["controller"] = self.controller.state_dict()
+        path = os.path.join(directory, f"ckpt_{step}")
+        ckpt.save(path, self._ckpt_template(), step=step, extra=extra,
+                  fault_hook=fault_hook)
+        return path
+
+    def restore(self, directory, shardings=None):
+        """Resume from the newest LOADABLE checkpoint in ``directory``.
+
+        Torn pairs (manifest without npz) are invisible via
+        ``ckpt.steps``; a pair that is present but unreadable (truncated
+        npz, template mismatch) is skipped and the previous step is
+        tried — so a crash during or after a save always resumes from the
+        last durable state.  Returns the restored step, or ``None`` when
+        nothing loadable exists (fresh start)."""
+        import os
+
+        from repro.checkpoint import ckpt
+        for step in reversed(ckpt.steps(directory)):
+            path = os.path.join(directory, f"ckpt_{step}")
+            try:
+                tree = ckpt.load(path, self._ckpt_template(),
+                                 shardings=shardings)
+                extra = ckpt.load_manifest(path).get("extra") or {}
+            except (FileNotFoundError, ValueError, KeyError):
+                continue
+            self.params = tree["params"]
+            self.opt_state = tree["opt_state"]
+            self.version = tree["version"]
+            self.actor_params = self.params
+            self.predictions = int(extra.get("predictions",
+                                             self.predictions))
+            self.trained_samples = int(extra.get("trained_samples",
+                                                 self.trained_samples))
+            self.rounds = int(extra.get("rounds", self.rounds))
+            new_envs = int(extra.get("num_envs", self.num_envs))
+            if new_envs != self.num_envs:
+                self.num_envs = new_envs
+                self._reset_actors()
+            if self.controller is not None and "controller" in extra \
+                    and hasattr(self.controller, "load_state_dict"):
+                self.controller.load_state_dict(extra["controller"])
+            return step
+        return None

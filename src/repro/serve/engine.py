@@ -60,13 +60,16 @@ class Request:
     ``max_new_tokens`` counts every generated token, including the one the
     prefill emits.  ``extras`` carries additional prompt modalities (e.g.
     ``{"patches": (num_patches, feat)}`` for vision frontends); each entry
-    gets a leading batch dim at admission."""
+    gets a leading batch dim at admission.  ``deadline_s`` is a TTL from
+    submit time: a request still queued past it completes with status
+    ``"timeout"`` instead of occupying a decode slot."""
     tokens: Any
     max_new_tokens: int = 16
     temperature: float = 0.0
     seed: int = 0
     eos_id: Optional[int] = None
     extras: Optional[Dict[str, Any]] = None
+    deadline_s: Optional[float] = None
     rid: int = field(default_factory=lambda: next(_REQUEST_IDS))
 
     def __post_init__(self):
@@ -78,11 +81,15 @@ class Request:
 @dataclass
 class Completion:
     """A retired request: ``tokens`` are the generated ids (prefill token
-    first), ``latency_s`` is submit-to-retire wall time."""
+    first), ``latency_s`` is submit-to-retire wall time.  ``status`` is
+    ``"ok"`` for a normal retire, ``"timeout"`` for a deadline-expired
+    queued request (empty ``tokens``), ``"failed"`` for a request whose
+    engine died mid-decode with retries exhausted."""
     request: Request
     tokens: List[int]
     prompt_tokens: int
     latency_s: float
+    status: str = "ok"
 
     @property
     def rid(self) -> int:
@@ -128,6 +135,12 @@ class ServeEngine:
         self.mesh = mesh
         self.name = name
         self.telemetry = telemetry or ServingTelemetry(self.max_slots)
+        # fault-injection seam (repro.fault): called with this engine at
+        # the top of step(); raising InjectedFault there kills the engine
+        # mid-decode (``dead`` flips, slots are forfeit, queue survives)
+        self.fault_hook = None
+        self.dead = False
+        self.timeouts = 0
         self._sharding = None
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec
@@ -227,8 +240,18 @@ class ServeEngine:
         done: List[Completion] = []
         while self._queue and self.free_slots > 0:
             req = self._queue.popleft()
-            slot = self._slots.index(None)
             t0 = time.perf_counter()
+            t_sub = self.telemetry.submit_time(req.rid, t0)
+            if req.deadline_s is not None and t0 - t_sub > req.deadline_s:
+                # TTL expired while queued: complete as a timeout instead
+                # of spending a slot + prefill on a request nobody wants
+                self.telemetry.on_finish(req.rid, t0)
+                self.timeouts += 1
+                done.append(Completion(
+                    request=req, tokens=[], prompt_tokens=len(req.tokens),
+                    latency_s=t0 - t_sub, status="timeout"))
+                continue
+            slot = self._slots.index(None)
             batch = {"tokens": jnp.asarray(req.tokens[None])}
             if req.extras:
                 for k, v in req.extras.items():
@@ -270,6 +293,19 @@ class ServeEngine:
     def step(self) -> List[Completion]:
         """Admit from the queue, run ONE batched decode step, retire
         finished requests.  Returns this step's completions."""
+        if self.fault_hook is not None:
+            try:
+                self.fault_hook(self)
+            except Exception as exc:
+                # mid-decode death: slots (KV caches and all) are forfeit,
+                # the queue survives at the admission front; tag the
+                # exception with the corpse so the router can target it
+                self.dead = True
+                if getattr(exc, "engine", None) is None:
+                    exc.engine = self
+                raise
+        if self.dead:
+            raise RuntimeError(f"{self.name}: engine is dead")
         done = self._admit()
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
@@ -307,6 +343,18 @@ class ServeEngine:
         router when draining a worker before retiring it)."""
         out = list(self._queue)
         self._queue.clear()
+        return out
+
+    def take_inflight(self) -> List[Request]:
+        """Remove and return the requests currently holding decode slots,
+        abandoning their generation progress (the caches are forfeit on a
+        dead engine) — the router's restart-elsewhere path."""
+        out = [s.req for s in self._slots if s is not None]
+        self._slots = [None] * self.max_slots
+        self._tok[:] = 0
+        self._pos[:] = 0
+        self._seed[:] = 0
+        self._temp[:] = 0.0
         return out
 
     def run_until_idle(self, admit: bool = True) -> List[Completion]:

@@ -17,7 +17,9 @@ serving instance.
 from __future__ import annotations
 
 import inspect
-from typing import Callable, List, Optional
+import time
+import warnings
+from typing import Callable, Dict, List, Optional
 
 from repro.core.gmi import DRLRole, GMIManager
 from repro.serve.engine import Completion, Request, ServeEngine
@@ -61,6 +63,10 @@ class RequestRouter:
         # latencies must still reach the next take_epoch, or a scale-down
         # makes the system look idler than it was
         self._retired_loads: List[ServingLoad] = []
+        self._seen_rids: set = set()
+        # per-rid restart counts for requests whose engine died mid-decode
+        self._retries: Dict[int, int] = {}
+        self.failed_engines = 0
 
     # -------------------------------------------------------------- routing --
     @property
@@ -78,12 +84,20 @@ class RequestRouter:
     def submit(self, req: Request) -> int:
         """Route by queue depth: the engine with the least outstanding
         work (queued + in decode slots) admits the request; ties break to
-        the lowest index for determinism."""
+        the lowest index for determinism.  A rid this router has already
+        accepted is rejected — double-submitting would double-count the
+        request everywhere downstream (internal restarts after an engine
+        failure go through ``_resubmit``, which bypasses this check)."""
         if not self.engines:
             raise RuntimeError("router has no engines (scaled to zero?)")
+        if req.rid in self._seen_rids:
+            raise ValueError(f"request {req.rid} already submitted to "
+                             "this router (duplicate rid)")
         # min() is stable: ties go to the lowest-index engine
         eng = min(self.engines, key=lambda e: e.load)
-        return eng.submit(req)
+        rid = eng.submit(req)
+        self._seen_rids.add(rid)
+        return rid
 
     def step(self) -> List[Completion]:
         """Advance every busy engine one decode step."""
@@ -158,6 +172,53 @@ class RequestRouter:
             eng.telemetry.on_submit(req.rid, t0)
         eng.submit(req)
 
+    def fail_engine(self, engine: ServeEngine,
+                    max_retries: int = 2) -> List[Completion]:
+        """Remove a DEAD engine and recover its requests — the lossless
+        half of serving-GMI failure handling.
+
+        Unlike :meth:`_retire` there is no drain: the engine's decode
+        state is gone.  Its queued requests re-route to the survivors
+        with their original submit clocks (``_resubmit``); its in-flight
+        requests restart from scratch on a survivor, at most
+        ``max_retries`` times each — past that they complete with status
+        ``"failed"`` rather than bouncing between dying engines forever.
+        Deadlines keep running through all of it: an expired restart
+        times out at the survivor's admission.  The dead engine's final
+        telemetry epoch is preserved for the next ``take_epoch``.
+        Returns the completions produced (retry-exhausted failures)."""
+        if engine not in self.engines:
+            return []
+        self.engines.remove(engine)
+        self.failed_engines += 1
+        queued = engine.take_queue()
+        inflight = engine.take_inflight()
+        stamps = {r.rid: engine.telemetry.submit_time(r.rid, None)
+                  for r in queued + inflight}
+        self._retired_loads.append(
+            engine.telemetry.take_epoch(engine.cache_bytes))
+        if not self.engines:
+            raise RuntimeError(
+                "last serving engine died; no survivors to fail over to")
+        done: List[Completion] = []
+        inflight_rids = {r.rid for r in inflight}
+        for req in queued + inflight:
+            req._submit_t = stamps.get(req.rid)
+            if req.rid in inflight_rids:
+                tries = self._retries.get(req.rid, 0)
+                if tries >= max_retries:
+                    now = time.perf_counter()
+                    t0 = req._submit_t if req._submit_t is not None else now
+                    done.append(Completion(
+                        request=req, tokens=[],
+                        prompt_tokens=len(req.tokens),
+                        latency_s=now - t0, status="failed"))
+                    continue
+                self._retries[req.rid] = tries + 1
+            self._resubmit(req)
+        self.completions.extend(done)
+        return done
+
     def scale_to(self, n: int) -> int:
         """Grow or shrink the worker set to ``n`` engines.
 
@@ -168,6 +229,12 @@ class RequestRouter:
         n = max(int(n), 1)
         while len(self.engines) < n:
             if self._factory is None:
+                # surface the shortfall loudly — a silent break here left
+                # callers believing they scaled up when nothing happened
+                warnings.warn(
+                    f"scale_to({n}): router has no engine_factory; "
+                    f"staying at {len(self.engines)} engine(s)",
+                    RuntimeWarning, stacklevel=2)
                 break
             self.engines.append(self._spawn(self._spawned))
             self._spawned += 1

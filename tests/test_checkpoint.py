@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, load, save
+from repro.checkpoint import latest_step, load, load_manifest, save, steps
 
 
 def test_roundtrip(tmp_path):
@@ -34,6 +34,78 @@ def test_latest_step(tmp_path):
         save(str(tmp_path / f"ckpt_{s}"), {"x": jnp.ones(1)}, step=s)
     assert latest_step(str(tmp_path)) == 12
     assert latest_step(str(tmp_path / "missing")) is None
+
+
+def test_extra_rides_in_manifest(tmp_path):
+    path = str(tmp_path / "ckpt_1")
+    save(path, {"x": jnp.ones(2)}, step=1,
+         extra={"predictions": 42, "nested": {"k": [1, 2]}})
+    m = load_manifest(path)
+    assert m["step"] == 1
+    assert m["extra"] == {"predictions": 42, "nested": {"k": [1, 2]}}
+
+
+# ------------------------------------------------------- crash hardening --
+def _tree():
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.int32(7)}
+
+
+def test_atomic_save_crash_at_every_stage_keeps_previous_pair(tmp_path):
+    from repro.checkpoint.ckpt import SAVE_STAGES
+    path = str(tmp_path / "ckpt_5")
+    save(path, _tree(), step=5)
+    bumped = {"w": _tree()["w"] + 100.0, "b": jnp.int32(8)}
+
+    class Crash(RuntimeError):
+        pass
+
+    for stage in SAVE_STAGES:
+        def hook(at, stage=stage):
+            if at == stage:
+                raise Crash(stage)
+        with pytest.raises(Crash):
+            save(path, bumped, step=5, fault_hook=hook)
+        # whatever stage the "preemption" hit, the directory still holds
+        # a loadable pair; only the manifest-replace boundary commits
+        assert steps(str(tmp_path)) == [5]
+        back = load(path, _tree())
+        got = float(np.asarray(back["w"]).ravel()[0])
+        assert got in (0.0, 100.0)     # old pair or fully-committed new
+
+
+def test_torn_npz_load_raises_latest_step_skips(tmp_path):
+    good = str(tmp_path / "ckpt_1")
+    torn = str(tmp_path / "ckpt_2")
+    save(good, _tree(), step=1)
+    save(torn, _tree(), step=2)
+    size = os.path.getsize(torn + ".npz")
+    with open(torn + ".npz", "r+b") as f:
+        f.truncate(size // 3)
+    with pytest.raises(ValueError, match="torn"):
+        load(torn, _tree())
+    # a truncated-but-present npz still lists (it exists); the torn-PAIR
+    # skip is for manifests whose npz is gone entirely
+    os.remove(torn + ".npz")
+    assert steps(str(tmp_path)) == [1]
+    assert latest_step(str(tmp_path)) == 1
+    with pytest.raises(FileNotFoundError):
+        load(torn, _tree())
+    back = load(good, _tree())
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(_tree()["w"]))
+
+
+def test_template_key_mismatches_raise(tmp_path):
+    path = str(tmp_path / "ckpt_0")
+    save(path, {"w": jnp.ones(2), "b": jnp.ones(3)})
+    # checkpoint key absent from the template
+    with pytest.raises(KeyError, match="not in template"):
+        load(path, {"w": jnp.ones(2)})
+    # template key absent from the checkpoint
+    with pytest.raises(KeyError, match="missing"):
+        load(path, {"w": jnp.ones(2), "b": jnp.ones(3),
+                    "extra": jnp.ones(1)})
 
 
 def test_model_checkpoint_roundtrip(tmp_path):
