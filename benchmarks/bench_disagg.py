@@ -1,0 +1,111 @@
+"""Disaggregated prefill/decode serving (ROADMAP item 2): the migrated
+path measured end to end — prefill-specialist GMIs shipping packed cache
+payloads over the ``CacheChannel`` into continuous-batching decode GMIs —
+against the aggregated local-prefill path, under the same synthetic
+open-loop arrival trace ``bench_serving.run_engine`` uses.
+
+Rows:
+
+* ``disagg_migrated_tok``  — us per generated token through the migrated
+  path (every prompt prefilled on a specialist and spliced remotely).
+* ``disagg_local_tok``     — the same trace kept entirely local
+  (aggregated serving; the planner forced to keep_local).
+* ``disagg_p50``/``p95``   — open-loop request latency through the
+  migrated path.
+* ``disagg_prefill_rate``/``decode_rate`` — tok/s per ROLE: measured
+  prompt tok/s of the prefill specialists, generated tok/s of the decode
+  engines' batched loop.
+* ``disagg_crossover``     — the migrate-vs-local crossover in prompt
+  tokens, computed from the MEASURED channel bandwidth, payload size, and
+  prefill rate via the Table-2 migration terms — the prompt length above
+  which ``MigrationPlanner`` starts shipping caches on this host.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.cost_model import migration_time
+
+
+def run(arch: str = "internlm2-1.8b", slots: int = 4, n_requests: int = 12,
+        arrivals_per_step: int = 1, prompt_len: int = 16, gen: int = 12):
+    from repro.configs import get_reduced
+    from repro.launch.steps import make_disagg_front
+    from repro.models import transformer as T
+    from repro.serve import Request
+
+    cfg = get_reduced(arch)
+    params = T.init_model(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+
+    def request():
+        return Request(tokens=rng.integers(0, cfg.vocab_size, prompt_len),
+                       max_new_tokens=gen)
+
+    def open_loop(front):
+        submitted = 0
+        while submitted < n_requests or front.busy:
+            for _ in range(arrivals_per_step):
+                if submitted < n_requests:
+                    front.submit(request())
+                    submitted += 1
+            front.step()
+        return front.take_epoch()
+
+    front = make_disagg_front(cfg, params, decode_engines=2,
+                              prefill_gmis=1, max_slots=slots,
+                              max_seq=prompt_len + gen + 4)
+    # migrated path: force every prompt through prefill GMI -> channel ->
+    # decode GMI, which also measures channel bandwidth, payload size,
+    # and specialist prefill rate for the crossover row below
+    front.planner.static_bandwidth = 1e15
+    front.planner._prefill_tok_s = 1e-6
+    front.serve([request(), request()])          # compile both roles
+    front.take_epoch()
+    mig = open_loop(front)
+    us_mig = mig.dt / max(mig.tokens, 1) * 1e6
+    emit(f"disagg_migrated_tok_{arch}", us_mig,
+         f"tok_s={mig.tok_s:.0f}_migrations={mig.migrations}")
+    emit(f"disagg_p50_{arch}", mig.p50_s * 1e6,
+         f"p50_ms={mig.p50_s*1e3:.1f}")
+    emit(f"disagg_p95_{arch}", mig.p95_s * 1e6,
+         f"p95_ms={mig.p95_s*1e3:.1f}")
+
+    # per-role rates off the migrated run's measurements
+    pl = front.planner
+    prefill_rate = pl.prefill_tok_s
+    decode_rate = mig.tokens / max(mig.decode_s, 1e-9)
+    emit(f"disagg_prefill_rate_{arch}", 1e6 / max(prefill_rate, 1e-9),
+         f"prompt_tok_s={prefill_rate:.0f}")
+    emit(f"disagg_decode_rate_{arch}", 1e6 / max(decode_rate, 1e-9),
+         f"gen_tok_s={decode_rate:.0f}")
+
+    # migrate-vs-local crossover from the MEASURED terms: prompts longer
+    # than min_gain * migration_time * prefill_rate migrate on this host
+    nbytes = front.payload_bytes
+    bw = pl.bandwidth
+    crossover = pl.min_gain * migration_time(nbytes, bw, pl.latency_s) \
+        * prefill_rate
+    emit(f"disagg_crossover_{arch}", 0.0,
+         f"prompt_tokens={crossover:.2f}_payload_MB={nbytes/1e6:.2f}_"
+         f"bw_GBs={bw/1e9:.2f}")
+
+    # local baseline: the SAME trace with the planner keeping every
+    # prompt on the decode side (aggregated serving)
+    local_front = make_disagg_front(cfg, params, decode_engines=2,
+                                    prefill_gmis=1, max_slots=slots,
+                                    max_seq=prompt_len + gen + 4)
+    local_front.planner.static_bandwidth = 1e-3   # migration never wins
+    local_front.planner.latency_s = 10.0
+    rng = np.random.default_rng(0)                # identical arrivals
+    local_front.serve([request(), request()])
+    local_front.take_epoch()
+    loc = open_loop(local_front)
+    assert loc.migrations == 0
+    us_loc = loc.dt / max(loc.tokens, 1) * 1e6
+    emit(f"disagg_local_tok_{arch}", us_loc,
+         f"tok_s={loc.tok_s:.0f}_migrations=0")
+    emit(f"disagg_migrate_over_local_{arch}", 0.0,
+         f"ratio={us_loc / max(us_mig, 1e-9):.2f}x")

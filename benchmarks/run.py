@@ -16,10 +16,14 @@
 #                          recovery; rides in the lgr suite)
 #   bench_faults         — fault-recovery cost (GMI kill / engine fail /
 #                          checkpoint round-trip) + goodput retention
+#   bench_disagg         — disaggregated prefill/decode serving: migrated
+#                          vs local path, tok/s per role, migrate-vs-local
+#                          crossover from measured Table-2 terms
 #   roofline             — §Roofline terms from the dry-run artifacts
 #
 # ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels
-# + bench_lgr + bench_serving + bench_faults, interpret mode on CPU),
+# + bench_lgr + bench_serving + bench_faults + bench_disagg, interpret
+# mode on CPU),
 # writes BENCH_*.json
 # artifacts so
 # future PRs have before/after numbers to diff against, and FAILS (exit 1)
@@ -105,9 +109,9 @@ def _tracked_pyc(root: str) -> list:
 
 def main() -> None:
     from benchmarks import (bench_async, bench_backend, bench_calibration,
-                            bench_faults, bench_kernels, bench_lgr,
-                            bench_mcc, bench_num_env, bench_reward,
-                            bench_selection, bench_serving,
+                            bench_disagg, bench_faults, bench_kernels,
+                            bench_lgr, bench_mcc, bench_num_env,
+                            bench_reward, bench_selection, bench_serving,
                             bench_sync_training, roofline)
     from benchmarks.common import ROWS, emit
 
@@ -145,6 +149,7 @@ def main() -> None:
         ("reward", bench_reward.run),
         ("kernels", bench_kernels.run),
         ("faults", bench_faults.run),
+        ("disagg", bench_disagg.run),
         ("roofline", roofline.run),
     ]
     flags = {"--quick", "--strict"}
@@ -156,7 +161,7 @@ def main() -> None:
         or bool(os.environ.get("BENCH_STRICT"))
     only = args[0].split(",") if args else None
     if quick and only is None:
-        only = ["mcc", "kernels", "lgr", "serving", "faults"]
+        only = ["mcc", "kernels", "lgr", "serving", "faults", "disagg"]
         # an explicit selection wins; --quick then only adds the JSON
         # artifacts
     allow_regression = bool(os.environ.get("BENCH_ALLOW_REGRESSION"))

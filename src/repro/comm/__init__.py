@@ -42,7 +42,7 @@ a single strategy cannot separate the axes it mixes),
 default 0.35), ``transfer_weight``/``use_transfers`` (down-weight or
 disable the channel-transfer B1 evidence, defaults 0.25/on).
 
-``repro.core.lgr`` remains as a thin deprecation shim over this package.
+The old ``repro.core.lgr`` shim is gone; import from here directly.
 """
 from repro.comm.api import Communicator, as_grad_sync  # noqa: F401
 from repro.comm.calibrate import (BandwidthCalibrator,  # noqa: F401

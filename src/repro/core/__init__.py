@@ -2,7 +2,6 @@
 # gmi.py        — instance abstraction + manager (paper §3)
 # placement.py  — task-aware GMI mapping templates (§5.1); Algorithm 1
 #                 lives in repro.comm.select and is re-exported here
-# lgr.py        — DEPRECATED shim: LGR schedules moved to repro.comm
 # channels.py   — channel-based experience sharing MCC (§4.2)
 # selection.py  — workload-aware GMI selection, Algorithm 2 (§5.2)
 # controller.py — online GMI management, the runtime half of Alg. 2 (§5.2)
@@ -13,12 +12,3 @@ from repro.core.controller import (ControllerConfig,  # noqa: F401
                                    OnlineGMIController)
 from repro.core.gmi import DRLRole, GMI, GMIManager  # noqa: F401
 from repro.core.placement import select_reduction_strategy  # noqa: F401
-
-
-def __getattr__(name):
-    # repro.core.lgr stays importable but is only loaded (and only warns)
-    # when actually reached for
-    if name == "lgr":
-        import importlib
-        return importlib.import_module("repro.core.lgr")
-    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -82,9 +82,12 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.kernels.channel_pack import (CHANNELS, alloc_rings,
+                                        cache_payload_bytes,
+                                        pack_cache_payload,
                                         pack_channels_fresh,
                                         pack_channels_xla,
-                                        pack_generation)
+                                        pack_generation,
+                                        unpack_cache_payload)
 from repro.rl.a3c import Experience
 
 
@@ -552,6 +555,87 @@ class MultiChannelPipeline:
     @property
     def stats(self) -> TransferStats:
         return self.compressor.stats
+
+
+class CacheChannel:
+    """Point-to-point ring for prefill->decode cache migration.
+
+    A prefill-specialist GMI finishes a prompt and ships the resulting
+    cache pytree to a decode-specialist GMI's slot.  ``send`` packs the
+    pytree into per-dtype contiguous buffers (``pack_cache_payload`` —
+    the same coarse-grained-transfer discipline as the experience rings;
+    dozens of small leaves would be the §4.2 fine-grained pathology) and
+    stages the transfer; ``deliver`` moves everything staged, reassembles
+    each payload bit-exactly, and records one :class:`TransferStats`
+    entry plus a (seconds, bytes) timing sample per delivering batch —
+    calibrator-compatible, so measured migration bandwidth feeds the same
+    Table-2 fit as gradient reduces.
+
+    Fault seam: ``fault_hook(source, item)`` may answer ``"drop"`` — the
+    transfer is lost in transit and RETRANSMITTED on the next deliver
+    (lossy link, lossless data, matching the experience-ring contract).
+    A dead *source* is different: :meth:`fail_source` evicts that
+    engine's still-staged payloads (their device buffers died with it)
+    and returns the items so the caller can re-prefill them on a
+    survivor — the supervisor's zero-request-loss path.
+    """
+
+    def __init__(self, name: str = "cache"):
+        self.name = name
+        self.fault_hook = None
+        self.stats = TransferStats()
+        self.dropped = 0
+        self._staged: List[tuple] = []   # (source, item, bufs, meta)
+        self._transfer_samples: List[Tuple[float, int]] = []
+
+    def send(self, item, tree, *, source=None) -> int:
+        """Stage ``tree`` (a cache pytree) for delivery; ``item`` is the
+        caller's opaque routing handle, ``source`` identifies the sending
+        engine for :meth:`fail_source`.  Returns the wire size."""
+        bufs, meta = pack_cache_payload(tree)
+        self._staged.append((source, item, bufs, meta))
+        return cache_payload_bytes(bufs)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._staged)
+
+    def deliver(self) -> List[tuple]:
+        """Deliver everything staged as ``(item, tree)`` pairs, oldest
+        first.  Dropped transfers stay staged for retransmission."""
+        t0 = time.perf_counter()
+        staged, self._staged = self._staged, []
+        out: List[tuple] = []
+        nbytes = 0
+        for source, item, bufs, meta in staged:
+            if self.fault_hook is not None \
+                    and self.fault_hook(source, item) == "drop":
+                self.dropped += 1
+                self._staged.append((source, item, bufs, meta))
+                continue
+            tree = unpack_cache_payload(bufs, meta)
+            self.stats.record(tree)
+            nbytes += cache_payload_bytes(bufs)
+            out.append((item, tree))
+        if nbytes > 0:
+            self._transfer_samples.append(
+                (time.perf_counter() - t0, int(nbytes)))
+            del self._transfer_samples[:-64]
+        return out
+
+    def fail_source(self, source) -> List:
+        """Evict payloads still staged from a dead source engine; returns
+        their ``item`` handles for re-prefill on a survivor."""
+        lost = [item for (src, item, _, _) in self._staged
+                if src is source]
+        self._staged = [e for e in self._staged if e[0] is not source]
+        return lost
+
+    def take_transfer_samples(self) -> List[Tuple[float, int]]:
+        """Per-delivery (seconds, bytes) samples since the last call —
+        the migration-bandwidth evidence for the calibrator."""
+        samples, self._transfer_samples = self._transfer_samples, []
+        return samples
 
 
 class HostStagedPipeline:

@@ -121,6 +121,16 @@ class Decision:
     # set by serving decisions: decode slots per engine (the serving
     # analogue of the num_env ladder); None for rollout decisions
     slots: Optional[int] = None
+    # prefill-specialist GPUs carved out of the serving pool
+    # (disaggregated serving); None when the epoch carried no
+    # prefill/decode telemetry
+    prefill_gpus: Optional[int] = None
+    # staleness fence for the single-arbiter control plane: the
+    # controller's ``plan_seq`` at emission time.  ``AsyncRunner.replan``
+    # bumps ``plan_seq`` on every drain/rebuild, so an apply path
+    # (``RequestRouter.apply_decision``) can refuse a decision computed
+    # against a layout that no longer exists.
+    seq: int = 0
 
 
 @dataclass
@@ -182,6 +192,14 @@ class OnlineGMIController:
         self.serving_slots = 0         # learned from the first epoch
         self._serving_table: Dict[Tuple[int, int], _Recorded] = {}
         self._serving_epoch: List = []
+        # disaggregated serving (PR 7): prefill-specialist GPUs carved
+        # out of the serving pool; 0 = aggregated (every serving GMI
+        # prefills locally).  Arbitrated in _decide_serving from the
+        # prefill_backlog/migrations telemetry fields.
+        self.prefill_gpus = 0
+        # bumped by AsyncRunner.replan on every drain/rebuild; stamped
+        # onto emitted decisions as the staleness fence
+        self.plan_seq = 0
 
     # ------------------------------------------------------- observation --
     def observe_pipeline(self, pipeline, samples: int,
@@ -310,6 +328,26 @@ class OnlineGMIController:
             reason = (f"serving idle (occ={occ:.2f}, empty queue): "
                       "+1 training GPU")
 
+        # prefill:decode arbitration inside the serving pool (disagg):
+        # sustained prefill backlog moves a serving GPU to prefill duty;
+        # an epoch with zero prefill work anywhere gives one back.  Only
+        # active when the telemetry actually carries disagg signals —
+        # aggregated fleets never enter here.
+        prefill = self.prefill_gpus
+        pf_back = [int(getattr(l, "prefill_backlog", 0)) for l in rounds]
+        pf_migr = [int(getattr(l, "migrations", 0)) for l in rounds]
+        disagg = prefill > 0 or any(pf_back) or any(pf_migr)
+        if disagg:
+            if all(b > 0 for b in pf_back) and prefill < serving - 1:
+                prefill += 1
+                note = (f"prefill backlog ({sum(pf_back)} waiting): "
+                        "+1 prefill GMI")
+                reason = f"{reason}; {note}" if reason else note
+            elif prefill > 1 and not any(pf_back) and not any(pf_migr):
+                prefill -= 1
+                note = "prefill idle epoch: +1 decode GMI"
+                reason = f"{reason}; {note}" if reason else note
+
         # explore over the measured serving table: same search, with the
         # slot ladder standing in for the num_env sweep.  The search is
         # PINNED to the live gmi_per_gpu — that knob belongs to the
@@ -342,7 +380,8 @@ class OnlineGMIController:
         if reason is None:
             return None
         layout_changed = (serving != self.serving_gpus
-                          or slots != self.serving_slots)
+                          or slots != self.serving_slots
+                          or prefill != self.prefill_gpus)
         decision = Decision(num_env=self.num_env,
                             gmi_per_gpu=self.gmi_per_gpu,
                             serving_gpus=serving,
@@ -350,9 +389,12 @@ class OnlineGMIController:
                                 l.tokens for l in rounds) / max(
                                 sum(l.dt for l in rounds), 1e-12),
                             reason=reason, slots=slots,
-                            layout_changed=layout_changed)
+                            prefill_gpus=prefill if disagg else None,
+                            layout_changed=layout_changed,
+                            seq=self.plan_seq)
         self.serving_gpus = serving
         self.serving_slots = slots
+        self.prefill_gpus = prefill
         self.decisions.append(decision)
         return decision
 
@@ -483,7 +525,8 @@ class OnlineGMIController:
                             projected_throughput=max(best_top, cur_top),
                             reason=reason,
                             reduction_strategy=reduction_strategy,
-                            layout_changed=layout_changed)
+                            layout_changed=layout_changed,
+                            seq=self.plan_seq)
         self.num_env = num_env
         self.gmi_per_gpu = gmi_per_gpu
         self.serving_gpus = serving
@@ -508,6 +551,8 @@ class OnlineGMIController:
                 "gmi_per_gpu": self.gmi_per_gpu,
                 "num_env": self.num_env,
                 "serving_slots": self.serving_slots,
+                "prefill_gpus": self.prefill_gpus,
+                "plan_seq": self.plan_seq,
                 "table": dump(self._table),
                 "serving_table": dump(self._serving_table)}
 
@@ -523,6 +568,8 @@ class OnlineGMIController:
         self.gmi_per_gpu = int(state["gmi_per_gpu"])
         self.num_env = int(state["num_env"])
         self.serving_slots = int(state.get("serving_slots", 0))
+        self.prefill_gpus = int(state.get("prefill_gpus", 0))
+        self.plan_seq = int(state.get("plan_seq", 0))
         self._table = parse(state.get("table", []))
         self._serving_table = parse(state.get("serving_table", []))
         self._epoch = []

@@ -155,3 +155,42 @@ def training_speedup_tcg_over_tdg(w: WorkloadProfile = WorkloadProfile()) \
 def dominant_resource(R_sm: float, sm_per_gpu: float, R_mem: float,
                       mem_per_gpu: float) -> str:
     return "SM" if R_sm / sm_per_gpu >= R_mem / mem_per_gpu else "Memory"
+
+
+# --------------------------------------- cache migration (disaggregation) ---
+# Prefill/decode disaggregation prices a finished prefill cache shipped
+# from a prefill GMI to a decode GMI in the SAME units as Table 2: a
+# point-to-point transfer over one of the B1/B2/B3 bandwidth tiers.  The
+# alternative is running the prompt's prefill locally on the decode GMI,
+# which stalls its whole decode batch for the prefill duration.
+
+def migration_time(nbytes: float, bandwidth: float,
+                   latency_s: float = 0.0) -> float:
+    """Seconds to ship ``nbytes`` of packed cache over a ``bandwidth``
+    bytes/s link (calibrated B1/B2 in practice) plus a fixed per-transfer
+    ``latency_s`` (pack/unpack + ring hop)."""
+    return latency_s + nbytes / max(bandwidth, 1e-9)
+
+
+def local_prefill_time(prompt_tokens: int, prefill_tok_s: float) -> float:
+    """Seconds the decode batch stalls if the decode GMI prefills this
+    prompt itself, from a measured prefill throughput (tokens/s)."""
+    return prompt_tokens / max(prefill_tok_s, 1e-9)
+
+
+def migration_gain(nbytes: float, prompt_tokens: int, bandwidth: float,
+                   prefill_tok_s: float, latency_s: float = 0.0) -> float:
+    """Ratio local-prefill-stall / migration-cost.  > 1 means shipping
+    the prefilled cache beats recomputing the prefill on the decode GMI;
+    compare against the controller's ``min_gain`` (1.05x) hysteresis so
+    the per-request decision and the GMI arbiter share one threshold."""
+    return (local_prefill_time(prompt_tokens, prefill_tok_s)
+            / max(migration_time(nbytes, bandwidth, latency_s), 1e-12))
+
+
+def migration_beats_local(nbytes: float, prompt_tokens: int,
+                          bandwidth: float, prefill_tok_s: float,
+                          latency_s: float = 0.0,
+                          min_gain: float = 1.05) -> bool:
+    return migration_gain(nbytes, prompt_tokens, bandwidth,
+                          prefill_tok_s, latency_s) >= min_gain

@@ -20,6 +20,9 @@ Fault classes (``KINDS``):
 * ``engine_fail``    — a request-serving engine dies mid-decode: its
   decode slots (cache and all) are gone; queued requests survive at the
   admission front.
+* ``prefill_fail``   — a prefill-specialist GMI dies: its queued prompts
+  and any cache payload it has in flight on the migration channel must
+  re-route to survivors with their latency clocks intact (lossless).
 * ``channel_drop``   — a channel flush is lost in transit (the pipeline
   retransmits it on the next flush).
 * ``channel_poison`` — a channel flush is delivered corrupted (NaN
@@ -37,7 +40,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-KINDS = ("kill_serving", "kill_trainer", "engine_fail",
+KINDS = ("kill_serving", "kill_trainer", "engine_fail", "prefill_fail",
          "channel_drop", "channel_poison", "ckpt_tear")
 
 # ckpt_tear modes: SAVE_STAGES entries crash mid-save (atomicity holds);

@@ -23,6 +23,11 @@ action for its class:
   queued requests re-route to survivors with their latency clocks
   intact, in-flight requests restart from scratch under a capped retry
   budget, deadlines keep running throughout.
+* **prefill GMI dies** — classified separately from decode-engine death:
+  ``DisaggFront.fail_prefill_engine`` re-routes its queued prompts to a
+  surviving prefill specialist, evicts the dead source's in-flight cache
+  payloads from the migration channel, and re-prefills those requests on
+  survivors with their submit clocks intact — zero requests lost.
 * **channel drop / poison** — the pipeline retransmits dropped flushes
   from ``_pending``; poisoned flushes reach the trainer, whose
   non-finite guard (enabled by the supervisor) discards the update
@@ -141,12 +146,15 @@ class FleetSupervisor:
             return
         for i, eng in enumerate(self.router.engines):
             eng.fault_hook = self._make_engine_hook(i)
+        for i, eng in enumerate(getattr(self.router,
+                                        "prefill_engines", ())):
+            eng.fault_hook = self._make_engine_hook(i, kind="prefill_fail")
 
-    def _make_engine_hook(self, index: int):
+    def _make_engine_hook(self, index: int, kind: str = "engine_fail"):
         def hook(engine):
             if self.plan is None:
                 return
-            ev = self.plan.take("engine_fail", target=index)
+            ev = self.plan.take(kind, target=index)
             if ev is not None:
                 raise InjectedFault(ev, engine=engine)
         return hook
@@ -186,8 +194,11 @@ class FleetSupervisor:
         return self.runner.finish()
 
     def step_serving(self):
-        """One guarded router step: engine hooks armed on the live set;
-        a dying engine is failed over via ``fail_engine``."""
+        """One guarded router step: engine hooks armed on the live set
+        (decode AND prefill specialists); a dying decode engine is failed
+        over via ``fail_engine``, a dying prefill GMI via
+        ``fail_prefill_engine`` (lossless — queued prompts and in-flight
+        cache payloads re-route to survivors)."""
         self._arm_engines()
         try:
             return self.router.step()
@@ -195,6 +206,16 @@ class FleetSupervisor:
             eng = getattr(exc, "engine", None)
             if eng is None:
                 raise
+            if eng in getattr(self.router, "prefill_engines", ()):
+                self.failures.append({
+                    "kind": "prefill_fail", "round": self.rounds_total,
+                    "target": getattr(eng, "name", None)})
+                rerouted = self.router.fail_prefill_engine(eng)
+                self.recoveries.append({
+                    "kind": "prefill_fail", "round": self.rounds_total,
+                    "action": f"re-routed {rerouted} prompt(s)/payload(s) "
+                              f"to surviving prefill GMI(s)"})
+                return []
             self.failures.append({
                 "kind": "engine_fail", "round": self.rounds_total,
                 "target": getattr(eng, "name", None)})

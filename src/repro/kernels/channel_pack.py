@@ -206,3 +206,73 @@ def pack_generation(staged) -> Dict[str, jax.Array]:
     assert staged
     flat = [p[c] for p in staged for c in CHANNELS]
     return _generation_packer(len(staged))(*flat)
+
+
+# ----------------------------------------------------- cache-payload pack ---
+# Prefill/decode disaggregation ships a finished prefill cache (an
+# arbitrary pytree: KV stacks, SSM windows, hybrid mixes) between GMIs.
+# Shipping dozens of small leaves is exactly the fine-grained-transfer
+# pathology the ring pack above exists to avoid, so a cache payload is
+# flattened into ONE contiguous 1-D buffer per dtype (the coarse-grained
+# unit the channel ring moves) and reassembled bit-exactly on the decode
+# side.  Both directions are jitted once per (treedef, shapes, dtypes)
+# structure — the serving engines reuse a fixed cache layout, so in
+# steady state pack/unpack are single cached dispatches.
+
+@functools.lru_cache(maxsize=None)
+def _cache_packer(spec):
+    dtypes = sorted({d for _, d in spec})
+
+    def pack(*leaves):
+        return tuple(
+            jnp.concatenate([leaves[i].reshape(-1)
+                             for i, (_, d) in enumerate(spec) if d == dt])
+            for dt in dtypes)
+
+    return jax.jit(pack), dtypes
+
+
+@functools.lru_cache(maxsize=None)
+def _cache_unpacker(spec):
+    dtypes = sorted({d for _, d in spec})
+
+    def unpack(*bufs):
+        offs = {dt: 0 for dt in dtypes}
+        leaves = []
+        for shape, dt in spec:
+            n = 1
+            for s in shape:
+                n *= s
+            buf = bufs[dtypes.index(dt)]
+            leaves.append(jax.lax.dynamic_slice_in_dim(
+                buf, offs[dt], n).reshape(shape))
+            offs[dt] += n
+        return tuple(leaves)
+
+    return jax.jit(unpack)
+
+
+def pack_cache_payload(tree):
+    """Flatten a cache pytree into per-dtype contiguous 1-D buffers.
+
+    Returns ``(bufs, meta)`` where ``bufs`` is a tuple of device arrays
+    (one per distinct dtype, dtype-sorted) and ``meta`` re-creates the
+    pytree via :func:`unpack_cache_payload`.  Round-trip is bit-exact —
+    no casting, just ravel + concatenate."""
+    leaves, treedef = jax.tree.flatten(tree)
+    spec = tuple((tuple(l.shape), str(jnp.asarray(l).dtype))
+                 for l in leaves)
+    pack, _ = _cache_packer(spec)
+    return pack(*leaves), (treedef, spec)
+
+
+def unpack_cache_payload(bufs, meta):
+    """Inverse of :func:`pack_cache_payload`."""
+    treedef, spec = meta
+    leaves = _cache_unpacker(spec)(*bufs)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def cache_payload_bytes(bufs) -> int:
+    """Wire size of a packed payload (sum over per-dtype buffers)."""
+    return int(sum(b.size * b.dtype.itemsize for b in bufs))

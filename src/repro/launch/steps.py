@@ -362,6 +362,44 @@ def make_async_runner(env, layout, overlap: bool = False,
                        communicator=communicator or None, **kwargs)
 
 
+def make_disagg_front(cfg, params, *, decode_engines: int = 2,
+                      prefill_gmis: int = 1, max_slots: int = 4,
+                      max_seq: int = 128,
+                      window_override: Optional[int] = None,
+                      communicator=None, latency_s: float = 100e-6,
+                      min_gain: float = 1.05):
+    """Disaggregated serving front (ROADMAP item 2): ``decode_engines``
+    continuous-batching decode GMIs behind a ``RequestRouter`` plus
+    ``prefill_gmis`` prefill specialists, joined by a ``CacheChannel``,
+    with the per-request migrate-vs-local decision priced by a
+    ``MigrationPlanner`` in Table-2 units (a ``communicator`` supplies
+    calibrated bandwidths; the channel's own measured transfers sharpen
+    them).  Both sides get factories, so ONE controller decision can
+    re-split prefill/decode at runtime.  Pass the front as ``router=`` to
+    :func:`make_async_runner` / :func:`make_fleet_supervisor` to put it
+    under the single Algorithm-2 arbiter."""
+    from repro.serve import (DisaggFront, MigrationPlanner, PrefillEngine,
+                             RequestRouter, ServeEngine)
+
+    def engine_factory(i, slots=max_slots):
+        return ServeEngine(cfg, params, max_slots=slots, max_seq=max_seq,
+                           window_override=window_override,
+                           name=f"decode{i}")
+
+    def prefill_factory(i):
+        return PrefillEngine(cfg, params, max_seq=max_seq,
+                             window_override=window_override,
+                             name=f"prefill{i}")
+
+    router = RequestRouter(engine_factory=engine_factory,
+                           num_engines=decode_engines)
+    planner = MigrationPlanner(communicator=communicator,
+                               latency_s=latency_s, min_gain=min_gain)
+    return DisaggFront(
+        router, [prefill_factory(i) for i in range(max(prefill_gmis, 1))],
+        planner=planner, prefill_factory=prefill_factory)
+
+
 def make_fleet_supervisor(env, layout, *, plan=None, router=None,
                           ckpt_dir: Optional[str] = None,
                           ckpt_every: int = 0, probation: int = 2,
@@ -375,11 +413,14 @@ def make_fleet_supervisor(env, layout, *, plan=None, router=None,
     pool, and (with ``ckpt_dir``/``ckpt_every``) periodic preemption-safe
     checkpoints through the atomic ``repro.checkpoint`` writer.  ``plan``
     is an optional :class:`repro.fault.FaultPlan` (deterministic fault
-    schedule); ``router`` an optional serving front to supervise too."""
+    schedule); ``router`` an optional serving front (``RequestRouter`` or
+    ``DisaggFront``) to supervise too — it is ALSO handed to the runner,
+    so the one controller instance arbitrating trainers and rollout
+    actors folds the serving epochs into the same Algorithm-2 loop."""
     from repro.fault import FleetSupervisor
     runner = make_async_runner(env, layout, overlap=overlap,
                                online_controller=online_controller,
-                               **kwargs)
+                               router=router, **kwargs)
     return FleetSupervisor(runner, layout, plan=plan, router=router,
                            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
                            probation=probation, max_retries=max_retries)

@@ -136,7 +136,7 @@ class AsyncRunner:
                  num_envs: int = 64, num_steps: int = 16, seed: int = 0,
                  lr: float = 3e-4, pipeline=None, overlap: bool = False,
                  controller=None, layout_builder=None, communicator=None,
-                 use_fused_kernels: bool = False):
+                 router=None, use_fused_kernels: bool = False):
         from repro.core.channels import MultiChannelPipeline
         from repro.models.policy import init_policy
         from repro.optim import adam_init
@@ -150,6 +150,14 @@ class AsyncRunner:
         self.overlap = overlap
         self.controller = controller
         self.layout_builder = layout_builder
+        # single-arbiter control plane: with a request-serving front
+        # attached (RequestRouter or serve.disagg.DisaggFront), its
+        # telemetry epochs fold into the SAME controller instance every
+        # round and its decisions apply through the front's thin
+        # apply_decision hook — rollout, trainer, prefill, and decode
+        # GMIs all arbitrated by one Algorithm-2 loop under one
+        # min_gain hysteresis, never by a second decision loop
+        self.router = router
         if communicator is not None and communicator.mesh is not None:
             raise TypeError(
                 "AsyncRunner's round-interleaved trainer is eager; a "
@@ -271,6 +279,15 @@ class AsyncRunner:
                     # strategy-only re-plan: pure communication plumbing,
                     # no pipeline drain / actor rebuild needed
                     self.communicator.switch(decision.reduction_strategy)
+        if self.router is not None and self.controller is not None:
+            # the serving half of the single-arbiter loop: fold the
+            # front's telemetry epoch into the same controller and apply
+            # whatever it answers through the thin hook.  A decision
+            # captured before this round's rollout re-plan carries a
+            # stale seq and is refused by the hook's fence.
+            sdec = self.controller.observe_serving(self.router.take_epoch())
+            if sdec is not None:
+                self.router.apply_decision(sdec, controller=self.controller)
         self.rounds += 1
         return losses, stale
 
@@ -299,6 +316,11 @@ class AsyncRunner:
             raise TypeError(
                 f"online re-planning needs a pipeline with clone_for "
                 f"(MultiChannelPipeline), got {type(self.pipe).__name__}")
+        if self.controller is not None:
+            # staleness fence: any serving Decision emitted before this
+            # drain carries the old seq and must not apply afterwards —
+            # it was computed against the layout being torn down
+            self.controller.plan_seq += 1
         self._train(self.pipe.drain())
         if layout is None:
             layout = (self.layout_builder(decision) if self.layout_builder

@@ -26,16 +26,30 @@ Paper concept → code map
 * §4 adaptive GMI management (Algorithm 2 under traffic) →
   :class:`~repro.serve.telemetry.ServingTelemetry` epochs
   (:class:`~repro.serve.telemetry.ServingLoad`) fold into
-  ``OnlineGMIController.observe_serving``; sustained backlog moves a GPU
-  to serving, idle slots give one back, and
-  :meth:`~repro.serve.router.RequestRouter.maybe_replan` applies the
-  decision by scaling the engine set — the same measured-load loop that
-  already rebalances serve/train for rollouts (arXiv:2012.04210).
+  ``OnlineGMIController.observe_serving``.  The controller runs as ONE
+  instance inside the overlapped ``AsyncRunner`` round loop, arbitrating
+  trainers, rollout actors, prefill GMIs, and decode GMIs under the same
+  1.05x hysteresis; the fronts' ``apply_decision`` hooks are thin
+  appliers guarded against stale and double-applied decisions
+  (``Decision.seq`` vs ``controller.plan_seq``).
+* §4.2 coarse-grained transfer discipline, applied to serving →
+  :mod:`repro.serve.disagg`: prefill/decode disaggregation across GMIs.
+  Request lifecycle: submit → :class:`~repro.serve.disagg.MigrationPlanner`
+  prices migrate-vs-local in Table-2 cost-model units → EITHER a
+  :class:`~repro.serve.disagg.PrefillEngine` specialist prefills and
+  ships the packed cache over a ``core.channels.CacheChannel`` to the
+  least-loaded decode GMI (splice-only admission,
+  :meth:`~repro.serve.engine.ServeEngine.submit_prefilled`) OR the
+  request stays on the decode side's local B=1 prefill + splice path →
+  batched decode → completion.  Decode output is token-identical either
+  way, for every cache family.
 
-``launch/serve.py``, ``examples/llm_policy_serving.py``,
-``examples/submesh_serving.py``, and ``benchmarks/bench_serving.py`` are
-thin clients of this package.
+``launch/serve.py`` (``--disagg``), ``examples/llm_policy_serving.py``,
+``examples/submesh_serving.py``, ``benchmarks/bench_serving.py``, and
+``benchmarks/bench_disagg.py`` are thin clients of this package.
 """
+from repro.serve.disagg import (CachePayload, DisaggFront, MigrationPlanner,
+                                PrefillEngine)
 from repro.serve.engine import Completion, Request, ServeEngine
 from repro.serve.router import RequestRouter, ServingRole
 from repro.serve.telemetry import ServingLoad, ServingTelemetry, merge_loads
@@ -43,5 +57,6 @@ from repro.serve.telemetry import ServingLoad, ServingTelemetry, merge_loads
 __all__ = [
     "Completion", "Request", "ServeEngine",
     "RequestRouter", "ServingRole",
+    "CachePayload", "DisaggFront", "MigrationPlanner", "PrefillEngine",
     "ServingLoad", "ServingTelemetry", "merge_loads",
 ]

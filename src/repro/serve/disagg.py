@@ -1,0 +1,492 @@
+"""Prefill/decode disaggregation across GMIs (ROADMAP item 2; JigsawRL
+arXiv:2604.23838's request-level scheduling argument applied to the
+GMI-DRL serving pool).
+
+Aggregated serving runs every request's whole-prompt B=1 prefill on the
+decode GMI that will host it, stalling that engine's decode batch for
+the prefill duration.  Disaggregated serving splits the roles:
+
+* :class:`PrefillEngine` — a prefill-specialist GMI.  Runs the SAME
+  compiled ``transformer.prefill`` + token pick the decode engines use
+  (identical cfg/params/max_seq/window), so the cache and first token it
+  produces are bit-identical to what the decode engine would have
+  computed locally.  Its product is a :class:`CachePayload`.
+* :class:`~repro.core.channels.CacheChannel` — the migration link: the
+  payload's cache pytree is packed into per-dtype contiguous buffers
+  (``kernels.channel_pack.pack_cache_payload`` — one coarse move, the
+  §4.2 anti-fine-grained-transfer discipline) and reassembled bit-exact
+  on the decode side, with (seconds, bytes) samples feeding the same
+  bandwidth calibrator as gradient reduces.
+* :class:`MigrationPlanner` — per-request migrate-vs-local decision in
+  Table-2 units (``core.cost_model.migration_beats_local``): migration
+  costs ``latency + bytes/bandwidth`` against the measured local-prefill
+  stall ``prompt_tokens / prefill_tok_s``, under the controller's own
+  1.05x hysteresis.  Bandwidth preference order: measured channel
+  samples (EMA) > the communicator's calibrated Table-2 fit > static
+  default.  Short prompts stay local; long prompts migrate — the
+  crossover is measured by ``benchmarks/bench_disagg.py``.
+* :class:`DisaggFront` — the composed serving front.  Request lifecycle::
+
+      submit -> planner: migrate or local?
+        local   -> RequestRouter -> decode GMI [B=1 prefill + splice]
+        migrate -> prefill GMI -> CachePayload -> CacheChannel
+                -> decode GMI ``submit_prefilled`` [splice only]
+      -> batched decode -> completion
+
+Control plane: the front does NOT make scaling decisions.  It exposes
+``take_epoch`` (router load + prefill telemetry: ``prefill_backlog``,
+``migrations``) and ``apply_decision`` (resize the prefill set from
+``Decision.prefill_gpus``, then delegate to the router), and the single
+:class:`~repro.core.controller.OnlineGMIController` instance driven by
+``AsyncRunner.round`` arbitrates trainers, rollout actors, prefill GMIs,
+and decode GMIs together.
+
+Fault story (extends PR 6's zero-request-loss invariant): a dead prefill
+GMI forfeits its queued prompts and its still-staged channel transfers
+(``CacheChannel.fail_source``); :meth:`DisaggFront.fail_prefill_engine`
+re-prefills all of them on surviving prefill GMIs — or re-routes them to
+the decode side's local-prefill path when no specialist survives.  Every
+request completes either way.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.channels import CacheChannel
+from repro.core.cost_model import migration_beats_local
+from repro.serve.engine import (Completion, Request, ServeEngine,
+                                _pick_tokens)
+from repro.serve.router import RequestRouter
+from repro.serve.telemetry import ServingLoad
+from repro.models import transformer as T
+
+
+@dataclass
+class CachePayload:
+    """A finished prefill, portable between GMIs: the cache pytree (batch
+    dim 1 at axis 1 on every stacked leaf — the shape ``ServeEngine``'s
+    jitted splice expects), the first generated token, and the request's
+    original latency clock."""
+    req: Request
+    cache: Any
+    first_id: int
+    prompt_tokens: int
+    submit_t: float = 0.0
+    prefill_s: float = 0.0
+
+
+class PrefillEngine:
+    """Prefill-specialist GMI: whole-prompt B=1 prefill, no decode slots.
+
+    Shares cfg/params/max_seq/window with the decode engines it feeds —
+    the token-identity precondition.  One :meth:`step` prefills one
+    queued request and returns its :class:`CachePayload` (or None when
+    idle).  Carries the same fault seam as ``ServeEngine.step``: a
+    ``fault_hook`` raising marks the engine dead and tags the exception
+    with the corpse for the supervisor."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 128,
+                 window_override: Optional[int] = None, mesh=None,
+                 name: str = "prefill"):
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.name}: encoder-only model has no "
+                             "decode step — nothing to prefill for")
+        self.cfg = cfg
+        self.max_seq = int(max_seq)
+        self.window_override = window_override
+        self.name = name
+        self.fault_hook = None
+        self.dead = False
+        self._sharding = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._sharding = NamedSharding(mesh, PartitionSpec())
+            params = jax.device_put(params, self._sharding)
+        self.params = params
+        self._queue: List[Request] = []
+        self._submit_t = {}
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(p, cfg, b, self.max_seq, window_override))
+        # epoch-scoped prefill telemetry (folded into the front's load)
+        self._epoch_prefill_s = 0.0
+        self._epoch_prefilled = 0
+        self._epoch_prefill_tokens = 0
+        self.total_prefilled = 0
+
+    def _put(self, tree):
+        if self._sharding is None:
+            return tree
+        return jax.device_put(tree, self._sharding)
+
+    @property
+    def load(self) -> int:
+        return len(self._queue)
+
+    @property
+    def busy(self) -> bool:
+        return self.load > 0
+
+    def submit(self, req: Request, submit_t: Optional[float] = None) -> int:
+        total = len(req.tokens) + req.max_new_tokens
+        if total > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt+budget {total} exceeds "
+                f"prefill max_seq {self.max_seq}")
+        self._submit_t.setdefault(
+            req.rid, time.perf_counter() if submit_t is None else submit_t)
+        self._queue.append(req)
+        return req.rid
+
+    def take_queue(self) -> List[Request]:
+        """Remove every queued request (failover: a survivor re-prefills
+        them; latency clocks ride on ``req._submit_t``)."""
+        out, self._queue = self._queue, []
+        for r in out:
+            r._submit_t = self._submit_t.pop(r.rid, None)
+        return out
+
+    def step(self) -> Optional[CachePayload]:
+        """Prefill the oldest queued request into a portable payload."""
+        if self.fault_hook is not None:
+            try:
+                self.fault_hook(self)
+            except Exception as exc:
+                self.dead = True
+                if getattr(exc, "engine", None) is None:
+                    exc.engine = self
+                raise
+        if self.dead:
+            raise RuntimeError(f"{self.name}: prefill engine is dead")
+        if not self._queue:
+            return None
+        req = self._queue.pop(0)
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(req.tokens[None])}
+        if req.extras:
+            for k, v in req.extras.items():
+                batch[k] = jnp.asarray(np.asarray(v)[None])
+        batch = self._put(batch)
+        logits, cache = self._prefill(self.params, batch)
+        prompt_tokens = len(req.tokens)
+        first = _pick_tokens(logits,
+                             jnp.asarray([prompt_tokens - 1], jnp.int32),
+                             jnp.asarray([req.seed], jnp.int32),
+                             jnp.asarray([req.temperature], jnp.float32))
+        first_id = int(jax.block_until_ready(first)[0])
+        prefill_s = time.perf_counter() - t0
+        self._epoch_prefill_s += prefill_s
+        self._epoch_prefilled += 1
+        self._epoch_prefill_tokens += prompt_tokens
+        self.total_prefilled += 1
+        return CachePayload(
+            req=req, cache=cache, first_id=first_id,
+            prompt_tokens=prompt_tokens,
+            submit_t=self._submit_t.pop(req.rid, t0),
+            prefill_s=prefill_s)
+
+    def take_epoch(self) -> tuple:
+        """(prefill seconds, prompts, prompt tokens) this epoch; resets."""
+        out = (self._epoch_prefill_s, self._epoch_prefilled,
+               self._epoch_prefill_tokens)
+        self._epoch_prefill_s = 0.0
+        self._epoch_prefilled = 0
+        self._epoch_prefill_tokens = 0
+        return out
+
+
+class MigrationPlanner:
+    """Per-request migrate-vs-local decision in Table-2 cost-model units.
+
+    Seeds with static defaults, then follows measurements: channel
+    (seconds, bytes) samples sharpen the bandwidth estimate (EMA), the
+    decode engines' measured prefill throughput sharpens the local-stall
+    estimate, and an attached communicator's calibrated Table-2 fit
+    supplies bandwidth while the channel is still unmeasured."""
+
+    def __init__(self, *, bandwidth: Optional[float] = None,
+                 communicator=None, latency_s: float = 100e-6,
+                 min_gain: float = 1.05,
+                 prefill_tok_s: float = 2e3, ema: float = 0.3):
+        self.communicator = communicator
+        self.static_bandwidth = bandwidth
+        self.latency_s = float(latency_s)
+        self.min_gain = float(min_gain)
+        self._prefill_tok_s = float(prefill_tok_s)
+        self._bw_measured: Optional[float] = None
+        self.ema = float(ema)
+        self.migrated = 0
+        self.kept_local = 0
+
+    @property
+    def bandwidth(self) -> float:
+        if self._bw_measured is not None:
+            return self._bw_measured
+        if self.static_bandwidth is not None:
+            return self.static_bandwidth
+        if self.communicator is not None:
+            cm = self.communicator.effective_cost_model
+            if callable(cm):        # property on Communicator, fn on fakes
+                cm = cm()
+            return float(cm.bw_gpu)     # B2: the cross-GPU interconnect
+        return 5e9
+
+    @property
+    def prefill_tok_s(self) -> float:
+        return self._prefill_tok_s
+
+    def observe_transfer(self, seconds: float, nbytes: int) -> None:
+        if seconds <= 0.0 or nbytes <= 0:
+            return
+        bw = nbytes / seconds
+        self._bw_measured = bw if self._bw_measured is None else \
+            (1 - self.ema) * self._bw_measured + self.ema * bw
+        if self.communicator is not None:
+            # migration timings are channel-transfer evidence for the
+            # same Table-2 calibration that prices gradient reduces
+            self.communicator.observe_transfer(seconds, nbytes)
+
+    def observe_prefill(self, tokens: int, seconds: float) -> None:
+        if seconds <= 0.0 or tokens <= 0:
+            return
+        rate = tokens / seconds
+        self._prefill_tok_s = \
+            (1 - self.ema) * self._prefill_tok_s + self.ema * rate
+
+    def should_migrate(self, nbytes: float, prompt_tokens: int) -> bool:
+        take = migration_beats_local(
+            nbytes, prompt_tokens, self.bandwidth, self._prefill_tok_s,
+            self.latency_s, self.min_gain)
+        if take:
+            self.migrated += 1
+        else:
+            self.kept_local += 1
+        return take
+
+
+class DisaggFront:
+    """The disaggregated serving front: prefill specialists + a decode
+    :class:`RequestRouter`, joined by a :class:`CacheChannel`, with the
+    :class:`MigrationPlanner` choosing per request.
+
+    Duck-types the router surface the control plane consumes (``submit``
+    / ``step`` / ``drain`` / ``take_epoch`` / ``apply_decision`` /
+    ``busy`` / ``completions``), so ``AsyncRunner`` and the
+    ``FleetSupervisor`` drive aggregated and disaggregated fleets through
+    one code path."""
+
+    def __init__(self, router: RequestRouter,
+                 prefill_engines: List[PrefillEngine], *,
+                 channel: Optional[CacheChannel] = None,
+                 planner: Optional[MigrationPlanner] = None,
+                 prefill_factory: Optional[
+                     Callable[[int], PrefillEngine]] = None):
+        if not prefill_engines and prefill_factory is None:
+            raise ValueError("need prefill engines or a prefill_factory")
+        self.router = router
+        self.prefill_engines = list(prefill_engines)
+        self._prefill_factory = prefill_factory
+        self._spawned = len(self.prefill_engines)
+        if not self.prefill_engines:
+            self.prefill_engines = [prefill_factory(0)]
+            self._spawned = 1
+        self.channel = channel or CacheChannel()
+        self.planner = planner or MigrationPlanner()
+        # per-slot payload wire size, measured off the first migration;
+        # estimated from the decode engines' cache footprint until then
+        self._payload_bytes: Optional[float] = None
+        self._epoch_migrations = 0
+        self.failed_prefill_engines = 0
+
+    # ------------------------------------------------------------ routing --
+    @property
+    def engines(self) -> List[ServeEngine]:
+        return self.router.engines
+
+    @property
+    def completions(self) -> List[Completion]:
+        return self.router.completions
+
+    @property
+    def busy(self) -> bool:
+        return (any(e.busy for e in self.prefill_engines)
+                or self.channel.in_flight > 0 or self.router.busy)
+
+    @property
+    def payload_bytes(self) -> float:
+        if self._payload_bytes is not None:
+            return self._payload_bytes
+        eng = self.router.engines[0]
+        return eng.cache_bytes / max(eng.max_slots, 1)
+
+    def submit(self, req: Request) -> int:
+        """Route one request: the planner prices shipping its finished
+        cache against stalling a decode batch on local prefill."""
+        if self.prefill_engines and self.planner.should_migrate(
+                self.payload_bytes, len(req.tokens)):
+            eng = min(self.prefill_engines, key=lambda e: e.load)
+            return eng.submit(req)
+        return self.router.submit(req)
+
+    # ------------------------------------------------------------ stepping --
+    def step(self) -> List[Completion]:
+        """One front tick: each prefill GMI prefills one prompt into the
+        channel, the channel delivers finished payloads to the
+        least-loaded decode GMIs, and every busy decode engine takes one
+        batched decode step."""
+        for eng in self.prefill_engines:
+            if not eng.busy:
+                continue
+            payload = eng.step()
+            if payload is not None:
+                self._payload_bytes = float(
+                    self.channel.send(payload, payload.cache, source=eng))
+        for payload, cache in self.channel.deliver():
+            payload.cache = cache      # the reassembled, bit-exact tree
+            dst = min(self.router.engines, key=lambda e: e.load)
+            dst.submit_prefilled(payload)
+            self._epoch_migrations += 1
+        for sec, nbytes in self.channel.take_transfer_samples():
+            self.planner.observe_transfer(sec, nbytes)
+        return self.router.step()
+
+    def drain(self) -> List[Completion]:
+        done: List[Completion] = []
+        while self.busy:
+            done.extend(self.step())
+        return done
+
+    def serve(self, requests: List[Request]) -> List[Completion]:
+        for r in requests:
+            self.submit(r)
+        return self.drain()
+
+    # ----------------------------------------------------------- telemetry --
+    def take_epoch(self) -> ServingLoad:
+        """Router-level load with the disagg extensions: decode-side
+        measured prefill throughput feeds the planner, prefill-side work
+        folds into ``prefill_s``, and ``prefill_backlog``/``migrations``
+        carry the signals the controller's prefill arbitration reads."""
+        load = self.router.take_epoch()
+        pf_s = 0.0
+        for eng in self.prefill_engines:
+            s, _, ptoks = eng.take_epoch()
+            pf_s += s
+            if s > 0.0 and ptoks > 0:
+                # measured prompt-tokens/s off the specialists — the same
+                # compiled prefill the decode engines run, so this IS the
+                # planner's local-stall rate
+                self.planner.observe_prefill(ptoks, s)
+        backlog = sum(e.load for e in self.prefill_engines) \
+            + self.channel.in_flight
+        migrations, self._epoch_migrations = self._epoch_migrations, 0
+        return ServingLoad(
+            dt=max(load.dt, pf_s), tokens=load.tokens,
+            requests=load.requests,
+            queue_depth_mean=load.queue_depth_mean,
+            queue_depth_max=load.queue_depth_max,
+            occupancy_mean=load.occupancy_mean, backlog=load.backlog,
+            p50_s=load.p50_s, p95_s=load.p95_s, slots=load.slots,
+            prefill_s=load.prefill_s + pf_s, decode_s=load.decode_s,
+            mem_bytes=load.mem_bytes,
+            prefill_backlog=backlog, migrations=migrations)
+
+    # ------------------------------------------------------- control plane --
+    def apply_decision(self, decision, *, controller=None,
+                       engines_per_gpu: Optional[int] = None) -> bool:
+        """The front's thin apply hook: resize the prefill-specialist set
+        from ``Decision.prefill_gpus`` (same ``engines_per_gpu``
+        granularity as the decode side), then delegate the decode-side
+        split/slots to :meth:`RequestRouter.apply_decision` — which owns
+        the staleness and single-application guards."""
+        if decision is None or not decision.layout_changed:
+            return False
+        if engines_per_gpu is None:
+            engines_per_gpu = max(int(getattr(controller,
+                                              "gmi_per_gpu", 1)), 1)
+        changed = self.router.apply_decision(
+            decision, controller=controller,
+            engines_per_gpu=engines_per_gpu)
+        want = getattr(decision, "prefill_gpus", None)
+        # the router's guards decide acceptance: a stale or already-
+        # applied decision must not move the prefill set either
+        accepted = controller is None \
+            or decision is self.router._last_applied
+        if want is not None and accepted:
+            # a front always keeps >= 1 specialist: prefill_gpus == 0
+            # means the controller wants pure local prefill, which the
+            # planner implements per-request; one engine stays warm
+            n = max(int(want) * engines_per_gpu, 1)
+            changed = self._scale_prefill(n) or changed
+            if controller is not None and want > 0:
+                # reconcile a front that could not follow (no factory)
+                achieved = max(len(self.prefill_engines)
+                               // engines_per_gpu, 1)
+                if achieved != controller.prefill_gpus:
+                    controller.prefill_gpus = achieved
+        return changed
+
+    def maybe_replan(self, controller, *,
+                     engines_per_gpu: Optional[int] = None) -> bool:
+        """Standalone observe-then-apply (no runner); the runner-driven
+        path calls ``observe_serving`` + :meth:`apply_decision` itself."""
+        decision = controller.observe_serving(self.take_epoch())
+        return self.apply_decision(decision, controller=controller,
+                                   engines_per_gpu=engines_per_gpu)
+
+    def _scale_prefill(self, n: int) -> bool:
+        n = max(int(n), 1)
+        before = len(self.prefill_engines)
+        while len(self.prefill_engines) < n:
+            if self._prefill_factory is None:
+                break
+            self.prefill_engines.append(
+                self._prefill_factory(self._spawned))
+            self._spawned += 1
+        while len(self.prefill_engines) > n:
+            retiree = self.prefill_engines.pop()
+            for req in retiree.take_queue():
+                self._requeue(req)
+        return len(self.prefill_engines) != before
+
+    # ---------------------------------------------------------------- fault --
+    def _requeue(self, req: Request) -> None:
+        """Re-route a request whose prefill never finished: a surviving
+        specialist re-prefills it, or it falls back to the decode side's
+        local-prefill path.  Latency clocks ride ``req._submit_t``."""
+        if self.prefill_engines:
+            eng = min(self.prefill_engines, key=lambda e: e.load)
+            eng.submit(req, submit_t=getattr(req, "_submit_t", None))
+        else:
+            self.router._resubmit(req)
+
+    def fail_prefill_engine(self, engine: PrefillEngine) -> int:
+        """Remove a DEAD prefill specialist losslessly: its queued
+        prompts re-route (:meth:`_requeue`) and its in-flight cache
+        transfers — payloads staged in the channel whose device buffers
+        died with the source — are re-prefilled from the original
+        request.  Zero requests lost, extending PR 6's invariant to the
+        prefill role.  Returns the number of re-routed requests."""
+        if engine not in self.prefill_engines:
+            return 0
+        self.prefill_engines.remove(engine)
+        self.failed_prefill_engines += 1
+        queued = engine.take_queue()
+        lost = self.channel.fail_source(engine)
+        if not self.prefill_engines and self._prefill_factory is not None:
+            self.prefill_engines.append(self._prefill_factory(self._spawned))
+            self._spawned += 1
+        for req in queued:
+            self._requeue(req)
+        for payload in lost:
+            req = payload.req
+            req._submit_t = payload.submit_t
+            self._requeue(req)
+        return len(queued) + len(lost)

@@ -8,11 +8,18 @@ and zamba-style hybrid stacks all work because every stacked cache leaf
 carries its batch dimension at axis 1, so one jitted *insert* splices a
 single request's prefilled cache into its slot.
 
-Request lifecycle::
+Request lifecycle (disaggregated; see ``repro.serve.disagg``)::
 
-    submit -> queue -> [admit: B=1 prefill -> cache splice -> first token]
-           -> decode slot (one batched decode_step per engine step)
-           -> retire (budget exhausted / eos) -> slot freed for the queue
+    submit -> planner: migrate or local?
+      local   -> queue -> [admit: B=1 prefill -> cache splice -> first token]
+      migrate -> prefill GMI (B=1 prefill) -> CachePayload -> channel ring
+              -> submit_prefilled -> [admit: cache splice only]
+    -> decode slot (one batched decode_step per engine step)
+    -> retire (budget exhausted / eos) -> slot freed for the queue
+
+The two admission paths converge on the same jitted splice, so a decode
+batch fed by a migrated cache is token-identical to one that prefilled
+locally — and both to :meth:`ServeEngine.oracle_generate`.
 
 Design points:
 
@@ -149,6 +156,10 @@ class ServeEngine:
         self.params = params
 
         self._queue: Deque[Request] = deque()
+        # prefilled-elsewhere payloads awaiting a slot (cache splice only,
+        # no local prefill compute) — admitted ahead of the raw queue
+        # because their prefill cost is already sunk on another GMI
+        self._prefilled: Deque[Any] = deque()
         self._slots: List[Optional[_Slot]] = [None] * self.max_slots
         dt = jnp.dtype(cfg.dtype)
         caches = T.init_cache(cfg, self.max_slots, self.max_seq,
@@ -202,7 +213,7 @@ class ServeEngine:
 
     @property
     def queue_len(self) -> int:
-        return len(self._queue)
+        return len(self._queue) + len(self._prefilled)
 
     @property
     def load(self) -> int:
@@ -230,6 +241,30 @@ class ServeEngine:
         self._queue.append(req)
         return req.rid
 
+    def submit_prefilled(self, payload) -> int:
+        """Queue a prefilled-elsewhere cache payload (duck-typed: ``req``,
+        ``cache``, ``first_id``, ``prompt_tokens``, ``submit_t``) for
+        splice-only admission — the decode half of prefill/decode
+        disaggregation.  The cache must come from the same model family
+        (cfg/params/max_seq/window) for the splice to be well-formed."""
+        req = payload.req
+        total = payload.prompt_tokens + req.max_new_tokens
+        if total > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt+budget {total} exceeds engine "
+                f"max_seq {self.max_seq}")
+        self.telemetry.on_submit(req.rid,
+                                 t=getattr(payload, "submit_t", None))
+        self._prefilled.append(payload)
+        return req.rid
+
+    def take_prefilled(self) -> List[Any]:
+        """Remove and return the not-yet-spliced prefilled payloads (they
+        are engine-independent — a survivor can splice them as-is)."""
+        out = list(self._prefilled)
+        self._prefilled.clear()
+        return out
+
     def _extra_tokens(self, req: Request) -> int:
         if self.cfg.frontend == "vision" and req.extras \
                 and "patches" in req.extras:
@@ -238,6 +273,31 @@ class ServeEngine:
 
     def _admit(self) -> List[Completion]:
         done: List[Completion] = []
+        # migrated payloads first: their prefill is already sunk on a
+        # prefill GMI, so admission is the jitted splice alone — the same
+        # `_insert` the local path uses, which is what makes migrated and
+        # local admissions token-identical downstream
+        while self._prefilled and self.free_slots > 0:
+            pl = self._prefilled.popleft()
+            req = pl.req
+            t0 = time.perf_counter()
+            slot = self._slots.index(None)
+            self._caches = self._insert(self._caches, self._put(pl.cache),
+                                        np.int32(slot))
+            splice_s = time.perf_counter() - t0
+            self.telemetry.on_admit(req.rid, pl.prompt_tokens, splice_s)
+            st = _Slot(req=req, pos=pl.prompt_tokens,
+                       remaining=req.max_new_tokens - 1,
+                       generated=[pl.first_id],
+                       submit_t=self.telemetry.submit_time(req.rid, t0))
+            if st.remaining == 0 or pl.first_id == req.eos_id:
+                done.append(self._finish(st))
+                continue
+            self._slots[slot] = st
+            self._tok[slot] = pl.first_id
+            self._pos[slot] = st.pos
+            self._seed[slot] = req.seed
+            self._temp[slot] = req.temperature
         while self._queue and self.free_slots > 0:
             req = self._queue.popleft()
             t0 = time.perf_counter()

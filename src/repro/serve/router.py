@@ -5,9 +5,16 @@ Each serving GMI runs its own :class:`~repro.serve.engine.ServeEngine`
 (on a ``GMIManager.submesh`` — the MIG-style isolation boundary — when a
 mesh is attached); the :class:`RequestRouter` is the admission/queueing
 layer in front: requests route to the least-loaded engine by queue depth,
-per-GMI p50/p95 latency and tok/s accumulate in each engine's telemetry,
-and epoch snapshots feed the online controller so Algorithm 2 can scale
-the serving side under traffic (:meth:`RequestRouter.maybe_replan`).
+and per-GMI p50/p95 latency and tok/s accumulate in each engine's
+telemetry.  The control plane is single-arbiter: epoch snapshots
+(``take_epoch``) feed the ONE ``OnlineGMIController`` instance — normally
+driven from the overlapped ``AsyncRunner`` round loop — and its decisions
+come back through :meth:`RequestRouter.apply_decision`, a thin apply hook
+guarded against stale (pre-re-plan) and double-applied decisions.
+:meth:`RequestRouter.maybe_replan` is the standalone observe-then-apply
+wrapper for serving-only deployments without a runner.  The
+disaggregated front (:mod:`repro.serve.disagg`) wraps this router for
+the decode side and adds prefill specialists under the same arbiter.
 
 :class:`ServingRole` is the concrete ``DRLRole`` for serving (paper
 Listing 1): ``gmi_run(requests)`` executes the engine's request loop
@@ -67,6 +74,10 @@ class RequestRouter:
         # per-rid restart counts for requests whose engine died mid-decode
         self._retries: Dict[int, int] = {}
         self.failed_engines = 0
+        # double-replan guard: the last decision object applied (a
+        # decision applies at most once) — see apply_decision
+        self._last_applied = None
+        self.stale_decisions = 0
 
     # -------------------------------------------------------------- routing --
     @property
@@ -193,6 +204,8 @@ class RequestRouter:
         self.failed_engines += 1
         queued = engine.take_queue()
         inflight = engine.take_inflight()
+        prefilled = engine.take_prefilled() \
+            if hasattr(engine, "take_prefilled") else []
         stamps = {r.rid: engine.telemetry.submit_time(r.rid, None)
                   for r in queued + inflight}
         self._retired_loads.append(
@@ -200,6 +213,10 @@ class RequestRouter:
         if not self.engines:
             raise RuntimeError(
                 "last serving engine died; no survivors to fail over to")
+        # not-yet-spliced migrated payloads are engine-independent: a
+        # survivor splices them as-is, generation progress intact
+        for pl in prefilled:
+            min(self.engines, key=lambda e: e.load).submit_prefilled(pl)
         done: List[Completion] = []
         inflight_rids = {r.rid for r in inflight}
         for req in queued + inflight:
@@ -267,23 +284,45 @@ class RequestRouter:
         return True
 
     # ------------------------------------------------------------ controller --
-    def maybe_replan(self, controller, *,
-                     engines_per_gpu: Optional[int] = None) -> bool:
-        """Fold one telemetry epoch into the controller's serving loop; if
-        Algorithm 2 answers with a serving-split or slot-ladder decision,
-        apply it by scaling the worker set
-        (``serving_gpus * engines_per_gpu`` engines) and/or rebuilding the
-        engines at the decided slot width.  ``engines_per_gpu`` defaults
-        to the controller's ``gmi_per_gpu`` so the engine count matches
-        the instance count the controller divides telemetry by — a
-        mismatch would mis-key its measured slot table.  Returns True
-        when the worker set changed."""
+    def apply_decision(self, decision, *, controller=None,
+                       engines_per_gpu: Optional[int] = None) -> bool:
+        """Apply an already-made controller serving decision: scale the
+        worker set to ``serving_gpus * engines_per_gpu`` engines and/or
+        rebuild them at the decided slot width.  This is the router's
+        ONLY mutation hook on the control plane — the decision itself is
+        Algorithm 2's, made wherever the single controller instance runs
+        (normally the overlapped ``AsyncRunner`` round loop).
+
+        Two guards close the double-replan hazard:
+
+        * **staleness** — a decision captured before an ``AsyncRunner``
+          re-plan drained carries the pre-drain ``seq``; the re-plan
+          bumps ``controller.plan_seq``, so such a decision is refused
+          (and the controller's committed split reconciled to the real
+          fleet) instead of applying a split computed against a layout
+          that no longer exists;
+        * **single application** — a decision object applies at most
+          once, so the runner-driven path and a direct
+          :meth:`maybe_replan` caller can never both act on one epoch.
+
+        Returns True when the worker set changed."""
+        if decision is None or not decision.layout_changed:
+            return False
         if engines_per_gpu is None:
             engines_per_gpu = max(int(getattr(controller,
                                               "gmi_per_gpu", 1)), 1)
-        decision = controller.observe_serving(self.take_epoch())
-        if decision is None or not decision.layout_changed:
-            return False
+        achieved = max(self.num_engines // engines_per_gpu, 1)
+        if controller is not None:
+            seq = getattr(decision, "seq", None)
+            plan_seq = getattr(controller, "plan_seq", None)
+            if None not in (seq, plan_seq) and seq != plan_seq:
+                self.stale_decisions += 1
+                if achieved != controller.serving_gpus:
+                    controller.serving_gpus = achieved
+                return False
+            if decision is self._last_applied:
+                return False
+            self._last_applied = decision
         changed = False
         if decision.slots:
             changed = self.resize_slots(decision.slots) or changed
@@ -293,10 +332,25 @@ class RequestRouter:
         # engine list) must not let the controller's committed split
         # drift from the real fleet — its telemetry divisor would shrink
         # per-instance throughput a little more every unapplied epoch
-        achieved = max(self.num_engines // engines_per_gpu, 1)
-        if achieved != controller.serving_gpus:
-            controller.serving_gpus = achieved
+        if controller is not None:
+            achieved = max(self.num_engines // engines_per_gpu, 1)
+            if achieved != controller.serving_gpus:
+                controller.serving_gpus = achieved
         return changed or self.num_engines != before
+
+    def maybe_replan(self, controller, *,
+                     engines_per_gpu: Optional[int] = None) -> bool:
+        """Fold one telemetry epoch into the controller's serving loop and
+        apply whatever Algorithm 2 answers — a thin
+        observe-then-:meth:`apply_decision` wrapper kept for standalone
+        serving (no runner).  ``engines_per_gpu`` defaults to the
+        controller's ``gmi_per_gpu`` so the engine count matches the
+        instance count the controller divides telemetry by — a mismatch
+        would mis-key its measured slot table.  Returns True when the
+        worker set changed."""
+        decision = controller.observe_serving(self.take_epoch())
+        return self.apply_decision(decision, controller=controller,
+                                   engines_per_gpu=engines_per_gpu)
 
 
 class ServingRole(DRLRole):

@@ -39,6 +39,11 @@ class ServingLoad:
     prefill_s: float = 0.0      # wall seconds spent in prefill
     decode_s: float = 0.0       # wall seconds spent in decode steps
     mem_bytes: float = 0.0      # cache bytes held (memory-pressure proxy)
+    # disaggregated-serving extensions (trailing defaults: ServingLoad is
+    # constructed positionally in several places)
+    prefill_backlog: int = 0    # requests waiting on a prefill GMI at
+                                # epoch end (the prefill-pressure signal)
+    migrations: int = 0         # cache payloads migrated prefill->decode
 
     @property
     def tok_s(self) -> float:
@@ -80,7 +85,9 @@ def merge_loads(loads: List[ServingLoad],
         slots=live_slots if live_slots is not None else tot_slots,
         prefill_s=sum(l.prefill_s for l in loads),
         decode_s=sum(l.decode_s for l in loads),
-        mem_bytes=sum(l.mem_bytes for l in loads))
+        mem_bytes=sum(l.mem_bytes for l in loads),
+        prefill_backlog=sum(l.prefill_backlog for l in loads),
+        migrations=sum(l.migrations for l in loads))
 
 
 class ServingTelemetry:

@@ -1,6 +1,6 @@
 """The unified repro.comm subsystem: Algorithm-1 / cost-model strategy
 selection, the Communicator object, single-switch average semantics, the
-core.lgr deprecation shim, and the controller's reduction-strategy
+core.lgr removal guard, and the controller's reduction-strategy
 re-plan loop.  (Numerical schedule parity on real multi-device grids
 lives in tests/_multidev_checks.py — this file runs on one device.)"""
 import importlib
@@ -271,23 +271,15 @@ def test_make_grad_sync_rejects_bad_inputs():
 
 
 # -------------------------------------------------------------- lgr shim ---
-def test_core_lgr_shim_deprecation_and_reexports():
+def test_core_lgr_shim_removed():
+    # the PR 3 deprecation shim is gone for good: importing it must fail
+    # outright rather than silently resurrecting the old surface
     sys.modules.pop("repro.core.lgr", None)
-    with pytest.warns(DeprecationWarning, match="repro.comm"):
-        import repro.core.lgr as lgr
-        importlib.reload(lgr)
-    from repro.comm import schedules
-    assert lgr.mpr_host is schedules.mpr_host
-    assert lgr.flat_psum is schedules.flat_psum
-    # the shim keeps the OLD calling conventions: lgr_allreduce accepts
-    # the legacy axis-name kwargs, and make_grad_sync keeps the raw-sum
-    # contract (callers of the deprecated surface divided by g*t
-    # themselves)
-    import inspect
-    sig = inspect.signature(lgr.lgr_allreduce)
-    assert "intra_axis" in sig.parameters and "inter_axis" in sig.parameters
-    gs = [{"w": jnp.ones((3,))}]
-    np.testing.assert_allclose(lgr.mpr_host(gs)["w"], np.ones(3))
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.core.lgr")
+    import repro.core
+    with pytest.raises(AttributeError):
+        repro.core.lgr  # no lazy __getattr__ hook left either
 
 
 # ------------------------------------------------- bandwidth calibration ---

@@ -1,0 +1,326 @@
+"""Disaggregated prefill/decode serving (ROADMAP item 2).
+
+The acceptance properties pinned here:
+
+* cache payloads pack/unpack BIT-exactly through the per-dtype channel
+  buffers, for every cache family (KV, SSM state, hybrid);
+* a request migrated prefill GMI -> CacheChannel -> decode GMI produces
+  EXACTLY the tokens the aggregated oracle path produces — including
+  when the Table-2 cost model (not a forced override) chose migration;
+* the MigrationPlanner's crossover follows the cost model: short prompts
+  stay local, long prompts migrate, measurements sharpen the estimate;
+* ONE controller instance arbitrates decode GMIs AND prefill GMIs:
+  ``Decision.prefill_gpus`` grows under sustained prefill backlog and
+  shrinks when the specialists idle, and the front's ``apply_decision``
+  resizes the prefill set from it;
+* the double-replan hazard is closed: a decision captured before an
+  ``AsyncRunner`` re-plan (stale ``seq``) is refused with the
+  controller's committed split reconciled, and any decision object
+  applies AT MOST once per epoch regardless of how many paths see it.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import (ControllerConfig, Decision,
+                                   OnlineGMIController)
+from repro.core.cost_model import (local_prefill_time, migration_beats_local,
+                                   migration_gain, migration_time)
+from repro.kernels.channel_pack import (cache_payload_bytes,
+                                        pack_cache_payload,
+                                        unpack_cache_payload)
+from repro.models import transformer as T
+from repro.serve import (DisaggFront, MigrationPlanner, PrefillEngine,
+                         Request, RequestRouter, ServeEngine)
+from repro.serve.telemetry import ServingLoad
+
+V = 64
+CASES = {
+    "attention": ModelConfig(name="d", num_layers=2, d_model=64, num_heads=4,
+                             num_kv_heads=2, d_ff=128, vocab_size=V),
+    "ssm": ModelConfig(name="x", d_model=64, num_heads=4, num_kv_heads=4,
+                       d_ff=0, vocab_size=V,
+                       block_pattern=("mlstm",) * 3 + ("slstm",),
+                       num_super=2),
+    "hybrid": ModelConfig(name="z", d_model=64, num_heads=4, num_kv_heads=4,
+                          d_ff=128, vocab_size=V, ssm_state_dim=16,
+                          block_pattern=("mamba2",) * 2 + ("attn_shared",),
+                          num_super=2),
+}
+
+_PARAMS = {}
+
+
+def params_of(case: str):
+    if case not in _PARAMS:
+        _PARAMS[case] = T.init_model(jax.random.key(3), CASES[case])
+    return _PARAMS[case]
+
+
+def make_front(case="attention", *, decode=2, prefill=1, planner=None,
+               max_slots=2, max_seq=40) -> DisaggFront:
+    cfg, params = CASES[case], params_of(case)
+
+    def efac(i, slots=max_slots):
+        return ServeEngine(cfg, params, max_slots=slots, max_seq=max_seq,
+                           name=f"d{i}")
+
+    def pfac(i):
+        return PrefillEngine(cfg, params, max_seq=max_seq, name=f"p{i}")
+
+    router = RequestRouter(engine_factory=efac, num_engines=decode)
+    return DisaggFront(router, [pfac(i) for i in range(prefill)],
+                       planner=planner or MigrationPlanner(),
+                       prefill_factory=pfac)
+
+
+def force_migrate() -> MigrationPlanner:
+    # infinite-bandwidth channel against a glacial local prefill: every
+    # prompt migrates, deterministically
+    return MigrationPlanner(bandwidth=1e15, latency_s=0.0,
+                            prefill_tok_s=1e-6)
+
+
+def reqs_mixed(n=4, seed=11, budgets=(5, 8, 3, 6), **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=rng.integers(0, V, int(rng.integers(3, 10))),
+                    max_new_tokens=budgets[i % len(budgets)], **kw)
+            for i in range(n)]
+
+
+def load(*, backlog=0, occ=0.5, pf_backlog=0, migrations=0,
+         slots=4) -> ServingLoad:
+    return ServingLoad(dt=1.0, tokens=100, requests=5,
+                       queue_depth_mean=float(backlog),
+                       queue_depth_max=backlog, occupancy_mean=occ,
+                       backlog=backlog, p50_s=0.05, p95_s=0.1, slots=slots,
+                       prefill_backlog=pf_backlog, migrations=migrations)
+
+
+# ------------------------------------------------------------ cache pack --
+def test_cache_payload_pack_roundtrip_bit_exact():
+    tree = {"kv": jnp.linspace(-3.0, 7.0, 24,
+                               dtype=jnp.float32).reshape(2, 3, 4),
+            "pos": jnp.arange(6, dtype=jnp.int32).reshape(1, 6),
+            "state": jnp.asarray(np.random.default_rng(0)
+                                 .normal(size=(4, 5))).astype(jnp.bfloat16)}
+    bufs, meta = pack_cache_payload(tree)
+    # coarse-grained: one contiguous buffer per dtype, not per leaf
+    assert len(bufs) == 3 and all(b.ndim == 1 for b in bufs)
+    assert cache_payload_bytes(bufs) > 0
+    out = unpack_cache_payload(bufs, meta)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------ cost model --
+def test_migration_cost_terms_and_crossover():
+    # Table-2 units: transfer latency+bytes/bw vs prompt/prefill-rate
+    assert migration_time(1e6, 1e9, latency_s=1e-3) \
+        == pytest.approx(1e-3 + 1e-3)
+    assert local_prefill_time(100, 1e3) == pytest.approx(0.1)
+    # gain is monotone in prompt length at fixed payload size
+    g = [migration_gain(1e6, t, 1e9, 1e3) for t in (1, 10, 100)]
+    assert g[0] < g[1] < g[2]
+    # the 1.05x hysteresis: a marginal win does not migrate
+    assert not migration_beats_local(1e6, 1, 1e9, 1e3)
+    assert migration_beats_local(1e6, 100, 1e9, 1e3)
+
+
+def test_planner_crossover_short_local_long_migrates():
+    pl = MigrationPlanner(bandwidth=1e9, latency_s=0.0, prefill_tok_s=1e3)
+    # 1 MB payload -> 1 ms transfer; local stall = tokens ms
+    assert not pl.should_migrate(1e6, 1)       # 1 ms local: no gain
+    assert pl.should_migrate(1e6, 100)         # 100 ms local: migrate
+    assert pl.migrated == 1 and pl.kept_local == 1
+    # measured transfers sharpen the bandwidth estimate (EMA seed)
+    pl.observe_transfer(1.0, int(2e9))
+    assert pl.bandwidth == pytest.approx(2e9)
+
+
+# --------------------------------------------------------- token identity --
+@pytest.mark.parametrize("case", list(CASES))
+def test_migrated_decode_token_identical_to_oracle(case):
+    """The acceptance property: prefill on a specialist GMI, cache packed
+    over the channel, spliced into a decode GMI mid-batch — EXACTLY the
+    oracle's tokens, for KV, SSM, and hybrid cache families."""
+    front = make_front(case, planner=force_migrate())
+    reqs = reqs_mixed(4, seed=11, budgets=(5, 8, 3, 6))
+    reqs.append(Request(tokens=np.arange(6), max_new_tokens=6,
+                        temperature=0.8, seed=42))     # sampled request
+    oracle = {r.rid: front.router.engines[0].oracle_generate(r)
+              for r in reqs}
+    for r in reqs:
+        front.submit(r)
+    # everything migrated: the decode router saw no raw submissions
+    assert front.router.queue_len == 0
+    assert sum(e.load for e in front.prefill_engines) == len(reqs)
+    done = front.drain()
+    assert len(done) == len(reqs)
+    assert front.planner.migrated == len(reqs)
+    for c in done:
+        assert c.status == "ok"
+        assert c.tokens == oracle[c.rid], \
+            f"{case}: migrated decode diverged from the oracle"
+    ep = front.take_epoch()
+    assert ep.migrations == len(reqs) and ep.prefill_s > 0.0
+
+
+def test_cost_model_chosen_migration_token_identical():
+    """Mixed traffic under a REAL planner decision (no force): the
+    crossover splits short-local from long-migrate, and both paths stay
+    token-identical to the oracle."""
+    front = make_front("attention", decode=2, prefill=1)
+    # place the crossover mid-range: migration costs tau seconds, so
+    # prompts longer than ~min_gain * tau * prefill_tok_s migrate
+    tau = 6.0 / (1.05 * 1e3)
+    front.planner.static_bandwidth = front.payload_bytes / tau
+    front.planner.latency_s = 0.0
+    front.planner._prefill_tok_s = 1e3
+    rng = np.random.default_rng(7)
+    reqs = [Request(tokens=rng.integers(0, V, n), max_new_tokens=4)
+            for n in (3, 4, 8, 9, 3, 9)]
+    oracle = {r.rid: front.router.engines[0].oracle_generate(r)
+              for r in reqs}
+    done = front.serve(reqs)
+    assert front.planner.migrated == 3 and front.planner.kept_local == 3
+    assert len(done) == len(reqs)
+    for c in done:
+        assert c.tokens == oracle[c.rid]
+
+
+def test_prefill_death_without_survivors_falls_back_to_local():
+    """No factory, no surviving specialist: the dead GMI's requests fall
+    back to the decode side's local-prefill path and still complete."""
+    cfg, params = CASES["attention"], params_of("attention")
+    router = RequestRouter([ServeEngine(cfg, params, max_slots=2,
+                                        max_seq=40, name=f"d{i}")
+                            for i in range(2)])
+    pf = PrefillEngine(cfg, params, max_seq=40)
+    front = DisaggFront(router, [pf], planner=force_migrate())
+    reqs = reqs_mixed(3, seed=21, budgets=(4, 5, 3))
+    oracle = {r.rid: router.engines[0].oracle_generate(r) for r in reqs}
+    for r in reqs:
+        front.submit(r)
+    assert front.fail_prefill_engine(pf) == len(reqs)
+    assert not front.prefill_engines
+    done = front.drain()
+    assert {c.rid for c in done} == {r.rid for r in reqs}
+    for c in done:
+        assert c.status == "ok" and c.tokens == oracle[c.rid]
+
+
+# ---------------------------------------------------- controller arbitration --
+def test_controller_prefill_arbitration_grows_and_shrinks():
+    ctl = OnlineGMIController(num_gpu=6, serving_gpus=4, gmi_per_gpu=1,
+                              num_env=8, cfg=ControllerConfig(epoch_rounds=1))
+    ctl.prefill_gpus = 1
+    d = ctl.observe_serving(load(pf_backlog=3, migrations=2))
+    assert d is not None and d.prefill_gpus == 2 and d.layout_changed
+    assert ctl.prefill_gpus == 2 and "prefill backlog" in d.reason
+    # an epoch with zero prefill work anywhere gives the GMI back
+    d2 = ctl.observe_serving(load())
+    assert d2 is not None and d2.prefill_gpus == 1
+    assert ctl.prefill_gpus == 1 and "prefill idle" in d2.reason
+
+
+def test_aggregated_telemetry_never_triggers_prefill_arbitration():
+    ctl = OnlineGMIController(num_gpu=6, serving_gpus=4, gmi_per_gpu=1,
+                              num_env=8, cfg=ControllerConfig(epoch_rounds=1))
+    assert ctl.observe_serving(load()) is None
+    assert ctl.prefill_gpus == 0
+
+
+def test_front_apply_decision_scales_prefill_set():
+    front = make_front("attention", prefill=1)
+    ctl = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=1,
+                              num_env=8)
+    ctl.prefill_gpus = 2
+    d = Decision(num_env=8, gmi_per_gpu=1, serving_gpus=2,
+                 projected_throughput=0.0, reason="grow prefill",
+                 prefill_gpus=2, seq=0)
+    assert front.apply_decision(d, controller=ctl) is True
+    assert len(front.prefill_engines) == 2
+    # prefill_gpus == 0 means pure local prefill; one engine stays warm
+    d0 = Decision(num_env=8, gmi_per_gpu=1, serving_gpus=2,
+                  projected_throughput=0.0, reason="shrink prefill",
+                  prefill_gpus=0, seq=0)
+    front.apply_decision(d0, controller=ctl)
+    assert len(front.prefill_engines) == 1
+
+
+# --------------------------------------------------- double-replan hazard --
+def test_stale_decision_refused_and_split_reconciled():
+    """Regression: a serving decision captured BEFORE an AsyncRunner
+    re-plan drained must not apply afterwards — the re-plan bumps
+    ``plan_seq``, the apply hook refuses the stale seq and reconciles the
+    controller's committed split back to the real fleet."""
+    ctl = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=1,
+                              num_env=8, cfg=ControllerConfig(epoch_rounds=1))
+    front = make_front("attention", decode=2)
+    d = ctl.observe_serving(load(backlog=3, occ=1.0))
+    assert d is not None and d.serving_gpus == 3 and d.seq == 0
+    assert ctl.serving_gpus == 3                 # committed at emission
+    ctl.plan_seq += 1                            # a re-plan intervened
+    assert front.apply_decision(d, controller=ctl) is False
+    assert front.router.stale_decisions == 1
+    assert front.router.num_engines == 2         # nothing moved
+    assert ctl.serving_gpus == 2                 # reconciled to achieved
+
+
+def test_decision_applies_at_most_once_per_epoch():
+    """Regression: the runner-driven apply path and a direct
+    ``maybe_replan`` caller can never BOTH act on one epoch's decision —
+    the second application of the same object is a no-op."""
+    ctl = OnlineGMIController(num_gpu=4, serving_gpus=2, gmi_per_gpu=1,
+                              num_env=8, cfg=ControllerConfig(epoch_rounds=1))
+    router = RequestRouter(
+        engine_factory=lambda i, slots=2: ServeEngine(
+            CASES["attention"], params_of("attention"), max_slots=slots,
+            max_seq=40, name=f"e{i}"),
+        num_engines=2)
+    d = ctl.observe_serving(load(backlog=3, occ=1.0))
+    assert d is not None and d.layout_changed
+    assert router.apply_decision(d, controller=ctl) is True
+    assert router.num_engines == 3
+    assert router.apply_decision(d, controller=ctl) is False
+    assert router.num_engines == 3 and router.stale_decisions == 0
+
+
+# -------------------------------------------------- single-arbiter runner --
+def test_one_controller_arbitrates_rollout_and_serving():
+    """The control-plane collapse: ONE OnlineGMIController instance,
+    living in the AsyncRunner round loop, folds rollout telemetry AND the
+    serving front's epochs; ``replan`` bumps the staleness fence."""
+    from repro.core.placement import plan_async
+    from repro.envs import make_env
+    from repro.launch.steps import make_async_runner
+    layout = plan_async(3, 2, 2, devices=list(range(6)), devices_per_gpu=2)
+    front = make_front("attention", decode=2, prefill=1,
+                       planner=force_migrate())
+    runner = make_async_runner(
+        make_env("Ant"), layout, online_controller=True, router=front,
+        num_envs=4, num_steps=2,
+        controller_cfg=ControllerConfig(epoch_rounds=2, probe=False))
+    ctl = runner.controller
+    assert runner.router is front and ctl is not None
+    for i in range(2):
+        for r in reqs_mixed(2, seed=30 + i, budgets=(3, 4)):
+            front.submit(r)
+        front.drain()
+        runner.round()
+    runner.finish()
+    # the SAME instance measured both halves
+    assert ctl._table and ctl._serving_table
+    key = next(iter(ctl._serving_table))
+    assert key[0] == ctl.gmi_per_gpu
+    # replan bumps the staleness fence the serving guard keys on
+    seq0 = ctl.plan_seq
+    runner.replan(Decision(num_env=4, gmi_per_gpu=2, serving_gpus=2,
+                           projected_throughput=0.0, reason="fence test"))
+    assert ctl.plan_seq == seq0 + 1

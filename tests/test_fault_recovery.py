@@ -210,6 +210,63 @@ def test_engine_fail_retry_cap_reports_failed():
     assert done[0].rid == req.rid and not router.busy
 
 
+def test_prefill_gmi_kill_mid_migration_loses_zero_requests():
+    """A prefill-specialist GMI dies WITH a cache payload still in flight
+    on the migration channel: the supervisor classifies it as
+    ``prefill_fail`` (not decode-engine death), the dead source's staged
+    transfer is evicted, and every request — queued, in flight, or
+    already migrated — completes token-identically on the survivors."""
+    from repro.configs.base import ModelConfig
+    from repro.models import transformer as T
+    from repro.serve import (DisaggFront, MigrationPlanner, PrefillEngine,
+                             Request, RequestRouter, ServeEngine)
+    cfg = ModelConfig(name="pf", num_layers=2, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64)
+    params = T.init_model(jax.random.key(0), cfg)
+
+    def efac(i, slots=2):
+        return ServeEngine(cfg, params, max_slots=slots, max_seq=32,
+                           name=f"d{i}")
+
+    def pfac(i):
+        return PrefillEngine(cfg, params, max_seq=32, name=f"p{i}")
+
+    router = RequestRouter(engine_factory=efac, num_engines=2)
+    front = DisaggFront(
+        router, [pfac(0), pfac(1)],
+        planner=MigrationPlanner(bandwidth=1e15, latency_s=0.0,
+                                 prefill_tok_s=1e-6),   # force migration
+        prefill_factory=pfac)
+    plan = FaultPlan([FaultEvent("prefill_fail", round=1, target=0)])
+    layout = plan_async(3, 2, 2, devices=list(range(6)), devices_per_gpu=2)
+    sup = make_fleet_supervisor(ENV, layout, plan=plan, router=front,
+                                num_envs=4, num_steps=2)
+    rng = np.random.default_rng(5)
+    reqs = [Request(tokens=rng.integers(0, 64, 6), max_new_tokens=5)
+            for _ in range(8)]
+    oracle = {q.rid: router.engines[0].oracle_generate(q) for q in reqs}
+    for q in reqs:
+        front.submit(q)
+    # stage a payload mid-migration from the doomed specialist: prefilled
+    # and sent, but not yet delivered when the kill fires
+    doomed = front.prefill_engines[0]
+    payload = doomed.step()
+    front.channel.send(payload, payload.cache, source=doomed)
+    assert front.channel.in_flight == 1
+    sup.plan.advance(1)
+    done = sup.drain_serving()
+    # zero lost requests, all token-identical — including the one whose
+    # in-flight transfer died with its source
+    assert {c.rid for c in done} == {q.rid for q in reqs}
+    for c in done:
+        assert c.status == "ok" and c.tokens == oracle[c.rid]
+    assert front.failed_prefill_engines == 1
+    assert len(front.prefill_engines) == 1
+    assert front.channel.in_flight == 0
+    assert [f["kind"] for f in sup.failures] == ["prefill_fail"]
+    assert any(r["kind"] == "prefill_fail" for r in sup.recoveries)
+
+
 # ----------------------------------------------------- crash and resume --
 def test_torn_checkpoint_skipped_previous_restores_bit_identical(tmp_path):
     d = str(tmp_path)
