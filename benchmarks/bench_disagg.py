@@ -109,3 +109,67 @@ def run(arch: str = "internlm2-1.8b", slots: int = 4, n_requests: int = 12,
          f"tok_s={loc.tok_s:.0f}_migrations=0")
     emit(f"disagg_migrate_over_local_{arch}", 0.0,
          f"ratio={us_loc / max(us_mig, 1e-9):.2f}x")
+
+
+def run_paged(arch: str = "internlm2-1.8b", prompt_len: int = 16,
+              gen: int = 8):
+    """Paged-wire rows: what page-granular migration costs and saves.
+
+    * ``disagg_page_migrate``   — measured per-page transfer cost (the
+      unit the planner's ``request_bytes`` pricing scales with).
+    * ``disagg_page_crossover`` — partial-migration crossover in prompt
+      tokens from ``cost_model.migration_crossover_tokens`` under the
+      measured per-page bytes, bandwidth, and prefill rate.
+    * ``disagg_prefix_saved``   — shared-prefix dedup over the wire:
+      bytes NOT shipped because the decode engine's prefix index already
+      held the prompt-head pages (asserted > 0 for a common-head trace).
+    """
+    from repro.configs import get_reduced
+    from repro.core.cost_model import (migration_crossover_tokens,
+                                       migration_time)
+    from repro.launch.steps import make_disagg_front
+    from repro.models import transformer as T
+    from repro.serve import Request
+
+    cfg = get_reduced(arch)
+    params = T.init_model(jax.random.key(0), cfg)
+    front = make_disagg_front(cfg, params, decode_engines=1,
+                              prefill_gmis=1, max_slots=4,
+                              max_seq=prompt_len + gen + 40)
+    front.planner.static_bandwidth = 1e15        # force migration
+    front.planner._prefill_tok_s = 1e-6
+    rng = np.random.default_rng(0)
+    eng = front.router.engines[0]
+    P = eng.page_size
+
+    # a common 2-page prompt head across the trace
+    head = rng.integers(0, cfg.vocab_size, 2 * P)
+
+    def request():
+        tail = rng.integers(0, cfg.vocab_size, prompt_len)
+        return Request(tokens=np.concatenate([head, tail]),
+                       max_new_tokens=gen)
+
+    front.serve([request()])                     # compile + promote head
+    for _ in range(3):                           # sequential: index is warm
+        front.serve([request()])
+    pl = front.planner
+
+    page_bytes = front._page_bytes or 0.0
+    assert page_bytes > 0, "no paged payload crossed the channel"
+    bw = max(pl.bandwidth, 1e-9)
+    per_page_us = migration_time(page_bytes, bw, pl.latency_s) * 1e6
+    emit(f"disagg_page_migrate_{arch}", per_page_us,
+         f"page_bytes={page_bytes:.0f}_page_tokens={P}")
+
+    crossover = migration_crossover_tokens(
+        P, page_bytes, bw, max(pl.prefill_tok_s, 1e-9), pl.latency_s,
+        pl.min_gain)
+    emit(f"disagg_page_crossover_{arch}", 0.0,
+         f"prompt_tokens={crossover}")
+
+    saved_bytes = front.prefix_pages_saved * page_bytes
+    assert front.prefix_pages_saved > 0, \
+        "common-head trace shipped every page — prefix dedup inactive"
+    emit(f"disagg_prefix_saved_{arch}", 0.0,
+         f"pages={front.prefix_pages_saved}_MB={saved_bytes/1e6:.3f}")

@@ -86,9 +86,15 @@ def _check_regressions(path: str, rows, strict: bool = False) -> tuple:
                         f"({r['us_per_call'] / old:.2f}x > "
                         f"{REGRESSION_FACTOR}x)")
     missing = sorted(n for n in base if n not in fresh)
-    if strict:
+    # BENCH_PAGED_BASELINE=1: one-run escape hatch for the paged-serving
+    # row reshuffle (serving_paged_*/serving_stall_*/disagg_page_* rows
+    # replacing or joining older names) — strict missing-row failures
+    # downgrade to warnings so the re-baseline run can rewrite the JSON
+    if strict and not os.environ.get("BENCH_PAGED_BASELINE"):
         regs.extend(f"{n}: baseline row missing from this run (deleted "
-                    f"or renamed bench?)" for n in missing)
+                    f"or renamed bench? an intentional paged-serving row "
+                    f"rename re-baselines with BENCH_PAGED_BASELINE=1)"
+                    for n in missing)
     return regs, missing
 
 
@@ -129,12 +135,23 @@ def main() -> None:
         bench_lgr.run()
         bench_calibration.run()
 
+    def disagg_suite():
+        # migrated-vs-local rows + the paged-wire rows (per-page migrate
+        # cost, partial-migration crossover, shared-prefix bytes saved);
+        # one BENCH_disagg.json under the same gate
+        bench_disagg.run()
+        bench_disagg.run_paged()
+
     def serving_suite():
         # Fig 7(a) TCG/TDG rows + the repro.serve continuous-batching
         # engine rows (tok/s, p50/p95 under an open-loop arrival trace);
         # both land in BENCH_serving.json under the regression gate
         bench_serving.run()
         bench_serving.run_engine()
+        # paged-cache rows: paged tok/s + p50/p95, admitted concurrency
+        # at a fixed cache budget (asserted > dense), decode-stall with
+        # vs without chunked prefill (asserted smaller)
+        bench_serving.run_paged()
 
     print("name,us_per_call,derived")
     suites = [
@@ -149,7 +166,7 @@ def main() -> None:
         ("reward", bench_reward.run),
         ("kernels", bench_kernels.run),
         ("faults", bench_faults.run),
-        ("disagg", bench_disagg.run),
+        ("disagg", disagg_suite),
         ("roofline", roofline.run),
     ]
     flags = {"--quick", "--strict"}

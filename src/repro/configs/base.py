@@ -41,6 +41,11 @@ class ModelConfig:
     experts_per_token: int = 0
     router_aux_coef: float = 0.01
     moe_capacity_factor: float = 1.25
+    # Routing-block size R (0 = whole sequence): capacity competition is
+    # confined to R-token blocks at absolute positions, making routing
+    # independent of batch composition AND of prefill chunking whenever
+    # chunk boundaries land on multiples of R.
+    moe_route_block: int = 0
 
     # SSM / hybrid ---------------------------------------------------------
     # block pattern within one "super-block"; the stack is

@@ -194,3 +194,54 @@ def migration_beats_local(nbytes: float, prompt_tokens: int,
                           min_gain: float = 1.05) -> bool:
     return migration_gain(nbytes, prompt_tokens, bandwidth,
                           prefill_tok_s, latency_s) >= min_gain
+
+
+# ------------------------------------------- paged cache migration pricing ---
+# With paged decode caches the migration unit is the fixed-size page, not
+# the monolithic per-slot cache: a payload ships only the pages its prompt
+# actually filled (minus any pages the destination already holds in its
+# shared-prefix index), so the wire cost scales with ceil(prompt/page)
+# instead of with max_seq.  These helpers keep the per-request
+# migrate-vs-local decision in the same Table-2 units as above.
+
+def pages_for_tokens(tokens: int, page_size: int) -> int:
+    """Physical pages covering ``tokens`` cache entries."""
+    return -(-max(int(tokens), 0) // max(int(page_size), 1))
+
+
+def paged_migration_bytes(prompt_tokens: int, page_size: int,
+                          page_bytes: float, shared_head_pages: int = 0)\
+        -> float:
+    """Wire bytes for a page-wise cache payload: the prompt's pages minus
+    the leading ``shared_head_pages`` already resident on the decode GMI
+    (shared-prefix dedup — those pages migrate once per decode GMI, not
+    once per request)."""
+    pages = pages_for_tokens(prompt_tokens, page_size)
+    return max(pages - max(int(shared_head_pages), 0), 0) * float(page_bytes)
+
+
+def paged_migration_time(prompt_tokens: int, page_size: int,
+                         page_bytes: float, bandwidth: float,
+                         latency_s: float = 0.0,
+                         shared_head_pages: int = 0) -> float:
+    """Seconds to ship a page-wise payload (fixed hop latency + pages on
+    the wire)."""
+    return migration_time(
+        paged_migration_bytes(prompt_tokens, page_size, page_bytes,
+                              shared_head_pages), bandwidth, latency_s)
+
+
+def migration_crossover_tokens(page_size: int, page_bytes: float,
+                               bandwidth: float, prefill_tok_s: float,
+                               latency_s: float = 0.0,
+                               min_gain: float = 1.05,
+                               max_tokens: int = 1 << 20) -> int:
+    """Smallest prompt length whose page-wise migration beats local
+    prefill (the bench_disagg crossover row).  Returns ``max_tokens`` when
+    migration never wins below that bound (e.g. bandwidth too low)."""
+    for n in range(1, int(max_tokens) + 1):
+        t_mig = paged_migration_time(n, page_size, page_bytes, bandwidth,
+                                     latency_s)
+        if local_prefill_time(n, prefill_tok_s) >= min_gain * t_mig:
+            return n
+    return int(max_tokens)

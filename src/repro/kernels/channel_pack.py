@@ -276,3 +276,46 @@ def unpack_cache_payload(bufs, meta):
 def cache_payload_bytes(bufs) -> int:
     """Wire size of a packed payload (sum over per-dtype buffers)."""
     return int(sum(b.size * b.dtype.itemsize for b in bufs))
+
+
+# ----------------------------------------------- page-wise payload pruning ---
+@functools.lru_cache(maxsize=None)
+def _page_slicer(lo: int, hi: int):
+    def run(*leaves):
+        return tuple(jax.lax.slice_in_dim(l, lo, hi, axis=2) for l in leaves)
+    return jax.jit(run)
+
+
+def truncate_cache_pages(tree, used_tokens: int, page_size: int,
+                         head_skip: int = 0):
+    """Prune a B=1 prefill-cache payload to whole pages before migration.
+
+    Full-depth attention leaves (duck-typed: nodes with a ``slot_pos``
+    field whose sequence depth covers every written position) are sliced
+    along the sequence axis to ``[head_skip*page_size,
+    ceil(used_tokens/page_size)*page_size)`` — dropping the max_seq tail a
+    monolithic payload would ship, plus the leading ``head_skip`` pages
+    the destination already holds in its shared-prefix index.  The decode
+    engine's paged splice scatters entries by their recorded ``slot_pos``,
+    so pruning is position-safe by construction.  Ring-buffer (sliding
+    window) leaves shorter than ``used_tokens`` and recurrent-state leaves
+    ship whole — they are already fixed-size.
+    """
+    P = max(int(page_size), 1)
+    hi = -(-max(int(used_tokens), 0) // P) * P
+    lo = min(max(int(head_skip), 0) * P, hi)
+
+    def is_kv(n):
+        return hasattr(n, "slot_pos") and hasattr(n, "k")
+
+    def prune(n):
+        if not is_kv(n):
+            return n
+        S = n.k.shape[2]
+        if S < used_tokens:      # ring buffer: indices are not positions
+            return n
+        h = min(hi, S)
+        k, v, sp = _page_slicer(lo, h)(n.k, n.v, n.slot_pos)
+        return type(n)(k, v, sp)
+
+    return jax.tree.map(prune, tree, is_leaf=is_kv)

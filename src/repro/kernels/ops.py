@@ -17,6 +17,7 @@ from repro.kernels.fused_policy_mlp import fused_policy_mlp as _mlp
 from repro.kernels.gae_scan import gae_scan as _gae
 from repro.kernels.gae_scan import nstep_scan as _nstep
 from repro.kernels.mlstm_scan import mlstm_chunkwise as _mlstm
+from repro.kernels.paged_decode import paged_decode_attention as _paged
 
 
 def _interpret_default() -> bool:
@@ -31,6 +32,19 @@ def attention(q, k, v, *, causal=True, window=None, softcap=None,
     interp = _interpret_default() if interpret is None else interpret
     return _fa(q, k, v, causal=causal, window=window, softcap=softcap,
                block_q=block_q, block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale", "interpret"))
+def paged_attention(q, k_pages, v_pages, slot_pos, table, positions, *,
+                    window=None, softcap=None, scale=None, interpret=None):
+    """Paged gather-decode attention (see paged_decode.py): one decode
+    step per batch row read through a per-row page table.  ``window`` is a
+    dynamic operand (it rides the kernel's scalar prefetch), so per-layer
+    windows from a scanned stack don't retrace."""
+    interp = _interpret_default() if interpret is None else interpret
+    return _paged(q, k_pages, v_pages, slot_pos, table, positions,
+                  window=window, softcap=softcap, scale=scale,
+                  interpret=interp)
 
 
 def policy_mlp(x, weights, biases, *, block_n=256, interpret=None):

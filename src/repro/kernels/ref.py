@@ -31,6 +31,42 @@ def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
     return o.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, slot_pos, table, positions, *,
+                        window=None, softcap=None, scale=None):
+    """Gather-decode oracle for ``paged_decode.paged_decode_attention``.
+
+    q: (B, H, hd) one decode token per row; k/v pages: (N, page, KH, hd);
+    slot_pos: (N, page) absolute positions (-1 empty); table: (B, M)
+    physical page ids (-1 unmapped -> masked); positions: (B,) absolute q
+    position per row.  Gathers each row's pages into position order and
+    runs plain masked softmax attention."""
+    B, H, hd = q.shape
+    N, page, KH, _ = k_pages.shape
+    M = table.shape[1]
+    G = H // KH
+    scale = scale if scale is not None else hd ** -0.5
+    tsafe = jnp.maximum(table, 0)
+    k = k_pages[tsafe].reshape(B, M * page, KH, hd).astype(jnp.float32)
+    v = v_pages[tsafe].reshape(B, M * page, KH, hd).astype(jnp.float32)
+    kpos = jnp.where(jnp.repeat(table >= 0, page, axis=1),
+                     slot_pos[tsafe].reshape(B, M * page), -1)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, KH, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = positions[:, None]
+    valid = (kpos >= 0) & (kpos <= qpos)
+    if window is not None:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # zero invalid v rows: garbage pool values must not leak through the
+    # uniform-softmax degrade of fully-masked rows
+    o = jnp.einsum("bkgs,bskd->bkgd", p,
+                   jnp.where(valid[:, :, None, None], v, 0.0))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
 def policy_mlp_ref(x, weights, biases):
     """x: (N, in); tanh MLP trunk: h = tanh(h @ w + b) per layer."""
     h = x.astype(jnp.float32)

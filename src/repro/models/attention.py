@@ -13,6 +13,14 @@ Caches:
   * full cache  — (B, S, n_kv, hd) k/v with write index = absolute position.
   * ring cache  — (B, W, n_kv, hd) sliding-window ring buffer plus a
     ``slot_pos`` (B, W) absolute-position map, for ``long_500k`` decode.
+  * paged cache — a batch-free pool of fixed-size pages
+    (num_pages, page, n_kv, hd) addressed through a per-request page table
+    (B, M): virtual page v of a request holds absolute positions
+    ``[v*page, (v+1)*page)`` regardless of any sliding window (the window
+    applies purely through ``_mask``), so a gathered table row reproduces
+    the full-depth cache layout exactly.  Page 0 is the trash page: writes
+    from idle rows and unmapped virtual pages land there and stay masked
+    (its ``slot_pos`` is only ever written -1).
 """
 from __future__ import annotations
 
@@ -35,6 +43,15 @@ class KVCache(NamedTuple):
     slot_pos: jax.Array   # (B, S_or_W) absolute position in each slot (-1 empty)
 
 
+class PagedKVCache(NamedTuple):
+    """Paged KV cache: a shared physical pool of fixed-size pages plus the
+    absolute position each page slot holds.  Batch-free — requests address
+    it through a page table (B, M) owned by the serving engine."""
+    k_pages: jax.Array     # (num_pages, page, n_kv, hd)
+    v_pages: jax.Array
+    slot_pos: jax.Array    # (num_pages, page) absolute position (-1 empty)
+
+
 def init_attention_params(key, d_model: int, num_heads: int, num_kv_heads: int,
                           head_dim: int, qkv_bias: bool = False):
     kq, kk, kv, ko = jax.random.split(key, 4)
@@ -54,6 +71,50 @@ def make_cache(batch: int, seq: int, n_kv: int, head_dim: int,
         v=jnp.zeros((batch, size, n_kv, head_dim), dtype),
         slot_pos=jnp.full((batch, size), -1, jnp.int32),
     )
+
+
+def make_paged_cache(num_pages: int, page: int, n_kv: int, head_dim: int,
+                     dtype=jnp.float32) -> PagedKVCache:
+    return PagedKVCache(
+        k_pages=jnp.zeros((num_pages, page, n_kv, head_dim), dtype),
+        v_pages=jnp.zeros((num_pages, page, n_kv, head_dim), dtype),
+        slot_pos=jnp.full((num_pages, page), -1, jnp.int32),
+    )
+
+
+def paged_write(cache: PagedKVCache, page_table, positions, k, v):
+    """Scatter k/v (B, S, KH, hd) at absolute ``positions`` (B, S) into the
+    pool through ``page_table`` (B, M).  Negative positions and unmapped
+    virtual pages route to the trash page 0 with slot_pos -1."""
+    P = cache.k_pages.shape[1]
+    M = page_table.shape[-1]
+    ok = positions >= 0
+    safe = jnp.where(ok, positions, 0)
+    vp = jnp.clip(safe // P, 0, M - 1)
+    off = safe % P
+    phys = jnp.take_along_axis(page_table, vp, axis=1)       # (B, S)
+    ok &= phys >= 0
+    phys = jnp.where(ok, phys, 0)
+    ck = cache.k_pages.at[phys, off].set(k.astype(cache.k_pages.dtype))
+    cv = cache.v_pages.at[phys, off].set(v.astype(cache.v_pages.dtype))
+    cp = cache.slot_pos.at[phys, off].set(jnp.where(ok, positions, -1))
+    return PagedKVCache(ck, cv, cp)
+
+
+def paged_gather(cache: PagedKVCache, page_table):
+    """Gather each row's pages into position order: (B, M*page, KH, hd)
+    k/v plus (B, M*page) kpos (-1 where the virtual page is unmapped).
+    Row j of the gathered view is absolute position j, so it reproduces
+    the dense full-depth cache layout exactly."""
+    P = cache.k_pages.shape[1]
+    B, M = page_table.shape
+    tsafe = jnp.maximum(page_table, 0)
+    KH, hd = cache.k_pages.shape[2], cache.k_pages.shape[3]
+    k = cache.k_pages[tsafe].reshape(B, M * P, KH, hd)
+    v = cache.v_pages[tsafe].reshape(B, M * P, KH, hd)
+    kpos = jnp.where(jnp.repeat(page_table >= 0, P, axis=1),
+                     cache.slot_pos[tsafe].reshape(B, M * P), -1)
+    return k, v, kpos
 
 
 # --------------------------------------------------------------------------
@@ -155,12 +216,22 @@ def attention(params, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
               attn_cap: Optional[float] = None, rope_theta: float = 10_000.0,
               cache: Optional[KVCache] = None,
               chunked_threshold: int = 4096,
-              use_rope: bool = True):
+              use_rope: bool = True,
+              page_table=None, paged_kernel: bool = False):
     """Full attention block.  x: (B, S, D); positions: (B, S) or (S,).
 
     If ``cache`` is given and S == 1 this is a decode step: write k/v into the
     cache at ``positions`` and attend over the cache.  If cache is given with
     S > 1 (prefill) the cache is filled and returned.
+
+    A :class:`PagedKVCache` requires ``page_table`` (B, M) and supports both
+    S == 1 (paged decode: write the step's k/v through the table, attend
+    over the gathered pages) and S > 1 (chunked prefill: write the whole
+    chunk at absolute positions, then attend the chunk's queries over the
+    gathered pages — the just-written in-chunk keys included, with the
+    causal mask handling intra-chunk order).  ``paged_kernel=True`` routes
+    the S == 1 paged read through the Pallas gather-decode kernel
+    (``repro.kernels.paged_decode``) instead of the jnp gather.
     Returns (out, new_cache).
     """
     B, S, D = x.shape
@@ -175,7 +246,20 @@ def attention(params, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
     scale = head_dim ** -0.5
 
     new_cache = cache
-    if cache is not None and S == 1:
+    if isinstance(cache, PagedKVCache):
+        if page_table is None:
+            raise ValueError("paged cache requires a page_table")
+        new_cache = paged_write(cache, page_table, positions, k, v)
+        if S == 1 and paged_kernel:
+            from repro.kernels import ops
+            o = ops.paged_attention(
+                q[:, 0], new_cache.k_pages, new_cache.v_pages,
+                new_cache.slot_pos, page_table, positions[:, 0],
+                window=window, softcap=attn_cap, scale=scale)
+            out = linear(params["wo"], o.reshape(B, 1, num_heads * head_dim))
+            return out, new_cache
+        k_all, v_all, kpos = paged_gather(new_cache, page_table)
+    elif cache is not None and S == 1:
         # decode: write this step's k/v into its ring slot, attend over cache
         W = cache.k.shape[1]
         slots = positions % W                                # (B,1)

@@ -76,17 +76,14 @@ def _route_group(x, logits, top_k: int, capacity: int, num_experts: int):
     return slot.reshape(S, top_k), gate.astype(x.dtype), valid.reshape(S, top_k)
 
 
-def moe_apply(params, x, *, num_experts: int, top_k: int,
-              capacity_factor: float = 1.25, aux_coef: float = 0.01):
-    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar).
-
-    Routing groups = batch rows (B is the sharded data axis).
-    """
+def _dispatch(params, x, logits, num_experts: int, top_k: int,
+              capacity_factor: float):
+    """Capacity-bucketed dispatch over groups = leading dim.  x: (B, S, D),
+    logits: (B, S, E) -> out (B, S, D)."""
     B, S, D = x.shape
     E, k = num_experts, top_k
     dt = x.dtype
     capacity = max(int(S * k / E * capacity_factor), k)
-    logits = x @ params["router"].astype(dt)                  # (B,S,E)
 
     # per-group index math (cheap int ops; vmap only over routing)
     slot, gate, valid = jax.vmap(
@@ -115,9 +112,44 @@ def moe_apply(params, x, *, num_experts: int, top_k: int,
     y = y.reshape(B, S, k, D)
     w = (gate * valid.astype(gate.dtype))[..., None]
     out = jnp.sum(y * w.astype(y.dtype), axis=2)
-    out = _constrain(out, None, None)
+    return _constrain(out, None, None)
 
-    # Switch-style load-balance auxiliary loss.
+
+def moe_apply(params, x, *, num_experts: int, top_k: int,
+              capacity_factor: float = 1.25, aux_coef: float = 0.01,
+              route_block: int = 0):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar).
+
+    Routing groups = batch rows (B is the sharded data axis).  With
+    ``route_block`` R > 0 capacity competition is further confined to
+    R-token blocks within each row (the row end-pads up to a multiple of
+    R; pads sit AFTER real tokens, and token-major slot priority means
+    they can only take leftover capacity).  Because block boundaries are
+    at fixed multiples of R from the row start, routing becomes identical
+    whether a prompt is prefilled whole or in chunks whose starts are
+    multiples of R — and a single decode token (S == 1) always gets its
+    full top-k (one token can't exhaust capacity >= k), so decode routing
+    is batch-composition independent either way.
+    """
+    B, S, D = x.shape
+    E = num_experts
+    dt = x.dtype
+    logits = x @ params["router"].astype(dt)                  # (B,S,E)
+
+    R = route_block
+    if R and R > 0 and S > 1:
+        nb = -(-S // R)
+        pad = nb * R - S
+        xg = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+        lg = jnp.pad(logits, ((0, 0), (0, pad), (0, 0))) if pad else logits
+        out = _dispatch(params, xg.reshape(B * nb, R, D),
+                        lg.reshape(B * nb, R, E), E, top_k, capacity_factor)
+        out = out.reshape(B, nb * R, D)[:, :S]
+    else:
+        out = _dispatch(params, x, logits, E, top_k, capacity_factor)
+
+    # Switch-style load-balance auxiliary loss (always on the original
+    # unpadded logits so route_block leaves training numerics alone).
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     top1 = jnp.argmax(probs, axis=-1)
     frac_tokens = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32),

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import ssm
-from repro.models.attention import KVCache, attention, make_cache
+from repro.models.attention import (KVCache, PagedKVCache, attention,
+                                    make_cache, make_paged_cache)
 from repro.models.layers import (embed, init_embedding, init_linear, init_mlp,
                                  init_rmsnorm, linear, mlp, rms_norm, softcap,
                                  unembed)
@@ -198,6 +199,33 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
             x[None], (cfg.num_layers,) + x.shape).copy(), one)
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                     window_override: Optional[int] = None, dtype=None, *,
+                     page_size: int, num_pages: int):
+    """Paged variant of :func:`init_cache`: every attention node becomes a
+    batch-free :class:`PagedKVCache` pool shared by all decode slots
+    (page 0 = trash), addressed through an engine-owned page table.  Pages
+    hold absolute positions (full depth — sliding windows apply purely via
+    masking), so the per-node ring-vs-full distinction disappears.
+    Recurrent (mLSTM/sLSTM/Mamba2) states are fixed-size per slot and stay
+    batched exactly as in :func:`init_cache`."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+
+    def paged_node(n):
+        one = make_paged_cache(num_pages, page_size, cfg.num_kv_heads, hd, dt)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), one)
+
+    if cfg.block_pattern:
+        caches = init_cache(cfg, batch, max_seq, window_override, dt)
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind in ("attn", "attn_shared"):
+                caches[f"{kind}_{i}"] = paged_node(cfg.num_super)
+        return caches
+    return paged_node(cfg.num_layers)
+
+
 def layer_windows(cfg: ModelConfig, window_override: Optional[int] = None):
     """Static per-layer attention window list (BIG_WINDOW = unlimited)."""
     if cfg.block_pattern:
@@ -222,35 +250,55 @@ def layer_windows(cfg: ModelConfig, window_override: Optional[int] = None):
 # ======================================================================
 # blocks
 # ======================================================================
-def _attn_block(lp, x, cfg: ModelConfig, positions, window, cache):
+def _attn_block(lp, x, cfg: ModelConfig, positions, window, cache,
+                page_table=None, paged_kernel: bool = False):
     h = rms_norm(lp["ln1"], x, cfg.norm_eps)
     a, new_cache = attention(
         lp["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.resolved_head_dim, positions=positions, causal=cfg.causal,
         window=window, attn_cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
-        cache=cache)
+        cache=cache, page_table=page_table, paged_kernel=paged_kernel)
     x = x + a
     h = rms_norm(lp["ln2"], x, cfg.norm_eps)
     if "moe" in lp:
         m, aux = moe_apply(
             lp["moe"], h, num_experts=cfg.num_experts,
             top_k=cfg.experts_per_token, aux_coef=cfg.router_aux_coef,
-            capacity_factor=cfg.moe_capacity_factor)
+            capacity_factor=cfg.moe_capacity_factor,
+            route_block=cfg.moe_route_block)
     else:
         m, aux = mlp(lp["mlp"], h, cfg.act), jnp.float32(0.0)
     return x + m, new_cache, aux
 
 
-def _apply_kind(kind, lp, x, cfg, positions, window, cache):
+def _freeze_idle(old, new, positions):
+    """Pin recurrent state for decode rows at negative positions.
+
+    A paged engine parks idle and still-prefilling slots at position -1;
+    their attention writes fall into the trash page, and this is the
+    recurrent-state counterpart: without it every batched decode step
+    would advance (i.e. corrupt) the state a chunked prefill is building
+    in that row.  Dense engines park idle rows at position 0, which keeps
+    their legacy advance-and-overwrite behavior byte-identical."""
+    keep = positions[:, 0] >= 0
+    return jax.tree.map(
+        lambda o, n: jnp.where(
+            keep.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), old, new)
+
+
+def _apply_kind(kind, lp, x, cfg, positions, window, cache,
+                page_table=None, paged_kernel: bool = False):
     """Dispatch one block; returns (x, new_cache, aux)."""
     S = x.shape[1]
     if kind in ("attn", "attn_shared"):
-        return _attn_block(lp, x, cfg, positions, window, cache)
+        return _attn_block(lp, x, cfg, positions, window, cache,
+                           page_table, paged_kernel)
     if kind == "mlstm":
         if S == 1 and cache is not None:
             y, st = ssm.mlstm_decode_step(lp, x, cache,
                                           num_heads=cfg.num_heads,
                                           expansion=cfg.ssm_expansion)
+            st = _freeze_idle(cache, st, positions)
         else:
             y, st = ssm.mlstm_apply(lp, x, num_heads=cfg.num_heads,
                                     state=cache, chunk=min(256, S),
@@ -258,11 +306,14 @@ def _apply_kind(kind, lp, x, cfg, positions, window, cache):
         return y, st, jnp.float32(0.0)
     if kind == "slstm":
         y, st = ssm.slstm_apply(lp, x, num_heads=cfg.num_heads, state=cache)
+        if S == 1 and cache is not None:
+            st = _freeze_idle(cache, st, positions)
         return y, st, jnp.float32(0.0)
     if kind == "mamba2":
         if S == 1 and cache is not None:
             y, st = ssm.mamba2_decode_step(lp, x, cache,
                                            state_dim=cfg.ssm_state_dim)
+            st = _freeze_idle(cache, st, positions)
         else:
             y, st = ssm.mamba2_apply(lp, x, state_dim=cfg.ssm_state_dim,
                                      state=cache, chunk=min(256, S))
@@ -275,11 +326,17 @@ def _apply_kind(kind, lp, x, cfg, positions, window, cache):
 # ======================================================================
 def apply_stack(params, cfg: ModelConfig, x, positions, caches=None,
                 window_override: Optional[int] = None, remat: bool = False,
-                unroll: bool = False):
-    """Run the whole layer stack.  Returns (x, new_caches, aux_total)."""
+                unroll: bool = False, page_table=None,
+                paged_kernel: bool = False):
+    """Run the whole layer stack.  Returns (x, new_caches, aux_total).
+
+    ``page_table`` (B, M) is closed over by the layer scan (like
+    ``positions``) when the caches are paged — every paged node shares the
+    ONE physical page-id space, so one table addresses them all."""
     if cfg.block_pattern:
         return _apply_patterned(params, cfg, x, positions, caches,
-                                window_override, remat)
+                                window_override, remat, page_table,
+                                paged_kernel)
     if unroll and caches is not None:
         win_list = layer_windows(cfg, window_override)
         aux = jnp.float32(0.0)
@@ -289,7 +346,8 @@ def apply_stack(params, cfg: ModelConfig, x, positions, caches=None,
             for i in range(cfg.num_layers):
                 lp = jax.tree.map(lambda t: t[i], params["layers"])
                 x, nc, a = _attn_block(lp, x, cfg, positions,
-                                       win_list[i], caches[i])
+                                       win_list[i], caches[i],
+                                       page_table, paged_kernel)
                 aux = aux + a
                 new_list.append(nc)
             return x, new_list, aux
@@ -301,7 +359,7 @@ def apply_stack(params, cfg: ModelConfig, x, positions, caches=None,
             lp = jax.tree.map(lambda t: t[i], params["layers"])
             ci = jax.tree.map(lambda t: t[i], new_caches)
             x, nc, a = _attn_block(lp, x, cfg, positions,
-                                   win_list[i], ci)
+                                   win_list[i], ci, page_table, paged_kernel)
             aux = aux + a
             # write the layer's updated cache back in place: chained DUS on
             # the (donated) stacked cache aliases instead of double-buffering
@@ -315,7 +373,8 @@ def apply_stack(params, cfg: ModelConfig, x, positions, caches=None,
         h, aux = carry
         lp, window, cache = xs
         h = _constrain(h)
-        h2, new_cache, a = _attn_block(lp, h, cfg, positions, window, cache)
+        h2, new_cache, a = _attn_block(lp, h, cfg, positions, window, cache,
+                                       page_table, paged_kernel)
         return (h2, aux + a), new_cache
 
     body_fn = jax.checkpoint(body) if remat else body
@@ -326,7 +385,7 @@ def apply_stack(params, cfg: ModelConfig, x, positions, caches=None,
 
 
 def _apply_patterned(params, cfg, x, positions, caches, window_override,
-                     remat):
+                     remat, page_table=None, paged_kernel: bool = False):
     pat = cfg.block_pattern
     w_attn = window_override or cfg.sliding_window or BIG_WINDOW
 
@@ -340,7 +399,8 @@ def _apply_patterned(params, cfg, x, positions, caches, window_override,
             lp = params["shared_attn"] if kind == "attn_shared" \
                 else sup_params[key]
             cache = sup_caches.get(key) if sup_caches else None
-            h, nc, a = _apply_kind(kind, lp, h, cfg, positions, w_attn, cache)
+            h, nc, a = _apply_kind(kind, lp, h, cfg, positions, w_attn, cache,
+                                   page_table, paged_kernel)
             aux = aux + a
             new_caches[key] = nc if nc is not None else jnp.float32(0)
         return (h, aux), new_caches
@@ -469,8 +529,10 @@ def prefill(params, cfg: ModelConfig, batch, max_seq: int,
 
 def decode_step(params, cfg: ModelConfig, token, pos, caches,
                 window_override: Optional[int] = None,
-                unroll: bool = False):
+                unroll: bool = False, page_table=None,
+                paged_kernel: bool = False):
     """One decode step.  token: (B,) int32; pos: (B,) int32 absolute.
+    ``page_table`` (B, M) is required when the caches are paged.
 
     Returns (logits (B,V), new_caches).
     """
@@ -480,6 +542,55 @@ def decode_step(params, cfg: ModelConfig, token, pos, caches,
     positions = pos[:, None]
     h, caches, _ = apply_stack(params, cfg, x, positions, caches=caches,
                                window_override=window_override,
-                               unroll=unroll)
+                               unroll=unroll, page_table=page_table,
+                               paged_kernel=paged_kernel)
     h = rms_norm(params["final_norm"], h, cfg.norm_eps)
+    return _logits(params, cfg, h)[:, 0], caches
+
+
+def _is_cache_node(n):
+    return isinstance(n, (KVCache, PagedKVCache))
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, positions, caches, slot,
+                  page_table, window_override: Optional[int] = None,
+                  paged_kernel: bool = False):
+    """One B=1 prefill chunk for decode slot ``slot`` running directly
+    against the engine's BATCHED cache tree: recurrent-state leaves are
+    sliced out at the slot (batch axis 1) and written back, while paged
+    attention nodes are batch-free and written in place through
+    ``page_table`` (M,) — so chunked prefill never touches other slots'
+    pages and interleaves with batched decode without copying caches.
+
+    tokens/positions: (C,) int32 (absolute positions — chunk k >= 1 of a
+    prompt passes positions starting at its chunk offset).  Returns
+    (last-position logits (1, V), updated caches)."""
+    x = embed(params["embed"], tokens[None]).astype(jnp.dtype(cfg.dtype))
+
+    def view(n):
+        if isinstance(n, PagedKVCache):
+            return n
+        if isinstance(n, KVCache):
+            return jax.tree.map(
+                lambda t: jax.lax.dynamic_slice_in_dim(t, slot, 1, 1), n)
+        return jax.lax.dynamic_slice_in_dim(n, slot, 1, 1)
+
+    view_caches = jax.tree.map(view, caches, is_leaf=_is_cache_node)
+    h, new_view, _ = apply_stack(params, cfg, x, positions[None],
+                                 caches=view_caches,
+                                 window_override=window_override,
+                                 page_table=page_table[None],
+                                 paged_kernel=paged_kernel)
+
+    def back(full, new):
+        if isinstance(full, PagedKVCache):
+            return new
+        if isinstance(full, KVCache):
+            return jax.tree.map(
+                lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                    f, o, slot, 1), full, new)
+        return jax.lax.dynamic_update_slice_in_dim(full, new, slot, 1)
+
+    caches = jax.tree.map(back, caches, new_view, is_leaf=_is_cache_node)
+    h = rms_norm(params["final_norm"], h[:, -1:], cfg.norm_eps)
     return _logits(params, cfg, h)[:, 0], caches

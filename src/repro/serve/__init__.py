@@ -15,6 +15,23 @@ Paper concept → code map
   generation budgets join and leave the decode batch without
   recompilation; greedy output is token-identical to the single-request
   oracle path (:meth:`~repro.serve.engine.ServeEngine.oracle_generate`).
+* §3 memory-sized GMIs, applied to the cache →
+  the engine's **paged cache pool** (default): attention caches live in
+  a batch-free pool of fixed-size pages
+  (``models.attention.PagedKVCache``) with an engine-owned per-slot
+  page table, decoded through the ``kernels/paged_decode.py`` Pallas
+  gather kernel (``decode_kernel=True``) or its jnp gather fallback.
+  Admission reserves ``ceil((prompt+budget)/page)`` pages for the
+  request's lifetime instead of a full ``max_seq`` slot, so a fixed
+  cache-byte budget admits strictly more concurrent requests
+  (``benchmarks/bench_serving.py::run_paged`` asserts it); same-length
+  queued prompts coalesce into ONE batched prefill dispatch, long
+  prompts prefill in fixed chunks interleaved with decode
+  (``chunk_prefill``), and common prompt heads share read-only pages
+  with copy-on-write at divergence (``share_prefix``) — the
+  millions-of-users system-prompt case.  Every path stays
+  token-identical to the oracle across the KV / SSM-window / hybrid /
+  MoE cache families (``tests/test_serve_engine.py``).
 * §3 MIG-style isolation (``GMIManager.submesh``) →
   :class:`~repro.serve.router.ServingRole`: the concrete ``DRLRole``
   (paper Listing 1) whose ``gmi_run`` executes the engine loop inside the

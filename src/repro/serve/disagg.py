@@ -62,6 +62,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.channels import CacheChannel
 from repro.core.cost_model import migration_beats_local
+from repro.kernels.channel_pack import truncate_cache_pages
 from repro.serve.engine import (Completion, Request, ServeEngine,
                                 _pick_tokens)
 from repro.serve.router import RequestRouter
@@ -74,13 +75,22 @@ class CachePayload:
     """A finished prefill, portable between GMIs: the cache pytree (batch
     dim 1 at axis 1 on every stacked leaf — the shape ``ServeEngine``'s
     jitted splice expects), the first generated token, and the request's
-    original latency clock."""
+    original latency clock.
+
+    For a paged decode destination the front prunes the tree to whole
+    pages (``kernels.channel_pack.truncate_cache_pages``) before it hits
+    the wire; ``head_pages`` > 0 additionally records that the leading
+    prompt pages were STRIPPED because the chosen destination already
+    holds them in its shared-prefix index — the payload is then only
+    splice-complete on an engine that still has those pages (any other
+    engine falls back to a full local prefill, losslessly)."""
     req: Request
     cache: Any
     first_id: int
     prompt_tokens: int
     submit_t: float = 0.0
     prefill_s: float = 0.0
+    head_pages: int = 0
 
 
 class PrefillEngine:
@@ -302,7 +312,12 @@ class DisaggFront:
         # per-slot payload wire size, measured off the first migration;
         # estimated from the decode engines' cache footprint until then
         self._payload_bytes: Optional[float] = None
+        # measured wire bytes per page (paged decode engines), for the
+        # planner's per-request page pricing
+        self._page_bytes: Optional[float] = None
         self._epoch_migrations = 0
+        # cumulative pages NOT shipped thanks to shared-prefix dedup
+        self.prefix_pages_saved = 0
         self.failed_prefill_engines = 0
 
     # ------------------------------------------------------------ routing --
@@ -326,31 +341,81 @@ class DisaggFront:
         eng = self.router.engines[0]
         return eng.cache_bytes / max(eng.max_slots, 1)
 
+    def request_bytes(self, prompt_tokens: int) -> float:
+        """Estimated wire bytes for THIS prompt's payload.  Paged decode
+        engines ship ceil(prompt/page) pages, so the estimate scales with
+        the prompt instead of charging every request the full per-slot
+        footprint (which made short prompts look costlier to migrate than
+        they are)."""
+        eng = self.router.engines[0]
+        P = int(getattr(eng, "page_size", 0) or 0)
+        if not getattr(eng, "paged", False) or P <= 0:
+            return self.payload_bytes
+        pages = -(-max(int(prompt_tokens), 1) // P)
+        if self._page_bytes is not None:
+            return self._page_bytes * pages
+        # pro-rate the per-slot estimate by prompt coverage until measured
+        total = max(getattr(eng, "pages_per_slot", 1), 1)
+        return self.payload_bytes * min(pages / total, 1.0)
+
     def submit(self, req: Request) -> int:
         """Route one request: the planner prices shipping its finished
-        cache against stalling a decode batch on local prefill."""
+        cache (page-wise for paged decode engines) against stalling a
+        decode batch on local prefill."""
         if self.prefill_engines and self.planner.should_migrate(
-                self.payload_bytes, len(req.tokens)):
+                self.request_bytes(len(req.tokens)), len(req.tokens)):
             eng = min(self.prefill_engines, key=lambda e: e.load)
             return eng.submit(req)
         return self.router.submit(req)
 
     # ------------------------------------------------------------ stepping --
+    def _stage_payload(self, payload: CachePayload):
+        """Pick the payload's decode destination NOW (least-loaded), prune
+        the cache to whole pages for it, and strip the leading pages its
+        shared-prefix index already holds.  Returns (wire tree, dst)."""
+        dst = min(self.router.engines, key=lambda e: e.load)
+        cache = payload.cache
+        P = int(getattr(dst, "page_size", 0) or 0)
+        if getattr(dst, "paged", False) and P > 0:
+            head = 0
+            if not payload.req.extras \
+                    and hasattr(dst, "shared_head_pages"):
+                head = int(dst.shared_head_pages(payload.req.tokens))
+            cache = truncate_cache_pages(cache, payload.prompt_tokens, P,
+                                         head_skip=head)
+            payload.head_pages = head
+            self.prefix_pages_saved += head
+        payload._dst = dst
+        return cache, dst
+
     def step(self) -> List[Completion]:
         """One front tick: each prefill GMI prefills one prompt into the
-        channel, the channel delivers finished payloads to the
-        least-loaded decode GMIs, and every busy decode engine takes one
-        batched decode step."""
+        channel, the channel delivers finished payloads to their chosen
+        decode GMIs, and every busy decode engine takes one batched
+        decode step."""
         for eng in self.prefill_engines:
             if not eng.busy:
                 continue
             payload = eng.step()
             if payload is not None:
-                self._payload_bytes = float(
-                    self.channel.send(payload, payload.cache, source=eng))
+                cache, dst = self._stage_payload(payload)
+                nbytes = float(self.channel.send(payload, cache, source=eng))
+                self._payload_bytes = nbytes
+                P = int(getattr(dst, "page_size", 0) or 0)
+                if getattr(dst, "paged", False) and P > 0:
+                    shipped = max(
+                        -(-payload.prompt_tokens // P) - payload.head_pages,
+                        1)
+                    self._page_bytes = nbytes / shipped
         for payload, cache in self.channel.deliver():
             payload.cache = cache      # the reassembled, bit-exact tree
-            dst = min(self.router.engines, key=lambda e: e.load)
+            dst = getattr(payload, "_dst", None)
+            if dst is None or dst not in self.router.engines:
+                # chosen engine retired/died mid-flight: any survivor can
+                # take it — a head-stripped payload that lands on an
+                # engine missing the prefix re-queues for a full local
+                # prefill there (ServeEngine.prefix_fallbacks), lossless
+                dst = min(self.router.engines, key=lambda e: e.load)
             dst.submit_prefilled(payload)
             self._epoch_migrations += 1
         for sec, nbytes in self.channel.take_transfer_samples():
@@ -396,7 +461,8 @@ class DisaggFront:
             p50_s=load.p50_s, p95_s=load.p95_s, slots=load.slots,
             prefill_s=load.prefill_s + pf_s, decode_s=load.decode_s,
             mem_bytes=load.mem_bytes,
-            prefill_backlog=backlog, migrations=migrations)
+            prefill_backlog=backlog, migrations=migrations,
+            free_pages=load.free_pages, total_pages=load.total_pages)
 
     # ------------------------------------------------------- control plane --
     def apply_decision(self, decision, *, controller=None,

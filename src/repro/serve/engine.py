@@ -1,53 +1,85 @@
 """Slot-based continuous-batching request engine (paper §3: one serving
 GMI's execution loop).
 
-The engine owns a fixed-slot decode batch over the existing
-``transformer.prefill`` / ``transformer.decode_step`` cache machinery — KV
-caches, sliding-window ring caches, mLSTM/sLSTM/Mamba2 recurrent states,
-and zamba-style hybrid stacks all work because every stacked cache leaf
-carries its batch dimension at axis 1, so one jitted *insert* splices a
-single request's prefilled cache into its slot.
+The engine owns a fixed-slot decode batch.  Two cache regimes:
+
+* **Paged (default).**  Attention caches live in a batch-free shared pool
+  of fixed-size pages (``attention.PagedKVCache``); each decode slot owns
+  a row of an engine-held page table mapping virtual page v (absolute
+  positions ``[v*page_size, (v+1)*page_size)``) to a physical page.  Page
+  0 is the trash page: idle rows and unmapped writes land there and stay
+  masked.  Pages are reserved for a request's whole lifetime (prompt +
+  budget) at admission, so decode never faults; a request that cannot get
+  pages simply stays queued until a retirement frees them.  Recurrent
+  (mLSTM/sLSTM/Mamba2) states are fixed-size per slot and stay batched.
+* **Dense (``paged=False``).**  The pre-paging layout — each slot owns a
+  monolithic ``max_seq``-deep cache row — kept as the memory baseline
+  (``benchmarks/bench_serving.py`` pins paged admitting strictly more
+  concurrent requests at the same cache-byte budget).
+
+On top of pages the engine adds three prefill disciplines:
+
+* **Batched prefill** (``batch_prefill=True``): same-length queued
+  prompts admitted in the same step coalesce into ONE ``B=G`` prefill
+  dispatch, then splice row-by-row into the pool.
+* **Chunked prefill** (``chunk_prefill=C`` > 0): prompts longer than C
+  are prefilled C tokens per engine step via ``transformer.prefill_chunk``
+  (writing pages in place through the slot's table row), interleaved with
+  the decode batch — a long prompt no longer stalls every in-flight
+  decode for its whole prefill.  A length-1 final chunk merges into the
+  previous one (C+1) so SSM states never see a 1-token apply.
+* **Shared-prefix reuse** (``share_prefix=True``; attention-only,
+  non-MoE, text-frontend configs): full prompt-prefix pages are promoted
+  into a chain-hash index at admission; later prompts sharing the prefix
+  map the same read-only physical pages and only prefill their tail.  A
+  divergence *inside* a block is handled with an eager copy-on-write: the
+  new request gets a private copy of the divergence page truncated to the
+  common prefix, so no page ever has two writers.
 
 Request lifecycle (disaggregated; see ``repro.serve.disagg``)::
 
     submit -> planner: migrate or local?
-      local   -> queue -> [admit: B=1 prefill -> cache splice -> first token]
-      migrate -> prefill GMI (B=1 prefill) -> CachePayload -> channel ring
-              -> submit_prefilled -> [admit: cache splice only]
+      local   -> queue -> [admit: reserve pages -> (batched|chunked|tail)
+                           prefill -> first token]
+      migrate -> prefill GMI (B=1 dense prefill) -> CachePayload
+              -> channel ring -> submit_prefilled
+              -> [admit: reserve pages -> page-wise cache splice only]
     -> decode slot (one batched decode_step per engine step)
-    -> retire (budget exhausted / eos) -> slot freed for the queue
+    -> retire (budget exhausted / eos) -> pages + slot freed
 
-The two admission paths converge on the same jitted splice, so a decode
-batch fed by a migrated cache is token-identical to one that prefilled
-locally — and both to :meth:`ServeEngine.oracle_generate`.
+Both admission paths converge on the same page pool and the same paged
+decode, so a decode batch fed by a migrated cache is token-identical to
+one that prefilled locally — and both to
+:meth:`ServeEngine.oracle_generate`, which runs the same paged pipeline
+at B=1 over its own fresh pool.
 
 Design points:
 
-* **No decode recompilation.**  The decode batch has a fixed slot count,
-  so requests of different prompt lengths and generation budgets join and
-  leave without retracing — ``decode_step`` already takes per-row absolute
-  positions, which is all continuous batching needs.  Prefill traces once
-  per distinct prompt length (B=1), never per batch composition.
+* **No decode recompilation.**  The decode batch has a fixed slot count
+  and the page table is a dynamic operand, so requests join and leave —
+  and pages map and unmap — without retracing.  Prefill traces once per
+  distinct (length, group) pair.
 * **Idle slots cost one row of compute.**  They decode token 0 at
-  position 0 against an empty cache (``slot_pos == -1`` masks everything;
-  the softmax degrades to uniform, not NaN) and their garbage is fully
-  overwritten by the next cache splice.
-* **Single-request oracle.**  :meth:`ServeEngine.oracle_generate` runs the
-  same compiled functions at B=1; greedy decoding in the batch is
-  token-identical to it (pinned in ``tests/test_serve_engine.py`` across
-  attention, SSM, and hybrid cache families).  Sampling uses per-request
-  keys (``fold_in(key(seed), position)`` vmapped per row) so it is also
-  batch-composition independent.  The one known exception is MoE configs
-  with a finite ``moe_capacity_factor``: expert capacity is shared across
-  the batch, so a dropped token can depend on who else is in the batch.
+  position -1: the paged write masks negative positions into the trash
+  page and the attention mask kills every key, so the softmax degrades
+  to uniform, not NaN, and nothing real is touched.
+* **Batch-composition independence.**  Greedy decoding is token-identical
+  to the B=1 oracle (pinned in ``tests/test_serve_engine.py`` across
+  attention, SSM, hybrid, and MoE cache families).  Sampling uses
+  per-request keys (``fold_in(key(seed), position)`` vmapped per row).
+  MoE routing is per batch row (``moe_apply`` routes groups = rows), so
+  finite expert capacity cannot couple requests either; with
+  ``cfg.moe_route_block`` set, routing is additionally invariant to
+  R-aligned prefill chunking.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -56,6 +88,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.models.attention import PagedKVCache
 from repro.serve.telemetry import ServingTelemetry
 
 _REQUEST_IDS = itertools.count()
@@ -110,6 +143,106 @@ class _Slot:
     remaining: int               # decode steps left (budget - prefill token)
     generated: List[int]
     submit_t: float
+    pages: List[int] = field(default_factory=list)   # page refs to release
+    # chunked-prefill state machine (prefilling while the batch decodes)
+    prefilling: bool = False
+    chunk_next: int = 0          # next prompt position to prefill
+    prompt_total: int = 0
+    hashes: Optional[list] = None
+    prefill_s: float = 0.0
+    t_admit: float = 0.0
+
+
+class _PagePool:
+    """Host-side bookkeeping for the physical page pool: a free stack and
+    per-page refcounts.  Page 0 (trash) is pinned forever."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = int(num_pages)
+        if self.num_pages < 2:
+            raise ValueError("page pool needs >= 2 pages (trash + 1)")
+        self.free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self.ref = np.zeros((self.num_pages,), np.int64)
+        self.ref[0] = 1
+
+    @property
+    def free_count(self) -> int:
+        return len(self.free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self.free):
+            return None
+        out = [self.free.pop() for _ in range(n)]
+        for p in out:
+            self.ref[p] = 1
+        return out
+
+    def retain(self, pid: int):
+        self.ref[pid] += 1
+
+    def release(self, pid: int) -> bool:
+        self.ref[pid] -= 1
+        assert self.ref[pid] >= 0, f"double free of page {pid}"
+        if self.ref[pid] == 0:
+            self.free.append(pid)
+            return True
+        return False
+
+
+class _PrefixIndex:
+    """Chain-hash index of promoted prompt-prefix pages.
+
+    ``full[h]`` maps the sha1 chain hash of blocks ``0..j`` (all full) to
+    the physical page holding block j.  ``nxt[h]`` maps the chain hash of
+    blocks ``0..j-1`` to SOME page holding a block-j candidate (possibly
+    partial) whose tokens are in ``toks[pid]`` — the copy-on-write source
+    for divergence inside block j.  Every entry holds one pool ref, so
+    indexed pages survive their owner's retirement (that persistence IS
+    the prefix cache); :meth:`ServeEngine._alloc_pages` evicts
+    index-only pages under free-list pressure."""
+
+    def __init__(self, page_size: int):
+        self.P = int(page_size)
+        self.full: Dict[bytes, int] = {}
+        self.nxt: Dict[bytes, int] = {}
+        self.toks: Dict[int, Tuple[int, ...]] = {}
+        self.keys_of: Dict[int, List[Tuple[str, bytes]]] = {}
+
+    def hashes(self, tokens) -> List[Tuple[bytes, bytes, Tuple[int, ...]]]:
+        """Per block j (incl. a trailing partial block):
+        ``(chain_prev, chain_self, block_tokens)``."""
+        P = self.P
+        toks = np.asarray(tokens, np.int32)
+        out = []
+        prev = b""
+        for j in range(-(-len(toks) // P)):
+            blk = tuple(int(t) for t in toks[j * P:(j + 1) * P])
+            h = hashlib.sha1(prev + np.asarray(blk, np.int32).tobytes())
+            out.append((prev, h.digest(), blk))
+            prev = h.digest()
+        return out
+
+    def entry_count(self, pid: int) -> int:
+        return len(self.keys_of.get(pid, ()))
+
+    def pages(self) -> List[int]:
+        return list(self.keys_of)
+
+    def add(self, kind: str, key: bytes, pid: int) -> bool:
+        d = self.full if kind == "full" else self.nxt
+        if key in d:
+            return False
+        d[key] = pid
+        self.keys_of.setdefault(pid, []).append((kind, key))
+        return True
+
+    def drop(self, pid: int) -> int:
+        """Remove every entry pointing at ``pid``; returns how many."""
+        keys = self.keys_of.pop(pid, [])
+        for kind, key in keys:
+            (self.full if kind == "full" else self.nxt).pop(key, None)
+        self.toks.pop(pid, None)
+        return len(keys)
 
 
 class ServeEngine:
@@ -119,9 +252,26 @@ class ServeEngine:
     ----------
     cfg, params : the model (any non-encoder-only architecture).
     max_slots   : decode batch width — the fixed slot count.
-    max_seq     : cache depth; every request needs
+    max_seq     : per-request depth; every request needs
                   ``len(prompt) + max_new_tokens <= max_seq``.
-    window_override : sliding-window serving variant (ring caches).
+    window_override : sliding-window serving variant.
+    paged       : paged cache pool (default) vs dense per-slot caches.
+    page_size   : tokens per page.
+    num_pages   : physical pages incl. the trash page.  Default
+                  ``max_slots * ceil(max_seq/page_size) + 1`` — the
+                  worst-case budget, which makes the controller's existing
+                  slot ladder double as the page-budget ladder.  Smaller
+                  values oversubscribe: admission then blocks on free
+                  pages, not slots.
+    batch_prefill : coalesce same-length queued prompts into one dispatch.
+    chunk_prefill : prefill chunk size (0 = whole-prompt prefill).
+    share_prefix  : reuse common prompt-head pages across requests
+                  (auto-disabled for SSM/hybrid, MoE, and non-text
+                  frontends, where cache content is not a pure function
+                  of the token prefix or pages are not position-pure).
+    decode_kernel : route paged decode reads through the Pallas
+                  gather-decode kernel (``repro.kernels.paged_decode``)
+                  instead of the jnp gather.
     mesh        : optional ``jax.sharding.Mesh`` (a GMI submesh) — params
                   and all per-step inputs are committed to it, so the
                   engine's compiled programs run inside the instance's
@@ -131,7 +281,10 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_seq: int = 128, window_override: Optional[int] = None,
                  mesh=None, telemetry: Optional[ServingTelemetry] = None,
-                 name: str = "engine"):
+                 name: str = "engine", paged: bool = True,
+                 page_size: int = 8, num_pages: Optional[int] = None,
+                 batch_prefill: bool = True, chunk_prefill: int = 0,
+                 share_prefix: bool = True, decode_kernel: bool = False):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name}: encoder-only model has no decode "
                              "step — nothing to serve")
@@ -141,6 +294,21 @@ class ServeEngine:
         self.window_override = window_override
         self.mesh = mesh
         self.name = name
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.batch_prefill = bool(batch_prefill) and self.paged
+        self.chunk_prefill = int(chunk_prefill) if self.paged else 0
+        if self.chunk_prefill > 0 and cfg.num_experts:
+            # finite-capacity MoE routing is chunk-invariant only when
+            # chunk starts land on multiples of the routing block
+            if cfg.moe_route_block <= 0:
+                raise ValueError(
+                    "chunk_prefill with an MoE config requires "
+                    "cfg.moe_route_block > 0 (block-local routing) — "
+                    "otherwise chunked and whole prefill route differently")
+            r = cfg.moe_route_block
+            self.chunk_prefill = -(-self.chunk_prefill // r) * r
+        self.decode_kernel = bool(decode_kernel) and self.paged
         self.telemetry = telemetry or ServingTelemetry(self.max_slots)
         # fault-injection seam (repro.fault): called with this engine at
         # the top of step(); raising InjectedFault there kills the engine
@@ -148,6 +316,8 @@ class ServeEngine:
         self.fault_hook = None
         self.dead = False
         self.timeouts = 0
+        self.prefix_fallbacks = 0    # migrated payloads re-queued because a
+                                     # promised shared head was evicted
         self._sharding = None
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec
@@ -162,40 +332,160 @@ class ServeEngine:
         self._prefilled: Deque[Any] = deque()
         self._slots: List[Optional[_Slot]] = [None] * self.max_slots
         dt = jnp.dtype(cfg.dtype)
-        caches = T.init_cache(cfg, self.max_slots, self.max_seq,
-                              window_override, dt)
+
+        # virtual pages per slot (the page-table width)
+        self.pages_per_slot = -(-self.max_seq // self.page_size)
+        if self.paged:
+            self.num_pages = int(num_pages) if num_pages is not None \
+                else self.max_slots * self.pages_per_slot + 1
+            caches = T.init_paged_cache(cfg, self.max_slots, self.max_seq,
+                                        window_override, dt,
+                                        page_size=self.page_size,
+                                        num_pages=self.num_pages)
+            self._pool = _PagePool(self.num_pages)
+            self._table = np.full((self.max_slots, self.pages_per_slot), -1,
+                                  np.int32)
+            self._table_dev = None           # rebuilt lazily when dirty
+            self._share = bool(share_prefix) and not cfg.block_pattern \
+                and cfg.num_experts == 0 \
+                and cfg.frontend not in ("vision", "audio")
+            self._index = _PrefixIndex(self.page_size)
+        else:
+            self.num_pages = 0
+            caches = T.init_cache(cfg, self.max_slots, self.max_seq,
+                                  window_override, dt)
+            self._pool = None
+            self._share = False
         self._caches = self._put(caches)
         self._cache_bytes = sum(
             x.size * x.dtype.itemsize for x in jax.tree.leaves(caches)
             if hasattr(x, "dtype"))
         # host-side mirrors of the decode-batch inputs; idle rows feed
-        # (token=0, pos=0, temp=0) and are ignored on the way out
+        # (token=0, pos=-1, temp=0) — the negative position routes their
+        # paged write to the trash page — and are ignored on the way out
+        self._idle_pos = -1 if self.paged else 0
         self._tok = np.zeros((self.max_slots,), np.int32)
-        self._pos = np.zeros((self.max_slots,), np.int32)
+        self._pos = np.full((self.max_slots,), self._idle_pos, np.int32)
         self._seed = np.zeros((self.max_slots,), np.int32)
         self._temp = np.zeros((self.max_slots,), np.float32)
 
         self._prefill = jax.jit(
             lambda p, b: T.prefill(p, cfg, b, self.max_seq, window_override))
         # the cache pytree is rebound to the jit output on every call:
-        # donate it so decode and splice update in place instead of
-        # copying the full multi-slot cache per token
+        # donate it so decode, splice, clear, copy, and chunk prefill all
+        # update in place instead of copying the pool per token
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
-        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+        if self.paged:
+            self._insert = jax.jit(self._insert_paged_fn, donate_argnums=(0,))
+            self._clear = jax.jit(self._clear_fn, donate_argnums=(0,))
+            self._reset_row = jax.jit(self._reset_row_fn, donate_argnums=(0,))
+            self._copy_page = jax.jit(self._copy_page_fn, donate_argnums=(0,))
+            self._chunk = jax.jit(
+                lambda p, tk, pos, c, slot, trow: T.prefill_chunk(
+                    p, cfg, tk, pos, c, slot, trow, window_override),
+                donate_argnums=(3,))
+        else:
+            self._insert = jax.jit(self._insert_dense_fn, donate_argnums=(0,))
 
     # ------------------------------------------------------- jitted bodies --
-    def _decode_fn(self, params, caches, tok, pos, seed, temp):
+    def _decode_fn(self, params, caches, tok, pos, seed, temp, table):
         logits, caches = T.decode_step(params, self.cfg, tok, pos, caches,
-                                       self.window_override)
+                                       self.window_override, page_table=table,
+                                       paged_kernel=self.decode_kernel)
         return _pick_tokens(logits, pos, seed, temp), caches
 
     @staticmethod
-    def _insert_fn(full, one, slot):
+    def _insert_dense_fn(full, one, row, slot):
         # every stacked cache leaf is (layers_or_super, batch, ...): splice
-        # the single-request cache (batch dim 1) into its decode slot
+        # one row of the (possibly batched) prefill cache into its slot
         return jax.tree.map(
             lambda f, o: jax.lax.dynamic_update_index_in_dim(
-                f, o[:, 0], slot, 1), full, one)
+                f, jax.lax.dynamic_index_in_dim(o, row, 1, keepdims=False),
+                slot, 1), full, one)
+
+    def _insert_paged_fn(self, full, one, row, slot, table_row):
+        """Splice row ``row`` of a DENSE prefill cache tree into the paged
+        pool through ``table_row`` (M,) — a scatter by each entry's
+        absolute ``slot_pos``, so it is length-agnostic: whole prefills,
+        ring-truncated windows, and page-truncated migration payloads all
+        land at their true positions (invalid/unmapped entries fall into
+        the trash page).  Non-paged (recurrent-state) leaves splice into
+        batch row ``slot`` as in the dense engine."""
+        P = self.page_size
+
+        def splice(f, o):
+            if isinstance(f, PagedKVCache):
+                k = jax.lax.dynamic_index_in_dim(o.k, row, 1, keepdims=False)
+                v = jax.lax.dynamic_index_in_dim(o.v, row, 1, keepdims=False)
+                sp = jax.lax.dynamic_index_in_dim(o.slot_pos, row, 1,
+                                                  keepdims=False)   # (L, S)
+                ok = sp >= 0
+                safe = jnp.where(ok, sp, 0)
+                vp = jnp.clip(safe // P, 0, table_row.shape[0] - 1)
+                phys = table_row[vp]
+                ok &= phys >= 0
+                phys = jnp.where(ok, phys, 0)
+                off = safe % P
+                lidx = jnp.arange(sp.shape[0])[:, None]
+                return PagedKVCache(
+                    f.k_pages.at[lidx, phys, off].set(
+                        k.astype(f.k_pages.dtype)),
+                    f.v_pages.at[lidx, phys, off].set(
+                        v.astype(f.v_pages.dtype)),
+                    f.slot_pos.at[lidx, phys, off].set(
+                        jnp.where(ok, sp, -1)))
+            return jax.lax.dynamic_update_index_in_dim(
+                f, jax.lax.dynamic_index_in_dim(o, row, 1, keepdims=False),
+                slot, 1)
+
+        return jax.tree.map(splice, full, one,
+                            is_leaf=lambda n: isinstance(n, PagedKVCache))
+
+    @staticmethod
+    def _reset_row_fn(full, slot):
+        """Zero one batch row of every NON-paged (recurrent-state) leaf.
+        Whole-prefill admissions overwrite the row by splice, but chunked
+        prefill CONTINUES from the slot's current recurrent state — which,
+        on a reused slot, is the previous occupant's final state.  Every
+        recurrent init state is all-zeros, so zeroing the row restores a
+        fresh one."""
+        def z(f):
+            if isinstance(f, PagedKVCache):
+                return f
+            return f.at[:, slot].set(jnp.zeros((), f.dtype))
+        return jax.tree.map(z, full,
+                            is_leaf=lambda n: isinstance(n, PagedKVCache))
+
+    @staticmethod
+    def _clear_fn(full, pids):
+        """Invalidate the given physical pages (``slot_pos = -1``) in every
+        paged node.  ``pids`` is fixed-width, padded with 0 — re-clearing
+        the trash page is a no-op, so one trace serves every request."""
+        def clear(f):
+            if isinstance(f, PagedKVCache):
+                return f._replace(slot_pos=f.slot_pos.at[:, pids].set(-1))
+            return f
+        return jax.tree.map(clear, full,
+                            is_leaf=lambda n: isinstance(n, PagedKVCache))
+
+    @staticmethod
+    def _copy_page_fn(full, src, dst, keep_below):
+        """Copy-on-write: duplicate physical page ``src`` into ``dst`` in
+        every paged node, keeping only entries with absolute position
+        ``< keep_below`` valid (the shared prefix inside the divergence
+        block; the source's tail — including any decode positions its
+        owner wrote since promotion — is dropped)."""
+        def cp(f):
+            if isinstance(f, PagedKVCache):
+                sp = f.slot_pos[:, src]
+                sp = jnp.where((sp >= 0) & (sp < keep_below), sp, -1)
+                return PagedKVCache(
+                    f.k_pages.at[:, dst].set(f.k_pages[:, src]),
+                    f.v_pages.at[:, dst].set(f.v_pages[:, src]),
+                    f.slot_pos.at[:, dst].set(sp))
+            return f
+        return jax.tree.map(cp, full,
+                            is_leaf=lambda n: isinstance(n, PagedKVCache))
 
     def _put(self, tree):
         if self._sharding is None:
@@ -228,25 +518,51 @@ class ServeEngine:
     def cache_bytes(self) -> int:
         return self._cache_bytes
 
+    @property
+    def free_pages(self) -> int:
+        return self._pool.free_count if self.paged else 0
+
+    @property
+    def total_pages(self) -> int:
+        """Usable (non-trash) physical pages."""
+        return self.num_pages - 1 if self.paged else 0
+
+    def _pages_needed(self, prompt_total: int, max_new: int) -> int:
+        # cache writes span positions [0, prompt_total + max_new - 1): the
+        # final generated token is emitted but never written back
+        return -(-(prompt_total + max_new - 1) // self.page_size)
+
     # ----------------------------------------------------------- lifecycle --
     def submit(self, req: Request) -> int:
         """Queue a request; returns its id.  Admission happens at the next
-        :meth:`step` when a slot frees up."""
+        :meth:`step` when a slot (and, paged, enough pages) frees up."""
         total = len(req.tokens) + self._extra_tokens(req) + req.max_new_tokens
         if total > self.max_seq:
             raise ValueError(
                 f"request {req.rid}: prompt+budget {total} exceeds engine "
                 f"max_seq {self.max_seq}")
+        if self.paged:
+            need = self._pages_needed(
+                len(req.tokens) + self._extra_tokens(req), req.max_new_tokens)
+            if need > self.total_pages:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} pages, engine pool has "
+                    f"{self.total_pages} — can never be admitted")
         self.telemetry.on_submit(req.rid)
         self._queue.append(req)
         return req.rid
 
     def submit_prefilled(self, payload) -> int:
         """Queue a prefilled-elsewhere cache payload (duck-typed: ``req``,
-        ``cache``, ``first_id``, ``prompt_tokens``, ``submit_t``) for
-        splice-only admission — the decode half of prefill/decode
-        disaggregation.  The cache must come from the same model family
-        (cfg/params/max_seq/window) for the splice to be well-formed."""
+        ``cache``, ``first_id``, ``prompt_tokens``, ``submit_t``, optional
+        ``head_pages``) for splice-only admission — the decode half of
+        prefill/decode disaggregation.  The cache must come from the same
+        model family (cfg/params/max_seq/window) for the splice to be
+        well-formed.  ``head_pages`` > 0 promises the first ``head_pages``
+        full prompt blocks are in this engine's shared-prefix index (the
+        sender stripped them from the payload); if the promise no longer
+        holds at admission the request re-queues for a full local prefill
+        instead — lossless, just slower."""
         req = payload.req
         total = payload.prompt_tokens + req.max_new_tokens
         if total > self.max_seq:
@@ -271,7 +587,348 @@ class ServeEngine:
             return int(req.extras["patches"].shape[0])
         return 0
 
-    def _admit(self) -> List[Completion]:
+    # --------------------------------------------------------- page plumbing --
+    def shared_head_pages(self, tokens) -> int:
+        """How many leading FULL prompt blocks of ``tokens`` are currently
+        in this engine's shared-prefix index (a migration sender may strip
+        exactly that many pages from its payload)."""
+        if not self._share:
+            return 0
+        n = 0
+        for _, h_self, blk in self._index.hashes(tokens):
+            if len(blk) < self.page_size or h_self not in self._index.full:
+                break
+            n += 1
+        return n
+
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """Allocate from the free list, evicting index-only shared pages
+        (no live slot references them) under pressure."""
+        if n <= self._pool.free_count:
+            return self._pool.alloc(n)
+        for pid in self._index.pages() if self._share else []:
+            if self._pool.ref[pid] == self._index.entry_count(pid):
+                for _ in range(self._index.drop(pid)):
+                    self._pool.release(pid)
+                if self._pool.free_count >= n:
+                    break
+        return self._pool.alloc(n)
+
+    def _table_row_dev(self, slot: int):
+        return jnp.asarray(self._table[slot])
+
+    def _table_device(self):
+        if self._table_dev is None:
+            self._table_dev = self._put(jnp.asarray(self._table))
+        return self._table_dev
+
+    def _set_table_row(self, slot: int, row: List[int]):
+        self._table[slot, :] = -1
+        self._table[slot, :len(row)] = row
+        self._table_dev = None
+
+    def _release_slot_pages(self, st: _Slot):
+        for pid in st.pages:
+            self._pool.release(pid)
+        st.pages = []
+
+    def _plan_pages(self, req: Request):
+        """Reserve the request's lifetime pages, resolving shared-prefix
+        reuse and performing the (at most one) copy-on-write.  Returns
+        ``(row, p0, hashes)`` — the slot's page-table row, the first
+        prompt position that still needs local prefill, and the chain
+        hashes for post-prefill promotion — or None if the pool cannot
+        cover it right now."""
+        P = self.page_size
+        extra = self._extra_tokens(req)
+        Lp = len(req.tokens) + extra
+        need = self._pages_needed(Lp, req.max_new_tokens)
+        shared_pids: List[int] = []
+        cand = None
+        lcp = 0
+        hashes = None
+        if self._share and not req.extras:
+            hashes = self._index.hashes(req.tokens)
+            for h_prev, h_self, blk in hashes:
+                pid = self._index.full.get(h_self)
+                if pid is None or len(blk) < P:
+                    break
+                shared_pids.append(pid)
+            s = len(shared_pids)
+            if s < len(hashes):
+                h_prev, _, blk = hashes[s]
+                c = self._index.nxt.get(h_prev)
+                if c is not None:
+                    ctoks = self._index.toks.get(c, ())
+                    while lcp < min(len(blk), len(ctoks)) \
+                            and blk[lcp] == ctoks[lcp]:
+                        lcp += 1
+                    cand = c if lcp > 0 else None
+        # pin resolved pages so eviction inside _alloc_pages can't free them
+        for pid in shared_pids:
+            self._pool.retain(pid)
+        if cand is not None:
+            self._pool.retain(cand)
+        s = len(shared_pids)
+        cov = s * P + lcp
+        p0 = min(cov, Lp - 1)
+        d0 = p0 // P
+        use_shared = min(d0, s)
+        priv = self._alloc_pages(need - use_shared)
+        if priv is None:
+            for pid in shared_pids:
+                self._pool.release(pid)
+            if cand is not None:
+                self._pool.release(cand)
+            return None
+        row = shared_pids[:use_shared] + priv
+        self._caches = self._clear(
+            self._caches,
+            np.pad(np.asarray(priv, np.int32),
+                   (0, self.pages_per_slot - len(priv))))
+        cow_src = None
+        if d0 < s:
+            cow_src = shared_pids[d0]     # whole prompt inside shared blocks
+        elif lcp > 0:
+            cow_src = cand                # divergence inside block d0
+        if cow_src is not None:
+            self._caches = self._copy_page(
+                self._caches, np.int32(cow_src), np.int32(row[d0]),
+                np.int32(p0))
+        # drop the pins we are not keeping in the row
+        for pid in shared_pids[use_shared:]:
+            self._pool.release(pid)
+        if cand is not None:
+            self._pool.release(cand)
+        return row, p0, hashes
+
+    def _promote(self, st: _Slot) -> None:
+        """Publish the slot's prompt-prefix pages into the shared index:
+        full blocks become exact-match (``full``) and divergence-source
+        (``nxt``) candidates; a trailing partial block becomes a ``nxt``
+        candidate only.  Decode never writes into a full prompt block, and
+        copy-on-write truncates below the divergence point, so published
+        pages are safe even while their owner keeps decoding into the
+        trailing one.  Runs after prefill completes and BEFORE any
+        immediate retirement, so even a budget-1 request seeds the cache."""
+        if st.hashes is None or not self._share:
+            return
+        nfull = len(st.req.tokens) // self.page_size
+        for j, (h_prev, h_self, blk) in enumerate(st.hashes):
+            pid = int(st.pages[j]) if j < len(st.pages) else -1
+            if pid <= 0:
+                continue
+            if j < nfull and self._index.add("full", h_self, pid):
+                self._pool.retain(pid)
+                self._index.toks.setdefault(pid, blk)
+            if self._index.add("nxt", h_prev, pid):
+                self._pool.retain(pid)
+                self._index.toks.setdefault(pid, blk)
+
+    # ----------------------------------------------------------- admission --
+    def _finish(self, st: _Slot, slot: Optional[int] = None) -> Completion:
+        t = time.perf_counter()
+        self.telemetry.on_finish(st.req.rid, t)
+        if self.paged:
+            self._release_slot_pages(st)
+            if slot is not None:
+                # unmap the retired row NOW: a released page re-allocated
+                # to another slot must never appear mapped in two rows
+                # (the stale row is decode-masked via pos = -1, but the
+                # invariant "mapped => live reference" keeps the table
+                # auditable)
+                self._set_table_row(slot, [])
+        # pos always trails the generated count by prompt_tokens - 1
+        return Completion(request=st.req, tokens=st.generated,
+                          prompt_tokens=st.pos - len(st.generated) + 1,
+                          latency_s=t - st.submit_t)
+
+    def _timeout(self, req: Request, t0: float, t_sub: float) -> Completion:
+        self.telemetry.on_finish(req.rid, t0)
+        self.timeouts += 1
+        return Completion(request=req, tokens=[],
+                          prompt_tokens=len(req.tokens),
+                          latency_s=t0 - t_sub, status="timeout")
+
+    def _activate(self, slot: int, st: _Slot, first_id: int,
+                  done: List[Completion]) -> None:
+        """Common tail of every admission path: record the prefill token
+        and either retire immediately (budget 1 / instant eos) or join the
+        decode batch."""
+        st.generated = [first_id]
+        st.prefilling = False
+        self.telemetry.on_admit(st.req.rid, st.prompt_total, st.prefill_s)
+        if self.paged:
+            self._promote(st)
+        if st.remaining == 0 or first_id == st.req.eos_id:
+            self._slots[slot] = None
+            self._tok[slot] = 0
+            self._pos[slot] = self._idle_pos
+            self._seed[slot] = 0
+            self._temp[slot] = 0.0
+            done.append(self._finish(st, slot))
+            return
+        self._slots[slot] = st
+        self._tok[slot] = first_id
+        self._pos[slot] = st.pos
+        self._seed[slot] = st.req.seed
+        self._temp[slot] = st.req.temperature
+
+    def _admit_prefilled_paged(self, done: List[Completion]) -> None:
+        while self._prefilled and self.free_slots > 0:
+            pl = self._prefilled[0]
+            req = pl.req
+            head = int(getattr(pl, "head_pages", 0) or 0)
+            if head > 0 and self.shared_head_pages(req.tokens) < head:
+                # the promised shared head was evicted between the
+                # sender's query and arrival: the payload alone cannot
+                # rebuild the cache — fall back to a full local prefill
+                self._prefilled.popleft()
+                self.prefix_fallbacks += 1
+                self._queue.append(req)
+                continue
+            need = self._pages_needed(pl.prompt_tokens, req.max_new_tokens)
+            shared = []
+            if head > 0:
+                hs = self._index.hashes(req.tokens)
+                shared = [self._index.full[h] for _, h, _ in hs[:head]]
+                for pid in shared:
+                    self._pool.retain(pid)
+            priv = self._alloc_pages(need - head)
+            if priv is None:
+                for pid in shared:
+                    self._pool.release(pid)
+                break                      # wait for a retirement
+            self._prefilled.popleft()
+            t0 = time.perf_counter()
+            slot = self._slots.index(None)
+            row = shared + priv
+            self._set_table_row(slot, row)
+            self._caches = self._clear(
+                self._caches,
+                np.pad(np.asarray(priv, np.int32),
+                       (0, self.pages_per_slot - len(priv))))
+            self._caches = self._insert(
+                self._caches, self._put(pl.cache), np.int32(0),
+                np.int32(slot), self._table_row_dev(slot))
+            st = _Slot(req=req, pos=pl.prompt_tokens,
+                       remaining=req.max_new_tokens - 1, generated=[],
+                       submit_t=self.telemetry.submit_time(req.rid, t0),
+                       pages=row, prompt_total=pl.prompt_tokens,
+                       hashes=self._index.hashes(req.tokens)
+                       if self._share and not req.extras else None,
+                       prefill_s=time.perf_counter() - t0, t_admit=t0)
+            self._slots[slot] = st
+            self._activate(slot, st, pl.first_id, done)
+
+    def _prefill_batch(self, items, done: List[Completion]) -> None:
+        """One dense prefill dispatch for G same-length prompts, spliced
+        row-by-row into the pool."""
+        t0 = time.perf_counter()
+        G = len(items)
+        batch = {"tokens": jnp.asarray(
+            np.stack([it[0].tokens for it in items]))}
+        extras = items[0][0].extras
+        if extras:          # G == 1 by construction for extras requests
+            for k, v in extras.items():
+                batch[k] = jnp.asarray(np.asarray(v)[None])
+        batch = self._put(batch)
+        logits, cache = self._prefill(self.params, batch)
+        pts = [len(it[0].tokens) + self._extra_tokens(it[0]) for it in items]
+        first = _pick_tokens(
+            logits,
+            jnp.asarray([p - 1 for p in pts], jnp.int32),
+            jnp.asarray([it[0].seed for it in items], jnp.int32),
+            jnp.asarray([it[0].temperature for it in items], jnp.float32))
+        for r, (req, slot, row, hashes) in enumerate(items):
+            if self.paged:
+                self._caches = self._insert(
+                    self._caches, cache, np.int32(r), np.int32(slot),
+                    self._table_row_dev(slot))
+            else:
+                self._caches = self._insert(self._caches, cache,
+                                            np.int32(r), np.int32(slot))
+        first_host = np.asarray(jax.block_until_ready(first))
+        prefill_s = (time.perf_counter() - t0) / G
+        for r, (req, slot, row, hashes) in enumerate(items):
+            st = _Slot(req=req, pos=pts[r],
+                       remaining=req.max_new_tokens - 1, generated=[],
+                       submit_t=self.telemetry.submit_time(req.rid, t0),
+                       pages=row, prompt_total=pts[r], hashes=hashes,
+                       prefill_s=prefill_s, t_admit=t0)
+            self._slots[slot] = st
+            self._activate(slot, st, int(first_host[r]), done)
+
+    def _run_chunk(self, slot: int, st: _Slot, done: List[Completion]) -> None:
+        """Advance one prefill chunk for an admitting slot; on the final
+        chunk, emit the first token and join the decode batch."""
+        L = len(st.req.tokens)
+        C = self.chunk_prefill if self.chunk_prefill > 0 else L
+        end = min(st.chunk_next + C, L)
+        if L - end == 1:
+            end = L            # merge a length-1 final chunk (C+1 tokens)
+        t0 = time.perf_counter()
+        toks = jnp.asarray(st.req.tokens[st.chunk_next:end])
+        pos = jnp.arange(st.chunk_next, end, dtype=jnp.int32)
+        logits, self._caches = self._chunk(
+            self.params, toks, pos, self._caches, np.int32(slot),
+            self._table_row_dev(slot))
+        st.chunk_next = end
+        if end < L:
+            st.prefill_s += time.perf_counter() - t0
+            return
+        first = _pick_tokens(logits,
+                             jnp.asarray([L - 1], jnp.int32),
+                             jnp.asarray([st.req.seed], jnp.int32),
+                             jnp.asarray([st.req.temperature], jnp.float32))
+        first_id = int(jax.block_until_ready(first)[0])
+        st.prefill_s += time.perf_counter() - t0
+        self._activate(slot, st, first_id, done)
+
+    def _admit_paged(self) -> List[Completion]:
+        done: List[Completion] = []
+        self._admit_prefilled_paged(done)
+        batches: Dict[int, List[tuple]] = {}
+        while self._queue and self.free_slots > 0:
+            req = self._queue[0]
+            t0 = time.perf_counter()
+            t_sub = self.telemetry.submit_time(req.rid, t0)
+            if req.deadline_s is not None and t0 - t_sub > req.deadline_s:
+                self._queue.popleft()
+                done.append(self._timeout(req, t0, t_sub))
+                continue
+            plan = self._plan_pages(req)
+            if plan is None:
+                break                      # pool exhausted: stay queued
+            self._queue.popleft()
+            row, p0, hashes = plan
+            slot = self._slots.index(None)
+            self._set_table_row(slot, row)
+            L = len(req.tokens)
+            Lp = L + self._extra_tokens(req)
+            st = _Slot(req=req, pos=Lp, remaining=req.max_new_tokens - 1,
+                       generated=[], submit_t=t_sub, pages=row,
+                       prefilling=True, chunk_next=p0, prompt_total=Lp,
+                       hashes=hashes, t_admit=t0)
+            self._slots[slot] = st
+            whole = p0 == 0 and (self.chunk_prefill <= 0
+                                 or L <= self.chunk_prefill)
+            if req.extras or (whole and not self.batch_prefill):
+                self._prefill_batch([(req, slot, row, hashes)], done)
+            elif whole:
+                batches.setdefault(L, []).append((req, slot, row, hashes))
+            else:
+                self._caches = self._reset_row(self._caches, np.int32(slot))
+                if self.chunk_prefill <= 0 or L - p0 <= self.chunk_prefill:
+                    self._run_chunk(slot, st, done)   # synchronous tail
+                # else: leave the slot in the prefilling state; step()
+                # advances one chunk per engine step, interleaved with the
+                # decode batch
+        for L, items in batches.items():
+            self._prefill_batch(items, done)
+        return done
+
+    def _admit_dense(self) -> List[Completion]:
         done: List[Completion] = []
         # migrated payloads first: their prefill is already sunk on a
         # prefill GMI, so admission is the jitted splice alone — the same
@@ -283,76 +940,34 @@ class ServeEngine:
             t0 = time.perf_counter()
             slot = self._slots.index(None)
             self._caches = self._insert(self._caches, self._put(pl.cache),
-                                        np.int32(slot))
-            splice_s = time.perf_counter() - t0
-            self.telemetry.on_admit(req.rid, pl.prompt_tokens, splice_s)
+                                        np.int32(0), np.int32(slot))
             st = _Slot(req=req, pos=pl.prompt_tokens,
-                       remaining=req.max_new_tokens - 1,
-                       generated=[pl.first_id],
-                       submit_t=self.telemetry.submit_time(req.rid, t0))
-            if st.remaining == 0 or pl.first_id == req.eos_id:
-                done.append(self._finish(st))
-                continue
+                       remaining=req.max_new_tokens - 1, generated=[],
+                       submit_t=self.telemetry.submit_time(req.rid, t0),
+                       prompt_total=pl.prompt_tokens,
+                       prefill_s=time.perf_counter() - t0, t_admit=t0)
             self._slots[slot] = st
-            self._tok[slot] = pl.first_id
-            self._pos[slot] = st.pos
-            self._seed[slot] = req.seed
-            self._temp[slot] = req.temperature
+            self._activate(slot, st, pl.first_id, done)
         while self._queue and self.free_slots > 0:
             req = self._queue.popleft()
             t0 = time.perf_counter()
             t_sub = self.telemetry.submit_time(req.rid, t0)
             if req.deadline_s is not None and t0 - t_sub > req.deadline_s:
-                # TTL expired while queued: complete as a timeout instead
-                # of spending a slot + prefill on a request nobody wants
-                self.telemetry.on_finish(req.rid, t0)
-                self.timeouts += 1
-                done.append(Completion(
-                    request=req, tokens=[], prompt_tokens=len(req.tokens),
-                    latency_s=t0 - t_sub, status="timeout"))
+                done.append(self._timeout(req, t0, t_sub))
                 continue
             slot = self._slots.index(None)
-            batch = {"tokens": jnp.asarray(req.tokens[None])}
-            if req.extras:
-                for k, v in req.extras.items():
-                    batch[k] = jnp.asarray(np.asarray(v)[None])
-            batch = self._put(batch)
-            logits, cache = self._prefill(self.params, batch)
-            prompt_tokens = len(req.tokens) + self._extra_tokens(req)
-            first = _pick_tokens(logits,
-                                 jnp.asarray([prompt_tokens - 1], jnp.int32),
-                                 jnp.asarray([req.seed], jnp.int32),
-                                 jnp.asarray([req.temperature], jnp.float32))
-            self._caches = self._insert(self._caches, cache,
-                                        np.int32(slot))
-            first_id = int(jax.block_until_ready(first)[0])
-            prefill_s = time.perf_counter() - t0
-            self.telemetry.on_admit(req.rid, prompt_tokens, prefill_s)
-            st = _Slot(req=req, pos=prompt_tokens,
-                       remaining=req.max_new_tokens - 1,
-                       generated=[first_id],
-                       submit_t=self.telemetry.submit_time(req.rid, t0))
-            if st.remaining == 0 or first_id == req.eos_id:
-                done.append(self._finish(st))
-                continue
+            st = _Slot(req=req, pos=0, remaining=req.max_new_tokens - 1,
+                       generated=[], submit_t=t_sub, t_admit=t0)
+            st.prompt_total = len(req.tokens) + self._extra_tokens(req)
+            st.pos = st.prompt_total
             self._slots[slot] = st
-            self._tok[slot] = first_id
-            self._pos[slot] = st.pos
-            self._seed[slot] = req.seed
-            self._temp[slot] = req.temperature
+            self._prefill_batch([(req, slot, [], None)], done)
         return done
 
-    def _finish(self, st: _Slot) -> Completion:
-        t = time.perf_counter()
-        self.telemetry.on_finish(st.req.rid, t)
-        # pos always trails the generated count by prompt_tokens - 1
-        return Completion(request=st.req, tokens=st.generated,
-                          prompt_tokens=st.pos - len(st.generated) + 1,
-                          latency_s=t - st.submit_t)
-
     def step(self) -> List[Completion]:
-        """Admit from the queue, run ONE batched decode step, retire
-        finished requests.  Returns this step's completions."""
+        """Admit from the queue, advance chunked prefills, run ONE batched
+        decode step, retire finished requests.  Returns this step's
+        completions."""
         if self.fault_hook is not None:
             try:
                 self.fault_hook(self)
@@ -366,15 +981,22 @@ class ServeEngine:
                 raise
         if self.dead:
             raise RuntimeError(f"{self.name}: engine is dead")
-        done = self._admit()
-        active = [i for i, s in enumerate(self._slots) if s is not None]
+        done = self._admit_paged() if self.paged else self._admit_dense()
+        # advance ONE chunk for each slot still prefilling (they are not
+        # in the decode batch yet, so long prompts don't stall decode)
+        for i, st in enumerate(self._slots):
+            if st is not None and st.prefilling:
+                self._run_chunk(i, st, done)
+        active = [i for i, s in enumerate(self._slots)
+                  if s is not None and not s.prefilling]
         if not active:
             return done
         t0 = time.perf_counter()
+        table = self._table_device() if self.paged else None
         tok, self._caches = self._decode(
             self.params, self._caches, *self._put(
                 (jnp.asarray(self._tok), jnp.asarray(self._pos),
-                 jnp.asarray(self._seed), jnp.asarray(self._temp))))
+                 jnp.asarray(self._seed), jnp.asarray(self._temp))), table)
         tok_host = np.asarray(jax.block_until_ready(tok))
         dt = time.perf_counter() - t0
         emitted = 0
@@ -388,10 +1010,10 @@ class ServeEngine:
             if st.remaining == 0 or tid == st.req.eos_id:
                 self._slots[i] = None
                 self._tok[i] = 0
-                self._pos[i] = 0
+                self._pos[i] = self._idle_pos
                 self._seed[i] = 0
                 self._temp[i] = 0.0
-                done.append(self._finish(st))
+                done.append(self._finish(st, i))
             else:
                 self._tok[i] = tid
                 self._pos[i] = st.pos
@@ -406,13 +1028,20 @@ class ServeEngine:
         return out
 
     def take_inflight(self) -> List[Request]:
-        """Remove and return the requests currently holding decode slots,
-        abandoning their generation progress (the caches are forfeit on a
-        dead engine) — the router's restart-elsewhere path."""
+        """Remove and return the requests currently holding decode slots
+        (including mid-chunked-prefill ones), abandoning their generation
+        progress (the caches are forfeit on a dead engine) — the router's
+        restart-elsewhere path."""
         out = [s.req for s in self._slots if s is not None]
+        if self.paged:
+            for s in self._slots:
+                if s is not None:
+                    self._release_slot_pages(s)
+            self._table[:] = -1
+            self._table_dev = None
         self._slots = [None] * self.max_slots
         self._tok[:] = 0
-        self._pos[:] = 0
+        self._pos[:] = self._idle_pos
         self._seed[:] = 0
         self._temp[:] = 0.0
         return out
@@ -436,8 +1065,9 @@ class ServeEngine:
     # -------------------------------------------------------------- oracle --
     def oracle_generate(self, req: Request) -> List[int]:
         """The single-request reference path: same compiled prefill, B=1
-        decode.  Continuous-batched greedy decoding must be token-identical
-        to this (the engine's core correctness property)."""
+        decode over a fresh private page pool (paged mode) or cache tree
+        (dense mode).  Continuous-batched greedy decoding must be
+        token-identical to this (the engine's core correctness property)."""
         batch = {"tokens": jnp.asarray(req.tokens[None])}
         if req.extras:
             for k, v in req.extras.items():
@@ -445,6 +1075,20 @@ class ServeEngine:
         batch = self._put(batch)
         logits, caches = self._prefill(self.params, batch)
         prompt_tokens = len(req.tokens) + self._extra_tokens(req)
+        table = None
+        if self.paged:
+            M = self.pages_per_slot
+            pool = T.init_paged_cache(self.cfg, 1, self.max_seq,
+                                      self.window_override,
+                                      jnp.dtype(self.cfg.dtype),
+                                      page_size=self.page_size,
+                                      num_pages=M + 1)
+            need = self._pages_needed(prompt_tokens, req.max_new_tokens)
+            row = np.full((M,), -1, np.int32)
+            row[:need] = np.arange(1, need + 1)
+            table = self._put(jnp.asarray(row[None]))
+            caches = self._insert(self._put(pool), caches, np.int32(0),
+                                  np.int32(0), jnp.asarray(row))
         tok = _pick_tokens(logits,
                            jnp.asarray([prompt_tokens - 1], jnp.int32),
                            jnp.asarray([req.seed], jnp.int32),
@@ -459,7 +1103,7 @@ class ServeEngine:
             tok, caches = self._decode(
                 self.params, caches, *self._put(
                     (tok.astype(jnp.int32),
-                     jnp.asarray([pos], jnp.int32), seed, temp)))
+                     jnp.asarray([pos], jnp.int32), seed, temp)), table)
             out.append(int(tok[0]))
             pos += 1
         return out

@@ -33,6 +33,15 @@ from repro.serve.engine import Completion, Request, ServeEngine
 from repro.serve.telemetry import ServingLoad, merge_loads
 
 
+def _engine_load(engine, take: bool = False) -> ServingLoad:
+    """One engine's epoch with its memory/page counters attached (paged
+    counters are 0/0 for dense engines — getattr keeps duck-typed engine
+    substitutes working)."""
+    fn = engine.telemetry.take_epoch if take else engine.telemetry.snapshot
+    return fn(engine.cache_bytes, getattr(engine, "free_pages", 0),
+              getattr(engine, "total_pages", 0))
+
+
 class RequestRouter:
     """Admission/queueing front over N serving engines.
 
@@ -135,8 +144,8 @@ class RequestRouter:
 
     def snapshot(self) -> ServingLoad:
         """Aggregate the engines' current epochs (no reset)."""
-        return merge_loads([e.telemetry.snapshot(e.cache_bytes)
-                            for e in self.engines] + self._retired_loads,
+        return merge_loads([_engine_load(e) for e in self.engines]
+                           + self._retired_loads,
                            live_slots=self.total_slots)
 
     def take_epoch(self) -> ServingLoad:
@@ -146,13 +155,13 @@ class RequestRouter:
         latencies count; the reported slot capacity is the LIVE engine
         set's, so a resize epoch never shows phantom slots)."""
         retired, self._retired_loads = self._retired_loads, []
-        return merge_loads([e.telemetry.take_epoch(e.cache_bytes)
+        return merge_loads([_engine_load(e, take=True)
                             for e in self.engines] + retired,
                            live_slots=self.total_slots)
 
     def per_gmi_stats(self) -> List[ServingLoad]:
         """Per-engine epoch snapshots (p50/p95 + tok/s per GMI)."""
-        return [e.telemetry.snapshot(e.cache_bytes) for e in self.engines]
+        return [_engine_load(e) for e in self.engines]
 
     # -------------------------------------------------------------- scaling --
     def _spawn(self, index: int) -> ServeEngine:
@@ -168,8 +177,7 @@ class RequestRouter:
         stamps = {r.rid: engine.telemetry.submit_time(r.rid, None)
                   for r in pending}
         self.completions.extend(engine.run_until_idle(admit=False))
-        self._retired_loads.append(
-            engine.telemetry.take_epoch(engine.cache_bytes))
+        self._retired_loads.append(_engine_load(engine, take=True))
         for req in pending:
             req._submit_t = stamps.get(req.rid)
         return pending
@@ -208,8 +216,7 @@ class RequestRouter:
             if hasattr(engine, "take_prefilled") else []
         stamps = {r.rid: engine.telemetry.submit_time(r.rid, None)
                   for r in queued + inflight}
-        self._retired_loads.append(
-            engine.telemetry.take_epoch(engine.cache_bytes))
+        self._retired_loads.append(_engine_load(engine, take=True))
         if not self.engines:
             raise RuntimeError(
                 "last serving engine died; no survivors to fail over to")

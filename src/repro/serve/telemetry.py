@@ -44,6 +44,13 @@ class ServingLoad:
     prefill_backlog: int = 0    # requests waiting on a prefill GMI at
                                 # epoch end (the prefill-pressure signal)
     migrations: int = 0         # cache payloads migrated prefill->decode
+    # paged-cache extensions: free/total pages of the engine's page pool
+    # (0/0 for dense engines).  Page occupancy already feeds
+    # ``occupancy_mean`` indirectly — admission blocks on free pages — so
+    # the controller's ladder logic needs no change; these are the raw
+    # counters for benches and capacity planning.
+    free_pages: int = 0
+    total_pages: int = 0
 
     @property
     def tok_s(self) -> float:
@@ -87,7 +94,9 @@ def merge_loads(loads: List[ServingLoad],
         decode_s=sum(l.decode_s for l in loads),
         mem_bytes=sum(l.mem_bytes for l in loads),
         prefill_backlog=sum(l.prefill_backlog for l in loads),
-        migrations=sum(l.migrations for l in loads))
+        migrations=sum(l.migrations for l in loads),
+        free_pages=sum(l.free_pages for l in loads),
+        total_pages=sum(l.total_pages for l in loads))
 
 
 class ServingTelemetry:
@@ -180,7 +189,8 @@ class ServingTelemetry:
         arr = np.asarray(self._latencies)
         return float(np.percentile(arr, 50)), float(np.percentile(arr, 95))
 
-    def snapshot(self, mem_bytes: float = 0.0) -> ServingLoad:
+    def snapshot(self, mem_bytes: float = 0.0, free_pages: int = 0,
+                 total_pages: int = 0) -> ServingLoad:
         """The current epoch as a :class:`ServingLoad` (no reset)."""
         p50, p95 = self.percentiles()
         if self._steps:
@@ -201,12 +211,14 @@ class ServingTelemetry:
             occupancy_mean=occ, backlog=int(backlog),
             p50_s=p50, p95_s=p95, slots=self.slots,
             prefill_s=self._epoch_prefill_s, decode_s=self._epoch_decode_s,
-            mem_bytes=mem_bytes)
+            mem_bytes=mem_bytes, free_pages=int(free_pages),
+            total_pages=int(total_pages))
 
-    def take_epoch(self, mem_bytes: float = 0.0) -> ServingLoad:
+    def take_epoch(self, mem_bytes: float = 0.0, free_pages: int = 0,
+                   total_pages: int = 0) -> ServingLoad:
         """Snapshot the epoch and reset its counters (cumulative totals and
         in-flight submit timestamps survive)."""
-        load = self.snapshot(mem_bytes)
+        load = self.snapshot(mem_bytes, free_pages, total_pages)
         self._steps = []
         self._latencies = []
         self._epoch_tokens = 0

@@ -115,3 +115,50 @@ def test_gitignore_covers_bytecode():
                     and not ln.startswith("#")]
     assert "__pycache__/" in patterns
     assert any(p in ("*.pyc", "*.py[cod]") for p in patterns)
+
+
+# ---------------------------------------------- paged-row gate coverage ----
+# the paged serving/disagg rows ride the same gate: pin that they are
+# timing rows (us > 0 gates), that a strict run failing on their absence
+# names the re-baseline escape hatch, and that BENCH_PAGED_BASELINE=1
+# downgrades exactly those failures to warnings
+PAGED_ROWS = [("serving_paged_tok_x", 100.0),
+              ("serving_stall_whole_x", 300.0),
+              ("serving_stall_chunked_x", 100.0),
+              ("disagg_page_migrate_x", 50.0),
+              ("serving_paged_admit_x", 0.0),      # ratio row: never gated
+              ("disagg_prefix_saved_x", 0.0)]
+
+
+@pytest.fixture
+def paged_baseline(tmp_path):
+    path = str(tmp_path / "BENCH_paged.json")
+    _write_baseline(path, PAGED_ROWS)
+    return path
+
+
+def test_gate_paged_rows_regress_like_any_timing_row(paged_baseline):
+    fresh = [f"serving_paged_tok_x,{100.0 * REGRESSION_FACTOR * 2},bad"] + \
+        [f"{n},{us},ok" for n, us in PAGED_ROWS[1:]]
+    regs, missing = _check_regressions(paged_baseline, fresh, strict=True)
+    assert missing == []
+    assert len(regs) == 1 and regs[0].startswith("serving_paged_tok_x:")
+
+
+def test_gate_missing_paged_row_names_rebaseline_hatch(paged_baseline,
+                                                       monkeypatch):
+    monkeypatch.delenv("BENCH_PAGED_BASELINE", raising=False)
+    fresh = [f"{n},{us},ok" for n, us in PAGED_ROWS[1:]]   # tok row gone
+    regs, missing = _check_regressions(paged_baseline, fresh, strict=True)
+    assert missing == ["serving_paged_tok_x"]
+    assert len(regs) == 1 and regs[0].startswith("serving_paged_tok_x:")
+    assert "missing" in regs[0] and "BENCH_PAGED_BASELINE" in regs[0]
+
+
+def test_gate_paged_baseline_env_downgrades_strict_missing(paged_baseline,
+                                                           monkeypatch):
+    monkeypatch.setenv("BENCH_PAGED_BASELINE", "1")
+    fresh = [f"{n},{us},ok" for n, us in PAGED_ROWS[1:]]
+    regs, missing = _check_regressions(paged_baseline, fresh, strict=True)
+    # still reported as missing (the warning path) but not a failure
+    assert missing == ["serving_paged_tok_x"] and regs == []

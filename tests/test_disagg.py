@@ -173,13 +173,19 @@ def test_migrated_decode_token_identical_to_oracle(case):
 
 def test_cost_model_chosen_migration_token_identical():
     """Mixed traffic under a REAL planner decision (no force): the
-    crossover splits short-local from long-migrate, and both paths stay
+    crossover splits short-local from long-migrate — priced PER PAGE
+    (``DisaggFront.request_bytes``), so a 9-token prompt (2 pages of 8)
+    costs twice the wire time of a 3-token one — and both paths stay
     token-identical to the oracle."""
     front = make_front("attention", decode=2, prefill=1)
-    # place the crossover mid-range: migration costs tau seconds, so
-    # prompts longer than ~min_gain * tau * prefill_tok_s migrate
-    tau = 6.0 / (1.05 * 1e3)
-    front.planner.static_bandwidth = front.payload_bytes / tau
+    eng = front.router.engines[0]
+    # per-page wire time tau_p: with local prefill at 1e3 tok/s and
+    # min_gain=1.05, a p-page prompt of n tokens migrates iff
+    # n >= 1.05e3 * p * tau_p.  tau_p=4.1ms puts 3- and 4-token prompts
+    # (1 page, too short) local, 8 (1 page) and 9 (2 pages) migrating.
+    tau_p = 4.1e-3
+    front.planner.static_bandwidth = \
+        front.payload_bytes / (eng.pages_per_slot * tau_p)
     front.planner.latency_s = 0.0
     front.planner._prefill_tok_s = 1e3
     rng = np.random.default_rng(7)
@@ -324,3 +330,81 @@ def test_one_controller_arbitrates_rollout_and_serving():
     runner.replan(Decision(num_env=4, gmi_per_gpu=2, serving_gpus=2,
                            projected_throughput=0.0, reason="fence test"))
     assert ctl.plan_seq == seq0 + 1
+
+
+# ------------------------------------------------------------- paged wires --
+def test_paged_migration_ships_partial_payload():
+    """Migration prices and ships WHOLE PAGES of the prompt, not the full
+    per-slot cache: a 4-page prompt's payload is measurably bigger on the
+    wire than a 1-page prompt's, and the measured per-page rate feeds
+    request_bytes."""
+    front = make_front("attention", decode=1, prefill=1,
+                       planner=force_migrate())
+    rng = np.random.default_rng(3)
+    short = Request(tokens=rng.integers(0, V, 4), max_new_tokens=3)
+    long = Request(tokens=rng.integers(0, V, 28), max_new_tokens=3)
+    oracle = {r.rid: front.router.engines[0].oracle_generate(r)
+              for r in (short, long)}
+    done = front.serve([short])
+    b_short = front._payload_bytes            # wire bytes of the last send
+    done += front.serve([long])
+    b_long = front._payload_bytes
+    assert len(done) == 2
+    for c in done:
+        assert c.tokens == oracle[c.rid]
+    # ceil(4/8)=1 page vs ceil(28/8)=4 pages: the wire sees the difference
+    assert b_long > b_short > 0
+    assert front._page_bytes is not None and front._page_bytes > 0
+    # ...and the planner's estimate now scales with the prompt
+    assert front.request_bytes(28) > front.request_bytes(4)
+
+
+def test_shared_prefix_skips_pages_across_migration():
+    """Second migrated request sharing a 2-block prompt head: the front
+    strips the head pages the decode engine's prefix index already holds
+    (prefix_pages_saved), and the spliced decode stays token-identical."""
+    front = make_front("attention", decode=1, prefill=1,
+                       planner=force_migrate(), max_seq=48)
+    eng = front.router.engines[0]
+    rng = np.random.default_rng(13)
+    head = rng.integers(0, V, 16)            # two full 8-token pages
+    r1 = Request(tokens=np.concatenate([head, rng.integers(0, V, 3)]),
+                 max_new_tokens=4)
+    r2 = Request(tokens=np.concatenate([head, rng.integers(0, V, 6)]),
+                 max_new_tokens=5)
+    oracle = {r.rid: eng.oracle_generate(r) for r in (r1, r2)}
+    done = front.serve([r1])
+    assert front.prefix_pages_saved == 0     # nothing promoted yet
+    assert eng.shared_head_pages(r2.tokens) == 2
+    done += front.serve([r2])
+    assert front.prefix_pages_saved == 2     # r2's head never hit the wire
+    assert len(done) == 2
+    for c in done:
+        assert c.tokens == oracle[c.rid]
+    assert front.planner.migrated == 2
+
+
+def test_stale_prefix_promise_falls_back_to_local_prefill():
+    """A head-stripped payload landing on an engine that does NOT hold the
+    promised prefix pages re-queues for a full local prefill — lossless,
+    token-identical, counted in ``prefix_fallbacks``."""
+    from repro.kernels.channel_pack import truncate_cache_pages
+    cfg, params = CASES["attention"], params_of("attention")
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=40, name="d0")
+    pf = PrefillEngine(cfg, params, max_seq=40, name="p0")
+    req = Request(tokens=np.arange(12) % V, max_new_tokens=5)
+    oracle = eng.oracle_generate(req)
+    pf.submit(req)
+    payload = pf.step()
+    assert payload is not None
+    # strip the first page on a PROMISE the engine cannot honor (its
+    # prefix index has never seen this prompt)
+    payload.cache = truncate_cache_pages(payload.cache,
+                                         payload.prompt_tokens,
+                                         eng.page_size, head_skip=1)
+    payload.head_pages = 1
+    assert eng.shared_head_pages(req.tokens) == 0
+    eng.submit_prefilled(payload)
+    done = eng.run_until_idle()
+    assert eng.prefix_fallbacks == 1
+    assert len(done) == 1 and done[0].tokens == oracle

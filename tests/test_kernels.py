@@ -211,3 +211,57 @@ def test_mlstm_kernel_matches_model_block_math():
         m = m_new
     want = jnp.stack(outs, axis=2)
     np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)
+
+
+# ------------------------------------------------------------ paged decode --
+def _paged_case(B, M, page, H, KH, hd, dtype, seed=0):
+    """A random but consistent paged pool: each batch row decodes at a
+    random absolute position, owning shuffled physical pages for every
+    virtual page at or below it (page 0 is the shared trash page)."""
+    rng = np.random.default_rng(seed)
+    N = B * M + 1
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k_pages = jax.random.normal(ks[1], (N, page, KH, hd), dtype)
+    v_pages = jax.random.normal(ks[2], (N, page, KH, hd), dtype)
+    slot_pos = np.full((N, page), -1, np.int32)
+    table = np.full((B, M), -1, np.int32)
+    positions = np.zeros((B,), np.int32)
+    perm = iter(rng.permutation(np.arange(1, N)))
+    for b in range(B):
+        pos = int(rng.integers(1, M * page))
+        positions[b] = pos
+        for vp in range(pos // page + 1):
+            pid = int(next(perm))
+            table[b, vp] = pid
+            hi = min(page, pos + 1 - vp * page)
+            slot_pos[pid, :hi] = vp * page + np.arange(hi)
+    return (q, k_pages, v_pages, jnp.asarray(slot_pos),
+            jnp.asarray(table), jnp.asarray(positions))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("window", [None, 8])
+def test_paged_attention_kernel(dtype, window):
+    """Pallas gather-decode through the page table == dense ref oracle,
+    full-depth and sliding-window, f32 and bf16."""
+    dt = jnp.dtype(dtype)
+    q, kp, vp, sp, table, pos = _paged_case(3, 4, 8, 4, 2, 32, dt, seed=5)
+    out = ops.paged_attention(q, kp, vp, sp, table, pos, window=window,
+                              interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, sp, table, pos, window=window)
+    tol = 2e-2 if dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert out.dtype == dt
+
+
+def test_paged_attention_kernel_gqa_softcap():
+    """GQA 4:1 heads with logit softcap, scattered unmapped pages."""
+    q, kp, vp, sp, table, pos = _paged_case(2, 5, 8, 8, 2, 16,
+                                            jnp.float32, seed=9)
+    out = ops.paged_attention(q, kp, vp, sp, table, pos, softcap=20.0,
+                              interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, sp, table, pos, softcap=20.0)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)

@@ -24,6 +24,12 @@ CASES = {
                           d_ff=128, vocab_size=V, ssm_state_dim=16,
                           block_pattern=("mamba2",) * 2 + ("attn_shared",),
                           num_super=2),
+    # batch-composition-independent finite-capacity routing
+    # (moe_route_block) makes MoE a PINNED identity case, not an exception
+    "moe": ModelConfig(name="m", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=2, d_ff=128, vocab_size=V,
+                       num_experts=4, experts_per_token=2,
+                       moe_route_block=4),
 }
 
 _PARAMS = {}
@@ -178,3 +184,163 @@ def test_telemetry_epoch_counts():
     # epoch reset: a fresh epoch starts empty
     empty = eng.telemetry.take_epoch()
     assert empty.tokens == 0 and empty.requests == 0
+
+
+# -------------------------------------------------------------- paged cache --
+def _staggered_identity(eng, reqs):
+    """Submit two up front, two mid-decode; assert tokens == oracle."""
+    oracle = {r.rid: eng.oracle_generate(r) for r in reqs}
+    for r in reqs[:2]:
+        eng.submit(r)
+    done = []
+    done.extend(eng.step())
+    done.extend(eng.step())
+    for r in reqs[2:]:
+        eng.submit(r)
+    done.extend(eng.run_until_idle())
+    assert len(done) == len(reqs)
+    for c in done:
+        assert c.tokens == oracle[c.rid], \
+            f"{eng.name}: tokens diverged from single-request oracle"
+    return done
+
+
+@pytest.mark.parametrize("case", list(CASES))
+def test_chunked_prefill_token_identical(case):
+    """Chunked prefill (chunks interleaved with live decode steps) stays
+    token-identical for every cache family — including MoE, where chunk
+    boundaries snap to moe_route_block."""
+    eng = make_engine(case, max_slots=2, chunk_prefill=4)
+    _staggered_identity(eng, reqs_mixed(4, seed=11, budgets=(5, 8, 3, 6)))
+
+
+def test_batch_prefill_off_token_identical():
+    eng = make_engine("attention", max_slots=2, batch_prefill=False)
+    _staggered_identity(eng, reqs_mixed(4, seed=17, budgets=(5, 8, 3, 6)))
+
+
+def test_dense_legacy_engine_token_identical():
+    """paged=False keeps the pre-paging monolithic-slot path pinned."""
+    eng = make_engine("hybrid", max_slots=2, paged=False)
+    assert eng.total_pages == 0 and eng.free_pages == 0
+    _staggered_identity(eng, reqs_mixed(4, seed=18, budgets=(5, 8, 3, 6)))
+
+
+def test_decode_kernel_token_identical_windowed():
+    """The Pallas gather-decode kernel, driven through the engine with a
+    sliding window, agrees with the (kernel-free) oracle path."""
+    eng = make_engine("attention", max_slots=2, decode_kernel=True,
+                      window_override=16, chunk_prefill=3)
+    _staggered_identity(eng, reqs_mixed(4, seed=19, budgets=(6, 8, 3, 5)))
+
+
+def test_page_table_rows_disjoint_across_writers():
+    """Page-table invariant: with sharing off, no physical page is ever
+    mapped by two slots at once, and draining returns every page."""
+    eng = make_engine("attention", max_slots=3, share_prefix=False)
+    for r in reqs_mixed(6, seed=20):
+        eng.submit(r)
+    while eng.busy:
+        eng.step()
+        owners = {}
+        for row in range(eng.max_slots):
+            for pid in eng._table[row]:
+                if pid >= 0:
+                    assert pid != 0, "trash page must never be mapped"
+                    assert owners.setdefault(int(pid), row) == row, \
+                        f"page {pid} mapped by two writers"
+        for pid, _ in owners.items():
+            assert eng._pool.ref[pid] == 1
+    assert eng.free_pages == eng.total_pages     # all pages returned
+    assert np.all(eng._table == -1)
+
+
+def test_free_list_exhaustion_queues_not_crashes():
+    """A request whose pages aren't available yet waits in the queue (no
+    crash, no partial admission) and completes token-identically once the
+    running request retires its pages."""
+    # 9 usable pages: each request needs ceil((20+12-1)/8) = 4 pages, so
+    # two fit but the third must wait for a retirement
+    eng = make_engine("attention", max_slots=3, num_pages=10)
+    rng = np.random.default_rng(23)
+    reqs = [Request(tokens=rng.integers(0, V, 20), max_new_tokens=12)
+            for _ in range(3)]
+    oracle = {r.rid: eng.oracle_generate(r) for r in reqs}
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    assert eng.active_count == 2 and eng.queue_len == 1   # pages, not slots
+    done = eng.run_until_idle()
+    assert len(done) == 3
+    for c in done:
+        assert c.tokens == oracle[c.rid]
+    assert eng.free_pages == eng.total_pages or eng._index.pages()
+
+
+def test_submit_rejects_impossible_page_need():
+    eng = make_engine("attention", max_slots=2, max_seq=40, num_pages=4)
+    with pytest.raises(ValueError, match="can never be admitted"):
+        eng.submit(Request(tokens=np.arange(25), max_new_tokens=8))
+
+
+def test_shared_prefix_reuse_and_cow_divergence():
+    """Two prompts sharing a 16-token head: the second admission reuses
+    the promoted head pages (fewer fresh pages allocated), diverges by
+    copy-on-write, and both match their oracles."""
+    eng = make_engine("attention", max_slots=2, max_seq=48)
+    rng = np.random.default_rng(31)
+    head = rng.integers(0, V, 16)                 # two full 8-token blocks
+    a = Request(tokens=np.concatenate([head, rng.integers(0, V, 5)]),
+                max_new_tokens=4)
+    b = Request(tokens=np.concatenate([head, rng.integers(0, V, 7)]),
+                max_new_tokens=5)
+    oracle = {r.rid: eng.oracle_generate(r) for r in (a, b)}
+    assert eng.serve([a])[0].tokens == oracle[a.rid]
+    # a's full head blocks stay behind in the prefix index
+    assert eng.shared_head_pages(b.tokens) == 2
+    held = eng.total_pages - eng.free_pages
+    assert held >= 2 and set(eng._index.pages())
+    free_before = eng.free_pages
+    eng.submit(b)
+    eng.step()
+    # b mapped the two shared pages (ref > 1) instead of re-prefilling
+    # them: fresh allocations cover only the tail + COW + budget
+    shared = [pid for pid in eng._table[eng._slots.index(
+        next(s for s in eng._slots if s is not None))]
+        if pid >= 0 and eng._pool.ref[pid] > 1]
+    assert shared, "second request did not map any shared head page"
+    assert free_before - eng.free_pages < eng._pages_needed(
+        len(b.tokens), b.max_new_tokens)
+    done = eng.run_until_idle()
+    assert done[0].tokens == oracle[b.rid]
+
+
+def test_identical_prompts_share_maximally():
+    """Same prompt twice in one batch: sharing never corrupts decode —
+    each request still produces the oracle tokens independently."""
+    eng = make_engine("attention", max_slots=2, max_seq=48)
+    rng = np.random.default_rng(37)
+    toks = rng.integers(0, V, 17)
+    a = Request(tokens=toks, max_new_tokens=6)
+    b = Request(tokens=toks.copy(), max_new_tokens=6)
+    oracle = eng.oracle_generate(a)
+    done = eng.serve([a, b])
+    assert [c.tokens for c in done] == [oracle, oracle]
+
+
+def test_index_pages_evicted_under_pressure():
+    """Index-held (ref == index entries) pages are evicted when the free
+    list can't cover an admission — the cache is a cache, not a leak."""
+    eng = make_engine("attention", max_slots=2, max_seq=40, num_pages=11)
+    rng = np.random.default_rng(41)
+    done = eng.serve([Request(tokens=rng.integers(0, V, 16),
+                              max_new_tokens=3)])
+    assert len(done) == 1 and eng._index.pages()
+    held = eng.total_pages - eng.free_pages
+    assert held >= 2
+    # a request needing more pages than the free list holds forces
+    # eviction of the index-only pages, then completes
+    big = Request(tokens=rng.integers(0, V, 30), max_new_tokens=9)
+    oracle = eng.oracle_generate(big)
+    out = eng.serve([big])
+    assert out[0].tokens == oracle
