@@ -30,9 +30,11 @@ from repro.rl.a3c import Experience
 def _make_exp(spec, T=32, N=64, version=0):
     key = jax.random.key(version)
     return Experience(
-        obs=jax.random.normal(key, (T, N, spec.obs_dim)),
-        actions=jax.random.normal(key, (T, N, spec.act_dim)),
-        rewards=jax.random.normal(key, (T, N)),
+        obs=jax.random.normal(jax.random.fold_in(key, 0),
+                              (T, N, spec.obs_dim)),
+        actions=jax.random.normal(jax.random.fold_in(key, 1),
+                                  (T, N, spec.act_dim)),
+        rewards=jax.random.normal(jax.random.fold_in(key, 2), (T, N)),
         dones=jnp.zeros((T, N)),
         bootstrap=jnp.zeros((N,)),
         actor_version=jnp.int32(version))

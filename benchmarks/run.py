@@ -21,6 +21,11 @@
 #                          crossover from measured Table-2 terms
 #   roofline             — §Roofline terms from the dry-run artifacts
 #
+# Every invocation starts with the repro.analysis static pre-flight
+# (python -m repro.analysis --strict): a tree with findings — tracked
+# bytecode included — exits 1 before any suite runs, so it can never
+# re-baseline a BENCH json.
+#
 # ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels
 # + bench_lgr + bench_serving + bench_faults + bench_disagg, interpret
 # mode on CPU),
@@ -33,7 +38,6 @@
 # --quick.
 import json
 import os
-import subprocess
 import sys
 import traceback
 
@@ -98,19 +102,17 @@ def _check_regressions(path: str, rows, strict: bool = False) -> tuple:
     return regs, missing
 
 
-def _tracked_pyc(root: str) -> list:
-    """Tracked ``__pycache__``/``.pyc`` artifacts (they have been
-    committed to this repo twice; the bench runner refuses to measure a
-    tree that still ships them).  Empty when git is unavailable."""
-    try:
-        proc = subprocess.run(["git", "ls-files"], cwd=root,
-                              capture_output=True, text=True, timeout=30)
-    except (OSError, subprocess.SubprocessError):
-        return []
-    if proc.returncode != 0:
-        return []
-    return [f for f in proc.stdout.splitlines()
-            if f.endswith(".pyc") or "__pycache__" in f.split("/")]
+def _analysis_findings(root: str) -> list:
+    """Static-analysis pre-flight (``python -m repro.analysis``): the
+    full rule battery, including the tracked-bytecode hygiene check that
+    used to live here as a private ``git ls-files`` filter.  A violating
+    tree can never run the suites, so it can never re-baseline a BENCH
+    json."""
+    from repro.analysis import run_analysis
+    from repro.analysis.__main__ import DEFAULT_PATHS
+    paths = [os.path.join(root, d) for d in DEFAULT_PATHS
+             if os.path.isdir(os.path.join(root, d))]
+    return run_analysis(paths, root=root)
 
 
 def main() -> None:
@@ -121,12 +123,13 @@ def main() -> None:
                             bench_sync_training, roofline)
     from benchmarks.common import ROWS, emit
 
-    pyc = _tracked_pyc(_ROOT)
-    if pyc:
-        print("# TRACKED BYTECODE ARTIFACTS (git rm --cached them; "
-              ".gitignore should cover __pycache__/):", file=sys.stderr)
-        for f in pyc:
-            print(f"#   {f}", file=sys.stderr)
+    findings = _analysis_findings(_ROOT)
+    if findings:
+        print("# STATIC ANALYSIS FINDINGS (python -m repro.analysis "
+              "--strict; fix them or annotate `# repro: allow(<rule>)`):",
+              file=sys.stderr)
+        for f in findings:
+            print(f"#   {f.format()}", file=sys.stderr)
         raise SystemExit(1)
 
     def lgr_suite():

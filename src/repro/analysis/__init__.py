@@ -1,0 +1,83 @@
+"""repro.analysis — static invariant checks for the GMI-DRL codebase.
+
+``python -m repro.analysis [--strict] [--json] [paths...]`` walks the
+given paths (default: ``src/repro benchmarks examples`` under the repo
+root), parses every ``.py`` file, and reports ``file:line`` findings.
+``--strict`` exits non-zero on any finding; ``benchmarks/run.py`` runs
+it as a pre-flight so a violating tree can never re-baseline a BENCH
+json, and ``tests/test_static_analysis.py`` gates tier-1 on a clean
+tree.
+
+Rule reference
+==============
+
+``prng-reuse``
+    A PRNG key consumed by two or more ``jax.random.*`` calls (samplers
+    or ``split``) without an intervening rebind.  ``fold_in`` and
+    ``key``/``PRNGKey`` do not consume; the loop idiom
+    ``normal(fold_in(key, i))`` is clean.  Catches the PR 5
+    ``key``/``PRNGKey`` class of bug mechanically.
+
+``donation-reuse``
+    A variable read after being passed in a ``donate_argnums`` position
+    of a jitted callable (``X = jax.jit(fn, donate_argnums=...)``
+    assignments and ``@jax.jit``/``@partial(jax.jit, ...)``
+    decorations), before reassignment.  The serve engine's same-
+    statement rebind ``tok, self._caches = self._decode(params,
+    self._caches, ...)`` is safe; anything else reading a donated
+    buffer is undefined behavior.
+
+``host-sync-in-hot-path``
+    ``.item()``, ``.block_until_ready()``/``jax.block_until_ready``,
+    ``np.asarray``/``np.array``, non-constant ``float()``, and
+    ``time.*`` calls inside hot code.  Hot = any function under
+    ``kernels/`` or one marked with a ``# repro: hot`` comment on (or
+    right above) its ``def`` line.  Deliberate syncs (the decode loop's
+    single token readback, telemetry clocks) carry
+    ``# repro: allow(host-sync-in-hot-path)``.
+
+``kernel-oracle``
+    Every ``pl.pallas_call`` under ``kernels/`` must belong to a
+    function exercised — directly or via its ``ops.py`` wrapper (import
+    aliases are resolved) — together with a ``ref.py`` oracle in a test
+    under ``tests/``; and every BlockSpec ``index_map`` arity must equal
+    grid rank + ``num_scalar_prefetch``.
+
+``fault-kind``
+    Every kind in ``fault/inject.py::KINDS`` must be referenced by
+    ``fault/supervisor.py`` — injected fault classes the supervisor
+    cannot classify would silently break lossless recovery.
+
+``dead-decision-field``
+    ``Decision``/``ControllerConfig`` dataclass fields never read by
+    any analyzed file (attribute access and ``getattr``/``hasattr``
+    string literals both count as reads) must be deleted or wired up.
+
+``tracked-bytecode``
+    No ``__pycache__``/``.pyc`` artifact tracked by git, and
+    ``.gitignore`` keeps covering ``__pycache__/`` + ``*.py[cod]``.
+    Active only when the analysis root is the git toplevel.
+
+Suppressions
+============
+
+``# repro: allow(<rule>[, <rule>...])`` on the flagged line or the line
+immediately above suppresses those rules there.  ``# repro: hot`` on or
+above a ``def`` marks it hot for ``host-sync-in-hot-path``.
+
+Adding a checker
+================
+
+Subclass :class:`repro.analysis.core.Rule`, set ``name``, implement
+``check_file(SourceFile)`` (per-file) and/or ``finish(Project)``
+(cross-file), and register it in
+:func:`repro.analysis.core.default_rules`.  Add a bad fixture proving
+it fires and a good fixture proving it stays quiet under
+``tests/analysis_fixtures/``.
+"""
+from repro.analysis.core import (Finding, Project, Rule,  # noqa: F401
+                                 SourceFile, default_rules, report,
+                                 run_analysis)
+
+__all__ = ["Finding", "Project", "Rule", "SourceFile", "default_rules",
+           "report", "run_analysis"]

@@ -1,0 +1,349 @@
+"""Cross-file rules: kernel/oracle completeness, fault-kind
+exhaustiveness, dead ``Decision``/``ControllerConfig`` fields, and
+tracked bytecode hygiene.
+
+These run in :meth:`Rule.finish` over the whole analyzed file set; the
+kernel and fault rules additionally read sibling files (``ref.py``,
+``tests/``) from disk so the analyzed paths don't have to include them.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import subprocess
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Project, Rule, SourceFile
+from repro.analysis.rules import dotted
+
+_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _word(name: str, text: str) -> bool:
+    return re.search(rf"\b{re.escape(name)}\b", text) is not None
+
+
+def _read(path: str) -> Optional[str]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            return f.read()
+    except OSError:
+        return None
+
+
+# --------------------------------------------------------- kernel-oracle --
+class KernelOracleRule(Rule):
+    """Every ``pl.pallas_call`` under ``kernels/`` must belong to a
+    function that (directly or through its ``ops.py`` public wrapper) is
+    exercised against a ``ref.py`` oracle in some test under
+    ``<root>/tests/``; and every BlockSpec ``index_map`` arity must
+    equal grid rank + ``num_scalar_prefetch``."""
+    name = "kernel-oracle"
+
+    def finish(self, project: Project) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        kernel_files = [f for f in project.files
+                        if "kernels/" in f.rel
+                        and os.path.basename(f.rel) not in (
+                            "ref.py", "ops.py", "__init__.py")]
+        if not kernel_files:
+            return findings
+        tests_src = self._tests_source(project)
+        for f in kernel_files:
+            wrappers = self._ops_wrappers(project, f)
+            oracles = self._oracles(project, f)
+            for fn in f.tree.body:
+                if not isinstance(fn, _DEFS):
+                    continue
+                calls = [c for c in ast.walk(fn)
+                         if isinstance(c, ast.Call)
+                         and (dotted(c.func) or "").endswith("pallas_call")]
+                if not calls:
+                    continue
+                line = calls[0].lineno
+                names = {fn.name} | wrappers.get(fn.name, set())
+                if not self._paired(names, oracles, tests_src):
+                    findings.append(Finding(
+                        self.name, f.rel, line,
+                        f"kernel '{fn.name}' (pl.pallas_call) has no "
+                        "ref.py oracle exercised together with it in a "
+                        "tests/ parity test"))
+                findings.extend(self._check_index_maps(f, fn, calls))
+        return findings
+
+    # -- pairing ----------------------------------------------------------
+    def _tests_source(self, project: Project) -> List[str]:
+        out = []
+        tests_dir = os.path.join(project.root, "tests")
+        for dirpath, dirnames, filenames in os.walk(tests_dir):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in filenames:
+                if fn.endswith(".py"):
+                    src = _read(os.path.join(dirpath, fn))
+                    if src:
+                        out.append(src)
+        return out
+
+    def _sibling(self, project: Project, f: SourceFile,
+                 basename: str) -> Optional[ast.Module]:
+        rel = f.rel.rsplit("/", 1)[0] + "/" + basename
+        sf = next((x for x in project.files if x.rel == rel), None)
+        if sf is not None:
+            return sf.tree
+        src = _read(os.path.join(os.path.dirname(f.path), basename))
+        if src is None:
+            return None
+        try:
+            return ast.parse(src)
+        except SyntaxError:
+            return None
+
+    def _ops_wrappers(self, project: Project,
+                      f: SourceFile) -> Dict[str, Set[str]]:
+        """kernel function name -> public ops.py wrapper names."""
+        tree = self._sibling(project, f, "ops.py")
+        if tree is None:
+            return {}
+        alias_to_orig: Dict[str, str] = {}
+        for node in tree.body:
+            if isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if alias.asname:
+                        alias_to_orig[alias.asname] = alias.name
+        wrappers: Dict[str, Set[str]] = {}
+        for node in tree.body:
+            if isinstance(node, _DEFS):
+                used = {n.id for n in ast.walk(node)
+                        if isinstance(n, ast.Name)}
+                for alias, orig in alias_to_orig.items():
+                    if alias in used:
+                        wrappers.setdefault(orig, set()).add(node.name)
+        return wrappers
+
+    def _oracles(self, project: Project, f: SourceFile) -> List[str]:
+        tree = self._sibling(project, f, "ref.py")
+        if tree is None:
+            return []
+        return [n.name for n in tree.body
+                if isinstance(n, _DEFS) and n.name.endswith("_ref")]
+
+    def _paired(self, names: Set[str], oracles: List[str],
+                tests_src: List[str]) -> bool:
+        for src in tests_src:
+            if any(_word(n, src) for n in names) \
+                    and any(_word(o, src) for o in oracles):
+                return True
+        return False
+
+    # -- index_map arity --------------------------------------------------
+    def _check_index_maps(self, f: SourceFile, fn: ast.AST,
+                          calls: List[ast.Call]) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        grid_rank, prefetch = self._grid_of(fn, calls)
+        if grid_rank is None:
+            return findings
+        expected = grid_rank + prefetch
+        local_defs = {n.name: n for n in ast.walk(fn)
+                      if isinstance(n, _DEFS)}
+        for spec in ast.walk(fn):
+            if not (isinstance(spec, ast.Call)
+                    and (dotted(spec.func) or "").endswith("BlockSpec")):
+                continue
+            imap = next((kw.value for kw in spec.keywords
+                         if kw.arg == "index_map"), None)
+            if imap is None:
+                imap = next((a for a in spec.args
+                             if isinstance(a, ast.Lambda)), None)
+            if imap is None and len(spec.args) >= 2 \
+                    and isinstance(spec.args[1], ast.Name) \
+                    and spec.args[1].id in local_defs:
+                imap = local_defs[spec.args[1].id]
+            if imap is None:
+                continue
+            args = imap.args
+            if args.vararg is not None:
+                continue
+            arity = len(args.posonlyargs) + len(args.args)
+            if arity != expected:
+                findings.append(Finding(
+                    self.name, f.rel, spec.lineno,
+                    f"BlockSpec index_map takes {arity} args but the "
+                    f"grid has rank {grid_rank} with {prefetch} scalar-"
+                    f"prefetch operands (expected {expected})"))
+        return findings
+
+    def _grid_of(self, fn: ast.AST,
+                 calls: List[ast.Call]) -> Tuple[Optional[int], int]:
+        """(grid rank, num_scalar_prefetch) resolved from the pallas_call
+        subtree, or (None, 0) if the grid is not statically a tuple."""
+        consts: Dict[str, ast.expr] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                consts[node.targets[0].id] = node.value
+        # search the call subtrees plus any grid_spec built earlier in
+        # the function and passed by name (the paged-decode idiom)
+        trees: List[ast.AST] = list(calls)
+        for call in calls:
+            for kw in call.keywords:
+                if kw.arg == "grid_spec" and isinstance(kw.value, ast.Name):
+                    resolved = consts.get(kw.value.id)
+                    if resolved is not None:
+                        trees.append(resolved)
+        grid_node = None
+        prefetch = 0
+        for tree in trees:
+            for sub in ast.walk(tree):
+                if not isinstance(sub, ast.Call):
+                    continue
+                for kw in sub.keywords:
+                    if kw.arg == "grid" and grid_node is None:
+                        grid_node = kw.value
+                    elif kw.arg == "num_scalar_prefetch":
+                        v = kw.value
+                        if isinstance(v, ast.Constant) \
+                                and isinstance(v.value, int):
+                            prefetch = v.value
+        if isinstance(grid_node, ast.Name):
+            grid_node = consts.get(grid_node.id)
+        if isinstance(grid_node, (ast.Tuple, ast.List)):
+            return len(grid_node.elts), prefetch
+        if isinstance(grid_node, ast.Constant) \
+                and isinstance(grid_node.value, int):
+            return 1, prefetch
+        return None, prefetch
+
+
+# ------------------------------------------------------------ fault-kind --
+class FaultKindRule(Rule):
+    """Every fault kind declared in ``fault/inject.py::KINDS`` must
+    appear (as a string literal) in ``fault/supervisor.py`` — the
+    supervisor's classification/recovery must stay exhaustive."""
+    name = "fault-kind"
+
+    def finish(self, project: Project) -> Iterable[Finding]:
+        inject = project.find("fault/inject.py")
+        if inject is None:
+            return []
+        kinds_node = None
+        for node in inject.tree.body:
+            if isinstance(node, ast.Assign) \
+                    and any(isinstance(t, ast.Name) and t.id == "KINDS"
+                            for t in node.targets):
+                kinds_node = node
+        if kinds_node is None or not isinstance(
+                kinds_node.value, (ast.Tuple, ast.List)):
+            return []
+        kinds = [e.value for e in kinds_node.value.elts
+                 if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+        sup = project.find("fault/supervisor.py")
+        if sup is not None:
+            sup_tree = sup.tree
+        else:
+            src = _read(os.path.join(os.path.dirname(inject.path),
+                                     "supervisor.py"))
+            if src is None:
+                return [Finding(self.name, inject.rel, kinds_node.lineno,
+                                "fault/supervisor.py not found next to "
+                                "inject.py; fault kinds have no handler")]
+            sup_tree = ast.parse(src)
+        handled = {n.value for n in ast.walk(sup_tree)
+                   if isinstance(n, ast.Constant)
+                   and isinstance(n.value, str)}
+        return [Finding(self.name, inject.rel, kinds_node.lineno,
+                        f"fault kind '{k}' is declared in KINDS but never "
+                        "referenced by the supervisor — recovery is not "
+                        "exhaustive")
+                for k in kinds if k not in handled]
+
+
+# --------------------------------------------------- dead-decision-field --
+class DeadDecisionFieldRule(Rule):
+    """Fields of the controller's ``Decision``/``ControllerConfig``
+    dataclasses that no analyzed file ever reads (no attribute access,
+    no ``getattr(x, "field")``) are dead weight in the control plane."""
+    name = "dead-decision-field"
+    target_classes = ("Decision", "ControllerConfig")
+
+    def finish(self, project: Project) -> Iterable[Finding]:
+        decls: List[Tuple[SourceFile, str, str, int]] = []
+        for f in project.files:
+            for node in f.tree.body:
+                if isinstance(node, ast.ClassDef) \
+                        and node.name in self.target_classes:
+                    for item in node.body:
+                        if isinstance(item, ast.AnnAssign) \
+                                and isinstance(item.target, ast.Name) \
+                                and not item.target.id.startswith("_"):
+                            ann = ast.dump(item.annotation)
+                            if "ClassVar" in ann:
+                                continue
+                            decls.append((f, node.name, item.target.id,
+                                          item.lineno))
+        if not decls:
+            return []
+        read: Set[str] = set()
+        for f in project.files:
+            for node in ast.walk(f.tree):
+                if isinstance(node, ast.Attribute) \
+                        and isinstance(node.ctx, ast.Load):
+                    read.add(node.attr)
+                elif isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in ("getattr", "hasattr"):
+                    if len(node.args) >= 2 \
+                            and isinstance(node.args[1], ast.Constant) \
+                            and isinstance(node.args[1].value, str):
+                        read.add(node.args[1].value)
+        return [Finding(self.name, f.rel, line,
+                        f"{cls}.{field} is never read by any analyzed "
+                        "file (no attribute access or getattr); delete "
+                        "it or wire it up")
+                for f, cls, field, line in decls if field not in read]
+
+
+# ------------------------------------------------------ tracked-bytecode --
+def _git(root: str, *argv: str) -> Optional[str]:
+    try:
+        proc = subprocess.run(["git", *argv], cwd=root,
+                              capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return proc.stdout if proc.returncode == 0 else None
+
+
+class TrackedBytecodeRule(Rule):
+    """No ``__pycache__``/``.pyc`` artifact may be tracked by git, and
+    ``.gitignore`` must keep covering bytecode patterns.  Only applies
+    when the analysis root IS a git toplevel (it has happened twice:
+    8436fa0 removed six tracked .pyc, bd262a9 re-committed them)."""
+    name = "tracked-bytecode"
+
+    def finish(self, project: Project) -> Iterable[Finding]:
+        root = project.root
+        top = _git(root, "rev-parse", "--show-toplevel")
+        if top is None or os.path.realpath(top.strip()) \
+                != os.path.realpath(root):
+            return []
+        findings: List[Finding] = []
+        listed = _git(root, "ls-files")
+        for path in (listed or "").splitlines():
+            if path.endswith((".pyc", ".pyo")) \
+                    or "__pycache__" in path.split("/"):
+                findings.append(Finding(
+                    self.name, path, 1,
+                    "bytecode artifact is tracked by git; `git rm "
+                    "--cached` it"))
+        gi = _read(os.path.join(root, ".gitignore")) or ""
+        patterns = [ln.strip() for ln in gi.splitlines()
+                    if ln.strip() and not ln.lstrip().startswith("#")]
+        if "__pycache__/" not in patterns:
+            findings.append(Finding(
+                self.name, ".gitignore", 1,
+                "missing a `__pycache__/` ignore pattern"))
+        if not any(p in ("*.pyc", "*.py[cod]") for p in patterns):
+            findings.append(Finding(
+                self.name, ".gitignore", 1,
+                "missing a `*.pyc`/`*.py[cod]` ignore pattern"))
+        return findings

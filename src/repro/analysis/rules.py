@@ -1,0 +1,453 @@
+"""Per-file AST rules: PRNG key discipline, donated-buffer reuse, and
+host syncs in hot paths.
+
+Each rule runs a small linear abstract interpretation over every
+function body (and the module body): statements execute in order against
+a per-name state dict, ``if``/``try`` branches run on copies and merge
+pessimistically, and loop bodies run twice (findings deduped) so
+cross-iteration reuse is caught without a fixpoint.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Rule, SourceFile
+
+_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef)
+_LOOPS = (ast.For, ast.AsyncFor, ast.While)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _target_names(target: ast.AST) -> Iterable[str]:
+    """Dotted names (re)bound by an assignment target."""
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _target_names(elt)
+    elif isinstance(target, ast.Starred):
+        yield from _target_names(target.value)
+    else:
+        d = dotted(target)
+        if d:
+            yield d
+
+
+def _stmt_targets(stmt: ast.stmt) -> Iterable[str]:
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            yield from _target_names(t)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        yield from _target_names(stmt.target)
+    elif isinstance(stmt, ast.Delete):
+        for t in stmt.targets:
+            yield from _target_names(t)
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        yield from _target_names(stmt.target)
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        for item in stmt.items:
+            if item.optional_vars is not None:
+                yield from _target_names(item.optional_vars)
+
+
+def _walrus_targets(expr: ast.AST) -> Iterable[str]:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.NamedExpr):
+            yield from _target_names(node.target)
+
+
+def _stmt_exprs(stmt: ast.stmt) -> Iterable[ast.AST]:
+    """The value expressions a statement evaluates (left-to-right-ish),
+    excluding nested function/class bodies."""
+    if isinstance(stmt, _DEFS + (ast.ClassDef,)):
+        return
+    for fld, value in ast.iter_fields(stmt):
+        if fld in ("body", "orelse", "finalbody", "handlers", "target",
+                   "targets"):
+            continue
+        if isinstance(value, ast.expr):
+            yield value
+        elif isinstance(value, list):
+            for v in value:
+                if isinstance(v, ast.expr):
+                    yield v
+                elif isinstance(v, ast.withitem):
+                    yield v.context_expr
+                elif isinstance(v, ast.keyword):
+                    yield v.value
+
+
+def _terminates(stmts: List[ast.stmt]) -> bool:
+    """A block whose last statement leaves the scope doesn't merge its
+    state back into the fall-through path."""
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue))
+
+
+def _calls_in(expr: ast.AST) -> List[ast.Call]:
+    out: List[ast.Call] = []
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, (ast.Lambda,) + _DEFS):
+            return  # deferred bodies don't execute here
+        if isinstance(node, ast.Call):
+            out.append(node)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return out
+
+
+class _Interp:
+    """Shared linear-interpretation driver.  Subclass hooks:
+    ``on_exprs(exprs, state, stmt)`` runs for each statement's value
+    expressions *before* its targets reset state."""
+
+    def __init__(self, f: SourceFile):
+        self.f = f
+        self.findings: Dict[Tuple[int, str], Finding] = {}
+
+    def emit(self, rule: str, line: int, key: str, message: str) -> None:
+        self.findings.setdefault(
+            (line, key), Finding(rule, self.f.rel, line, message))
+
+    def on_exprs(self, exprs: List[ast.AST], state: dict,
+                 stmt: ast.stmt) -> None:
+        raise NotImplementedError
+
+    def merge(self, state: dict, branches: List[dict]) -> None:
+        """Pessimistic union: keep a name's entry if any branch kept or
+        created it; per-entry max by natural ordering."""
+        state.clear()
+        for b in branches:
+            for k, v in b.items():
+                if k in state:
+                    state[k] = max(state[k], v)
+                else:
+                    state[k] = v
+
+    def run_block(self, stmts: List[ast.stmt], state: dict) -> None:
+        for stmt in stmts:
+            self.run_stmt(stmt, state)
+
+    def run_stmt(self, stmt: ast.stmt, state: dict) -> None:
+        if isinstance(stmt, _DEFS + (ast.ClassDef,)):
+            return
+        exprs = list(_stmt_exprs(stmt))
+        if exprs:
+            self.on_exprs(exprs, state, stmt)
+        for name in _stmt_targets(stmt):
+            state.pop(name, None)
+        for expr in exprs:
+            for name in _walrus_targets(expr):
+                state.pop(name, None)
+        if isinstance(stmt, ast.If):
+            branches = []
+            b1 = dict(state)
+            self.run_block(stmt.body, b1)
+            if not _terminates(stmt.body):
+                branches.append(b1)
+            b2 = dict(state)
+            self.run_block(stmt.orelse, b2)
+            if not _terminates(stmt.orelse):
+                branches.append(b2)
+            if branches:
+                self.merge(state, branches)
+            else:
+                state.clear()    # fall-through is unreachable
+        elif isinstance(stmt, _LOOPS):
+            # two passes catch cross-iteration reuse; findings dedupe
+            for _ in range(2):
+                self.run_block(stmt.body, state)
+            self.run_block(stmt.orelse, state)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            self.run_block(stmt.body, state)
+        elif isinstance(stmt, ast.Try):
+            branches = []
+            b = dict(state)
+            self.run_block(stmt.body, b)
+            bo = dict(b)
+            self.run_block(stmt.orelse, bo)
+            branches.append(bo)
+            for handler in stmt.handlers:
+                bh = dict(state)
+                if handler.name:
+                    bh.pop(handler.name, None)
+                self.run_block(handler.body, bh)
+                branches.append(bh)
+            self.merge(state, branches)
+            self.run_block(stmt.finalbody, state)
+
+    def run_file(self) -> List[Finding]:
+        scopes: List[List[ast.stmt]] = [list(self.f.tree.body)]
+        for node in ast.walk(self.f.tree):
+            if isinstance(node, _DEFS):
+                scopes.append(list(node.body))
+        for body in scopes:
+            self.run_block(body, {})
+        return sorted(self.findings.values(),
+                      key=lambda fd: (fd.line, fd.message))
+
+
+# ------------------------------------------------------------ prng-reuse --
+_PRNG_CREATORS = {"key", "PRNGKey"}
+_PRNG_NONCONSUMING = {"fold_in", "key_data", "wrap_key_data", "clone",
+                      "key_impl", "default_prng_impl"}
+
+
+def _jax_random_prefixes(tree: ast.Module) -> Set[str]:
+    """Module paths that resolve to ``jax.random`` in this file."""
+    prefixes = {"jax.random"}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "jax.random" and alias.asname:
+                    prefixes.add(alias.asname)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for alias in node.names:
+                    if alias.name == "random":
+                        prefixes.add(alias.asname or "random")
+    return prefixes
+
+
+class _PrngInterp(_Interp):
+    name = "prng-reuse"
+
+    def __init__(self, f: SourceFile):
+        super().__init__(f)
+        self.prefixes = _jax_random_prefixes(f.tree)
+
+    def _jax_random_fn(self, call: ast.Call) -> Optional[str]:
+        d = dotted(call.func)
+        if d is None or "." not in d:
+            return None
+        mod, fn = d.rsplit(".", 1)
+        return fn if mod in self.prefixes else None
+
+    def on_exprs(self, exprs, state, stmt):
+        # state: key name -> (uses since derivation, line of last use)
+        for expr in exprs:
+            for call in _calls_in(expr):
+                fn = self._jax_random_fn(call)
+                if fn is None or fn in _PRNG_CREATORS \
+                        or fn in _PRNG_NONCONSUMING:
+                    continue
+                if not call.args or not isinstance(call.args[0], ast.Name):
+                    continue
+                name = call.args[0].id
+                uses, last = state.get(name, (0, 0))
+                if uses >= 1:
+                    self.emit(
+                        self.name, call.lineno, name,
+                        f"PRNG key '{name}' consumed again by jax.random."
+                        f"{fn} (already used at line {last}); derive a "
+                        "fresh key with split/fold_in")
+                state[name] = (uses + 1, call.lineno)
+
+
+class PrngReuseRule(Rule):
+    """A key passed to ≥2 consuming ``jax.random.*`` calls (samplers or
+    ``split``) without being rebound by ``split``/``fold_in`` in
+    between.  ``fold_in`` does not consume its key."""
+    name = "prng-reuse"
+
+    def check_file(self, f: SourceFile) -> Iterable[Finding]:
+        return _PrngInterp(f).run_file()
+
+
+# -------------------------------------------------------- donation-reuse --
+def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """donate_argnums of a ``jax.jit(...)`` call, else None."""
+    d = dotted(call.func)
+    if d not in ("jax.jit", "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for elt in v.elts:
+                    if isinstance(elt, ast.Constant) \
+                            and isinstance(elt.value, int):
+                        out.append(elt.value)
+                return tuple(out)
+    return None
+
+
+def _collect_donating_callables(tree: ast.Module) -> Dict[str,
+                                                          Tuple[int, ...]]:
+    """Dotted callable name -> donated positional indices, from
+    ``X = jax.jit(fn, donate_argnums=...)`` assignments and
+    ``@jax.jit``/``@partial(jax.jit, ...)`` decorations."""
+    donating: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            pos = _donate_positions(node.value)
+            if pos:
+                for t in node.targets:
+                    d = dotted(t)
+                    if d:
+                        donating[d] = pos
+        elif isinstance(node, _DEFS):
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                pos = _donate_positions(dec)
+                if pos is None and dotted(dec.func) in (
+                        "partial", "functools.partial") and dec.args \
+                        and dotted(dec.args[0]) in ("jax.jit", "jit"):
+                    for kw in dec.keywords:
+                        if kw.arg == "donate_argnums":
+                            fake = ast.Call(
+                                func=dec.args[0], args=[],
+                                keywords=[kw])
+                            pos = _donate_positions(fake)
+                if pos:
+                    donating[node.name] = pos
+    return donating
+
+
+class _DonationInterp(_Interp):
+    name = "donation-reuse"
+
+    def __init__(self, f: SourceFile):
+        super().__init__(f)
+        self.donating = _collect_donating_callables(f.tree)
+
+    def on_exprs(self, exprs, state, stmt):
+        # state: dotted var -> line it was donated at
+        for expr in exprs:
+            deaths: List[Tuple[str, int]] = []
+            for node in ast.walk(expr):
+                if isinstance(node, (ast.Name, ast.Attribute)) \
+                        and isinstance(node.ctx, ast.Load):
+                    d = dotted(node)
+                    if d in state:
+                        self.emit(
+                            self.name, node.lineno, d,
+                            f"'{d}' read after being donated to a jitted "
+                            f"call at line {state[d]}; donated buffers "
+                            "are invalidated")
+                if isinstance(node, ast.Call):
+                    pos = self.donating.get(dotted(node.func) or "")
+                    if pos:
+                        for p in pos:
+                            if p < len(node.args):
+                                d = dotted(node.args[p])
+                                if d:
+                                    deaths.append((d, node.lineno))
+            for d, line in deaths:
+                state.setdefault(d, line)
+
+
+class DonationReuseRule(Rule):
+    """A variable read after being passed in a ``donate_argnums``
+    position of a jitted callable, before reassignment.  The idiomatic
+    ``tok, self._caches = self._decode(params, self._caches, ...)``
+    same-statement rebind is safe."""
+    name = "donation-reuse"
+
+    def check_file(self, f: SourceFile) -> Iterable[Finding]:
+        return _DonationInterp(f).run_file()
+
+
+# ------------------------------------------------- host-sync-in-hot-path --
+def _numpy_aliases(tree: ast.Module) -> Set[str]:
+    out = {"np", "numpy"}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "numpy" and alias.asname:
+                    out.add(alias.asname)
+    return out
+
+
+def _time_names(tree: ast.Module) -> Tuple[Set[str], Set[str]]:
+    """(module aliases of ``time``, bare names imported from ``time``)."""
+    mods = {"time"}
+    bare: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "time" and alias.asname:
+                    mods.add(alias.asname)
+        elif isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                bare.add(alias.asname or alias.name)
+    return mods, bare
+
+
+class HostSyncRule(Rule):
+    """Host-synchronizing constructs (``.item()``,
+    ``.block_until_ready()``, ``np.asarray``, non-constant ``float()``,
+    ``time.*``) inside hot code: functions marked ``# repro: hot`` or
+    anything under ``kernels/``."""
+    name = "host-sync-in-hot-path"
+
+    def check_file(self, f: SourceFile) -> Iterable[Finding]:
+        file_hot = "kernels/" in f.rel or f.rel.startswith("kernels/")
+        np_aliases = _numpy_aliases(f.tree)
+        time_mods, time_bare = _time_names(f.tree)
+        findings: List[Finding] = []
+
+        def check_call(call: ast.Call) -> None:
+            d = dotted(call.func)
+            msg = None
+            if isinstance(call.func, ast.Attribute):
+                if call.func.attr == "item" and not call.args:
+                    msg = ".item() forces a device->host sync"
+                elif call.func.attr == "block_until_ready":
+                    msg = ".block_until_ready() blocks on the device"
+            if msg is None and d is not None:
+                if "." in d:
+                    mod, fn = d.rsplit(".", 1)
+                    if mod in np_aliases and fn in ("asarray", "array"):
+                        msg = f"{d}() copies device data to the host"
+                    elif mod in time_mods:
+                        msg = f"{d}() is host-side timing"
+                elif d in time_bare:
+                    msg = f"{d}() (from time) is host-side timing"
+                elif d == "float" and call.args and not isinstance(
+                        call.args[0], ast.Constant):
+                    msg = "float() on a non-constant forces a " \
+                          "device->host sync"
+            if msg is not None:
+                findings.append(Finding(
+                    self.name, f.rel, call.lineno,
+                    msg + "; hoist it out of the hot path or annotate "
+                    "`# repro: allow(host-sync-in-hot-path)`"))
+
+        def scan_stmts(stmts: List[ast.stmt], hot: bool) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, _DEFS):
+                    scan_stmts(stmt.body,
+                               hot or file_hot or f.is_hot_marked(stmt))
+                    continue
+                if isinstance(stmt, ast.ClassDef):
+                    scan_stmts(stmt.body, hot)
+                    continue
+                if hot:
+                    for expr in _stmt_exprs(stmt):
+                        for call in _calls_in(expr):
+                            check_call(call)
+                for fld in ("body", "orelse", "finalbody"):
+                    scan_stmts(getattr(stmt, fld, []) or [], hot)
+                for handler in getattr(stmt, "handlers", []) or []:
+                    scan_stmts(handler.body, hot)
+
+        scan_stmts(list(f.tree.body), False)
+        return findings

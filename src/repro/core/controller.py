@@ -108,7 +108,6 @@ class Decision:
     num_env: int
     gmi_per_gpu: int
     serving_gpus: int
-    projected_throughput: float
     reason: str
     # set when the measured reduce time says the LGR schedule should
     # change; applied by the runner via Communicator.switch (no model
@@ -385,9 +384,6 @@ class OnlineGMIController:
         decision = Decision(num_env=self.num_env,
                             gmi_per_gpu=self.gmi_per_gpu,
                             serving_gpus=serving,
-                            projected_throughput=sum(
-                                l.tokens for l in rounds) / max(
-                                sum(l.dt for l in rounds), 1e-12),
                             reason=reason, slots=slots,
                             prefill_gpus=prefill if disagg else None,
                             layout_changed=layout_changed,
@@ -522,7 +518,6 @@ class OnlineGMIController:
                           or gmi_per_gpu != self.gmi_per_gpu)
         decision = Decision(num_env=num_env, gmi_per_gpu=gmi_per_gpu,
                             serving_gpus=serving,
-                            projected_throughput=max(best_top, cur_top),
                             reason=reason,
                             reduction_strategy=reduction_strategy,
                             layout_changed=layout_changed,

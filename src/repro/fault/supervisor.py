@@ -290,7 +290,7 @@ class FleetSupervisor:
         decision = Decision(num_env=self.runner.num_envs,
                             gmi_per_gpu=self.gmi_per_gpu,
                             serving_gpus=self.serving_gpus,
-                            projected_throughput=0.0, reason=reason)
+                            reason=reason)
         self.layout = self.runner.replan(decision, layout=layout) or layout
         # clone_for starts the new pipeline without hooks — re-arm
         self._install_pipe_hook()

@@ -9,6 +9,7 @@ policy; trainers consume experience batches in arrival order.
 """
 from __future__ import annotations
 
+import time
 from typing import NamedTuple
 
 import jax
@@ -204,6 +205,7 @@ class AsyncRunner:
             self.actors[a] = [es, obs,
                               jax.random.PRNGKey(self.seed + 100 + a)]
 
+    # repro: hot
     def _train(self, routed):
         """Consume routed trainer batches; returns (losses, staleness)."""
         losses, stale = [], []
@@ -239,18 +241,23 @@ class AsyncRunner:
                 self.poisoned_samples += int(exp.rewards.size)
                 continue
             self.params, self.opt_state = new_params, new_opt
-            losses.append(float(loss))
+            # keep the loss on device: a float() here would sync the
+            # trainer stream once per batch (host-sync-in-hot-path)
+            losses.append(loss)
             self.trained_samples += int(exp.rewards.size)
             self.version = self.version + 1
-        return losses, stale
+        # single post-loop drain of the queued losses
+        return ([float(x)  # repro: allow(host-sync-in-hot-path)
+                 for x in jax.device_get(losses)], stale)
 
+    # repro: hot
     def round(self):
         """One serve -> ship -> train round; returns (losses, staleness).
 
         With overlap on, the trained batches are the previous round's
         flush (the first round returns no losses)."""
-        import time
-        t0 = time.perf_counter()
+        # round-duration telemetry feeds the controller's ladder
+        t0 = time.perf_counter()  # repro: allow(host-sync-in-hot-path)
         for a in self.serving_gmis:
             if self.fault_hook is not None:
                 # a kill here loses only THIS GMI's not-yet-collected
@@ -270,6 +277,7 @@ class AsyncRunner:
         if self.controller is not None:
             decision = self.controller.observe_pipeline(
                 self.pipe, samples=self.trained_samples - before,
+                # repro: allow(host-sync-in-hot-path)
                 dt=time.perf_counter() - t0)
             if decision is not None:
                 if decision.layout_changed:

@@ -964,6 +964,7 @@ class ServeEngine:
             self._prefill_batch([(req, slot, [], None)], done)
         return done
 
+    # repro: hot
     def step(self) -> List[Completion]:
         """Admit from the queue, advance chunked prefills, run ONE batched
         decode step, retire finished requests.  Returns this step's
@@ -991,14 +992,18 @@ class ServeEngine:
                   if s is not None and not s.prefilling]
         if not active:
             return done
-        t0 = time.perf_counter()
+        # per-step decode timing is the telemetry the controller plans
+        # from; the token readback is the ONE unavoidable sync per step
+        # (continuous batching needs the ids host-side to retire slots)
+        t0 = time.perf_counter()  # repro: allow(host-sync-in-hot-path)
         table = self._table_device() if self.paged else None
         tok, self._caches = self._decode(
             self.params, self._caches, *self._put(
                 (jnp.asarray(self._tok), jnp.asarray(self._pos),
                  jnp.asarray(self._seed), jnp.asarray(self._temp))), table)
+        # repro: allow(host-sync-in-hot-path)
         tok_host = np.asarray(jax.block_until_ready(tok))
-        dt = time.perf_counter() - t0
+        dt = time.perf_counter() - t0  # repro: allow(host-sync-in-hot-path)
         emitted = 0
         for i in active:
             st = self._slots[i]

@@ -1,0 +1,12 @@
+"""Bad fixture: Decision carries a field nothing ever reads."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Decision:
+    num_env: int
+    vestigial_estimate: float = 0.0   # BAD: never read below
+
+
+def apply_decision(d):
+    return d.num_env

@@ -1,0 +1,15 @@
+"""Good fixture: every Decision field is consumed — one via attribute
+access, one only through a getattr string (which must count)."""
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass
+class Decision:
+    num_env: int
+    maybe_slots: Optional[int] = None
+
+
+def apply_decision(d):
+    slots = getattr(d, "maybe_slots", None)
+    return d.num_env, slots

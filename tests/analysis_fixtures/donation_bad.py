@@ -1,0 +1,23 @@
+"""Bad fixture: reads of buffers already donated to jitted calls."""
+import functools
+
+import jax
+
+step = jax.jit(lambda params, caches: (params[0], caches),
+               donate_argnums=(1,))
+
+
+def read_after_donation(params, caches):
+    tok, new_caches = step(params, caches)
+    stale = caches.sum()            # BAD: caches was donated above
+    return tok, new_caches, stale
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def consume(buf, x):
+    return buf + x
+
+
+def read_after_decorated_donation(buf, x):
+    out = consume(buf, x)
+    return out, buf.mean()          # BAD: buf was donated above

@@ -1,0 +1,21 @@
+"""Good fixture: donated buffers rebound in the same statement (the
+serve engine's idiom) or simply never read again."""
+import jax
+
+step = jax.jit(lambda params, caches: (params[0], caches),
+               donate_argnums=(1,))
+
+
+def same_statement_rebind(params, caches):
+    tok, caches = step(params, caches)
+    return tok, caches.sum()        # fine: caches is the NEW buffer
+
+
+def never_read_again(params, caches):
+    tok, new_caches = step(params, caches)
+    return tok, new_caches
+
+
+def non_donated_position(params, caches):
+    tok, new_caches = step(params, caches)
+    return tok, new_caches, params  # params (arg 0) was not donated

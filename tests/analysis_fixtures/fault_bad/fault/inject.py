@@ -1,0 +1,2 @@
+"""Bad fixture: 'mystery_kind' has no supervisor branch."""
+KINDS = ("kill_serving", "engine_fail", "mystery_kind")

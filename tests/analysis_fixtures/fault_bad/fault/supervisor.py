@@ -1,0 +1,9 @@
+"""Handles only two of the three declared kinds."""
+
+
+def classify(kind):
+    if kind == "kill_serving":
+        return "requeue"
+    if kind == "engine_fail":
+        return "quarantine"
+    return None

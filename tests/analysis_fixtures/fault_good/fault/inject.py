@@ -1,0 +1,2 @@
+"""Good fixture: every kind is classified by the supervisor."""
+KINDS = ("kill_serving", "engine_fail")

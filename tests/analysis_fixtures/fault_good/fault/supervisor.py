@@ -1,0 +1,5 @@
+"""Handles every declared kind."""
+
+
+def classify(kind):
+    return {"kill_serving": "requeue", "engine_fail": "quarantine"}[kind]

@@ -1,0 +1,16 @@
+"""Bad fixture: host syncs inside a # repro: hot function."""
+import time
+
+import jax
+import numpy as np
+
+
+# repro: hot
+def decode_loop(xs):
+    t0 = time.perf_counter()        # BAD: host timing in hot path
+    host = np.asarray(xs)           # BAD: device->host copy
+    xs.block_until_ready()          # BAD: blocks on the device
+    jax.block_until_ready(xs)       # BAD: same, module form
+    v = xs.item()                   # BAD: scalar readback
+    f = float(xs)                   # BAD: scalar readback
+    return host, v, f, time.perf_counter() - t0

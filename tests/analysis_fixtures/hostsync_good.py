@@ -1,0 +1,26 @@
+"""Good fixture: the same constructs are fine in unmarked functions,
+and fine in hot functions when deliberately allowed."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def cold_telemetry(xs):
+    # not hot: syncs here are nobody's business
+    t0 = time.perf_counter()
+    host = np.asarray(xs)
+    return host, time.perf_counter() - t0
+
+
+# repro: hot
+def hot_but_pure(xs):
+    return jnp.tanh(xs) + 1.0, float(3.5)   # constant float() is fine
+
+
+# repro: hot
+def hot_with_deliberate_sync(xs):
+    t0 = time.perf_counter()  # repro: allow(host-sync-in-hot-path)
+    # repro: allow(host-sync-in-hot-path)
+    host = np.asarray(xs)
+    return host, t0

@@ -1,0 +1,16 @@
+"""Bad fixture: a pallas_call kernel with no oracle pairing and an
+index_map whose arity disagrees with the grid rank."""
+from jax.experimental import pallas as pl
+
+
+def orphan_kernel(x):
+    def body(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    return pl.pallas_call(
+        body,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],   # arity 1, rank 2
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=x,
+    )(x)

@@ -1,0 +1,37 @@
+"""Good fixture: kernels paired with ref.py oracles through ops.py
+wrappers, index_map arities matching grid rank (+ scalar prefetch)."""
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def covered_kernel(x):
+    def body(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    grid = (4,)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=x,
+    )(x)
+
+
+def prefetch_kernel(tbl, x):
+    def body(tbl_ref, x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def row(i, j, tbl):
+        return (i, 0)
+
+    return pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(4, 2),
+            in_specs=[pl.BlockSpec((1, 8), row)],
+            out_specs=pl.BlockSpec((1, 8), lambda i, j, tbl: (i, 0)),
+        ),
+        out_shape=x,
+    )(tbl, x)

@@ -1,0 +1,9 @@
+"""Oracles for the good kernel fixture."""
+
+
+def covered_kernel_ref(x):
+    return x
+
+
+def prefetch_kernel_ref(tbl, x):
+    return x

@@ -1,0 +1,21 @@
+"""Bad fixture: every function here violates prng-reuse."""
+import jax
+
+
+def sequential_reuse(key):
+    a = jax.random.normal(key, (2,))
+    b = jax.random.normal(key, (2,))    # BAD: second consumption
+    return a, b
+
+
+def split_after_sampling(key):
+    a = jax.random.normal(key, (2,))
+    ks = jax.random.split(key, 2)       # BAD: split of an already-used key
+    return a, ks
+
+
+def loop_reuse(key):
+    out = []
+    for i in range(4):
+        out.append(jax.random.uniform(key, (3,)))   # BAD: cross-iteration
+    return out

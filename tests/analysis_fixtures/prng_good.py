@@ -1,0 +1,33 @@
+"""Good fixture: idiomatic key discipline; prng-reuse stays quiet."""
+import jax
+
+
+def split_first(key):
+    ka, kb = jax.random.split(key)
+    return jax.random.normal(ka, (2,)), jax.random.normal(kb, (2,))
+
+
+def fold_in_loop(key):
+    out = []
+    for i in range(4):
+        out.append(jax.random.uniform(jax.random.fold_in(key, i), (3,)))
+    return out
+
+
+def rebind_through_split(key):
+    a_key, key = jax.random.split(key)
+    a = jax.random.normal(a_key, (2,))
+    b_key, key = jax.random.split(key)
+    return a, jax.random.normal(b_key, (2,))
+
+
+def exclusive_branches(key, flag):
+    if flag:
+        return jax.random.normal(key, (2,))
+    return jax.random.uniform(key, (2,))
+
+
+def fresh_keys():
+    a = jax.random.normal(jax.random.key(0), (2,))
+    b = jax.random.normal(jax.random.key(1), (2,))
+    return a, b

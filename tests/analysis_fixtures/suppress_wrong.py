@@ -1,0 +1,8 @@
+"""An allow() naming a DIFFERENT rule must not suppress prng-reuse."""
+import jax
+
+
+def wrong_rule_allow(key):
+    a = jax.random.normal(key, (2,))
+    b = jax.random.normal(key, (2,))  # repro: allow(donation-reuse)
+    return a, b

@@ -20,7 +20,9 @@ if ROOT not in sys.path:
     sys.path.insert(0, ROOT)
 
 from benchmarks.run import (REGRESSION_FACTOR,  # noqa: E402
-                            _check_regressions, _tracked_pyc)
+                            _check_regressions)
+from repro.analysis import run_analysis  # noqa: E402
+from repro.analysis.project import TrackedBytecodeRule  # noqa: E402
 
 
 def _write_baseline(path, rows):
@@ -105,8 +107,9 @@ def test_no_tracked_bytecode_artifacts():
     bad = [f for f in files
            if f.endswith(".pyc") or "__pycache__" in f.split("/")]
     assert not bad, f"tracked bytecode artifacts: {bad}"
-    # the bench runner's pre-flight check agrees
-    assert _tracked_pyc(ROOT) == []
+    # the analyzer rule run.py's pre-flight delegates to agrees
+    assert run_analysis([], root=ROOT,
+                        rules=[TrackedBytecodeRule()]) == []
 
 
 def test_gitignore_covers_bytecode():

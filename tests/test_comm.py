@@ -674,8 +674,7 @@ def test_async_runner_replan_switches_strategy_keeps_model_state():
         4, d.serving_gpus, d.gmi_per_gpu, devices=list(range(16)),
         devices_per_gpu=4)
     runner.replan(Decision(num_env=8, gmi_per_gpu=2, serving_gpus=2,
-                           projected_throughput=0.0, reason="test",
-                           reduction_strategy="har3"))
+                           reason="test", reduction_strategy="har3"))
     assert runner.communicator.strategy == "har3"
     # the strategy switch is communication plumbing only: params,
     # optimizer state, and version survive bit-identically

@@ -187,7 +187,7 @@ def test_replan_preserves_pipeline_configuration():
                          layout_builder=lambda d: c.plan_layout(
                              devices=list(range(4)), devices_per_gpu=2))
     runner.replan(Decision(num_env=8, gmi_per_gpu=2, serving_gpus=1,
-                           projected_throughput=0.0, reason="test"))
+                           reason="test"))
     new = runner.pipe
     assert new is not pipe
     b = next(iter(new.batchers.values()))
@@ -198,7 +198,7 @@ def test_replan_preserves_pipeline_configuration():
     runner.pipe = HostStagedPipeline([0, 1], [100])
     with pytest.raises(TypeError, match="clone_for"):
         runner.replan(Decision(num_env=8, gmi_per_gpu=2, serving_gpus=1,
-                               projected_throughput=0.0, reason="test"))
+                               reason="test"))
 
 
 def test_async_runner_overlap_without_controller_trains_round_behind():

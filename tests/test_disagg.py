@@ -248,14 +248,12 @@ def test_front_apply_decision_scales_prefill_set():
                               num_env=8)
     ctl.prefill_gpus = 2
     d = Decision(num_env=8, gmi_per_gpu=1, serving_gpus=2,
-                 projected_throughput=0.0, reason="grow prefill",
-                 prefill_gpus=2, seq=0)
+                 reason="grow prefill", prefill_gpus=2, seq=0)
     assert front.apply_decision(d, controller=ctl) is True
     assert len(front.prefill_engines) == 2
     # prefill_gpus == 0 means pure local prefill; one engine stays warm
     d0 = Decision(num_env=8, gmi_per_gpu=1, serving_gpus=2,
-                  projected_throughput=0.0, reason="shrink prefill",
-                  prefill_gpus=0, seq=0)
+                  reason="shrink prefill", prefill_gpus=0, seq=0)
     front.apply_decision(d0, controller=ctl)
     assert len(front.prefill_engines) == 1
 
@@ -328,7 +326,7 @@ def test_one_controller_arbitrates_rollout_and_serving():
     # replan bumps the staleness fence the serving guard keys on
     seq0 = ctl.plan_seq
     runner.replan(Decision(num_env=4, gmi_per_gpu=2, serving_gpus=2,
-                           projected_throughput=0.0, reason="fence test"))
+                           reason="fence test"))
     assert ctl.plan_seq == seq0 + 1
 
 

@@ -1,0 +1,250 @@
+"""The repro.analysis invariant checker: every rule proven to fire on a
+bad fixture and stay quiet on a good one, suppression-comment
+semantics, the CLI's strict exit code, and — the point of the whole
+module — the tier-1 gate that ``src/repro`` + ``benchmarks`` +
+``examples`` are finding-free, so the invariants the rules encode
+(PRNG discipline, donation safety, hot-path purity, kernel/oracle
+parity, fault exhaustiveness, no dead control-plane fields, no tracked
+bytecode) hold on every commit."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+for p in (ROOT, SRC):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.analysis import run_analysis  # noqa: E402
+from repro.analysis.project import (DeadDecisionFieldRule,  # noqa: E402
+                                    FaultKindRule, KernelOracleRule,
+                                    TrackedBytecodeRule)
+from repro.analysis.rules import (DonationReuseRule,  # noqa: E402
+                                  HostSyncRule, PrngReuseRule)
+
+FIX = os.path.join(ROOT, "tests", "analysis_fixtures")
+
+
+def analyze(*names, rules=None, root=None):
+    paths = [os.path.join(FIX, n) for n in names]
+    return run_analysis(paths, root=root or FIX, rules=rules)
+
+
+# ----------------------------------------------------------- prng-reuse ----
+def test_prng_bad_fires_per_violation():
+    found = analyze("prng_bad.py", rules=[PrngReuseRule()])
+    assert [f.rule for f in found] == ["prng-reuse"] * 3
+    # one per function: sequential, split-after-sampling, loop reuse
+    lines = [f.line for f in found]
+    assert len(set(lines)) == 3
+
+
+def test_prng_good_stays_quiet():
+    assert analyze("prng_good.py", rules=[PrngReuseRule()]) == []
+
+
+# ------------------------------------------------------- donation-reuse ----
+def test_donation_bad_fires_for_assigned_and_decorated_jits():
+    found = analyze("donation_bad.py", rules=[DonationReuseRule()])
+    assert [f.rule for f in found] == ["donation-reuse"] * 2
+    msgs = " ".join(f.message for f in found)
+    assert "'caches'" in msgs and "'buf'" in msgs
+
+
+def test_donation_good_stays_quiet():
+    assert analyze("donation_good.py", rules=[DonationReuseRule()]) == []
+
+
+# ------------------------------------------------ host-sync-in-hot-path ----
+def test_hostsync_bad_fires_on_every_pattern():
+    found = analyze("hostsync_bad.py", rules=[HostSyncRule()])
+    assert {f.rule for f in found} == {"host-sync-in-hot-path"}
+    msgs = " ".join(f.message for f in found)
+    for needle in (".item()", ".block_until_ready()", "copies device data",
+                   "host-side timing", "float()"):
+        assert needle in msgs, needle
+    # .block_until_ready() catches BOTH the method and jax.* module form
+    assert len(found) == 7   # incl. both perf_counter sites
+
+
+def test_hostsync_good_stays_quiet():
+    # unmarked functions, constant float(), and allowed deliberate syncs
+    assert analyze("hostsync_good.py", rules=[HostSyncRule()]) == []
+
+
+def test_kernels_dir_is_implicitly_hot(tmp_path):
+    kdir = tmp_path / "kernels"
+    kdir.mkdir()
+    (kdir / "hotfile.py").write_text(
+        "def f(x):\n    return float(x)\n")
+    found = run_analysis([str(kdir)], root=str(tmp_path),
+                         rules=[HostSyncRule()])
+    assert [f.rule for f in found] == ["host-sync-in-hot-path"]
+
+
+# --------------------------------------------------------- suppressions ----
+def test_allow_comment_suppresses_same_line_and_line_above(tmp_path):
+    p = tmp_path / "s.py"
+    p.write_text(
+        "import jax\n\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (2,))\n"
+        "    b = jax.random.normal(key, (2,))"
+        "  # repro: allow(prng-reuse)\n"
+        "    # repro: allow(prng-reuse)\n"
+        "    c = jax.random.normal(key, (2,))\n"
+        "    return a, b, c\n")
+    assert run_analysis([str(p)], root=str(tmp_path),
+                        rules=[PrngReuseRule()]) == []
+
+
+def test_allow_for_a_different_rule_does_not_suppress():
+    found = analyze("suppress_wrong.py", rules=[PrngReuseRule()])
+    assert [f.rule for f in found] == ["prng-reuse"]
+
+
+# -------------------------------------------------------- kernel-oracle ----
+def test_kernel_bad_fires_pairing_and_index_map_arity():
+    found = run_analysis([os.path.join(FIX, "kernel_bad")],
+                         root=os.path.join(FIX, "kernel_bad"),
+                         rules=[KernelOracleRule()])
+    msgs = [f.message for f in found]
+    assert any("no ref.py oracle" in m for m in msgs)
+    assert any("index_map takes 1 args" in m for m in msgs)
+    assert len(found) == 2
+
+
+def test_kernel_good_pairs_through_ops_aliases():
+    root = os.path.join(FIX, "kernel_good")
+    found = run_analysis([root], root=root, rules=[KernelOracleRule()])
+    assert found == []
+
+
+# ----------------------------------------------------------- fault-kind ----
+def test_fault_bad_fires_for_unhandled_kind():
+    root = os.path.join(FIX, "fault_bad")
+    found = run_analysis([root], root=root, rules=[FaultKindRule()])
+    assert [f.rule for f in found] == ["fault-kind"]
+    assert "mystery_kind" in found[0].message
+
+
+def test_fault_good_stays_quiet():
+    root = os.path.join(FIX, "fault_good")
+    assert run_analysis([root], root=root, rules=[FaultKindRule()]) == []
+
+
+# -------------------------------------------------- dead-decision-field ----
+def test_dead_field_fires_on_unread_field():
+    found = analyze("decision_bad.py", rules=[DeadDecisionFieldRule()])
+    assert [f.rule for f in found] == ["dead-decision-field"]
+    assert "vestigial_estimate" in found[0].message
+
+
+def test_getattr_string_counts_as_a_read():
+    assert analyze("decision_good.py",
+                   rules=[DeadDecisionFieldRule()]) == []
+
+
+def test_decision_projected_throughput_removed():
+    """Regression for the dead-field sweep: the controller's Decision
+    carried a projected_throughput nothing ever consumed (the analyzer
+    proved it); it is gone and must stay gone."""
+    from repro.core.controller import Decision
+    names = {f.name for f in dataclasses.fields(Decision)}
+    assert "projected_throughput" not in names
+    d = Decision(num_env=4, gmi_per_gpu=1, serving_gpus=1, reason="t")
+    assert d.layout_changed is True and d.seq == 0
+
+
+# ----------------------------------------------------- tracked-bytecode ----
+def _git_ok(cwd):
+    try:
+        return subprocess.run(["git", "--version"], cwd=cwd,
+                              capture_output=True).returncode == 0
+    except OSError:
+        return False
+
+
+@pytest.fixture
+def tmp_repo(tmp_path):
+    if not _git_ok(str(tmp_path)):
+        pytest.skip("git unavailable")
+    subprocess.run(["git", "init", "-q", str(tmp_path)], check=True)
+    return tmp_path
+
+
+def test_tracked_bytecode_fires_in_a_dirty_repo(tmp_repo):
+    (tmp_repo / ".gitignore").write_text("__pycache__/\n*.py[cod]\n")
+    (tmp_repo / "mod.pyc").write_bytes(b"\x00")
+    subprocess.run(["git", "-C", str(tmp_repo), "add", "-f", ".gitignore",
+                    "mod.pyc"], check=True)
+    found = run_analysis([], root=str(tmp_repo),
+                         rules=[TrackedBytecodeRule()])
+    assert [f.rule for f in found] == ["tracked-bytecode"]
+    assert found[0].path == "mod.pyc"
+
+
+def test_tracked_bytecode_requires_gitignore_patterns(tmp_repo):
+    (tmp_repo / ".gitignore").write_text("*.log\n")
+    found = run_analysis([], root=str(tmp_repo),
+                         rules=[TrackedBytecodeRule()])
+    assert len(found) == 2
+    assert all(f.path == ".gitignore" for f in found)
+
+
+def test_tracked_bytecode_inert_below_the_toplevel():
+    # fixture/test runs rooted in a subdirectory must not drag the
+    # enclosing repo's hygiene into their findings
+    assert run_analysis([], root=FIX, rules=[TrackedBytecodeRule()]) == []
+
+
+# ------------------------------------------------------------------ CLI ----
+def _cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m", "repro.analysis", *argv],
+                          cwd=ROOT, env=env, capture_output=True,
+                          text=True, timeout=120)
+
+
+def test_cli_strict_exits_nonzero_on_findings():
+    proc = _cli("--strict", os.path.join(FIX, "prng_bad.py"))
+    assert proc.returncode == 1
+    assert "prng-reuse" in proc.stdout
+
+
+def test_cli_nonstrict_reports_but_exits_zero():
+    proc = _cli(os.path.join(FIX, "prng_bad.py"))
+    assert proc.returncode == 0
+    assert "prng-reuse" in proc.stdout
+
+
+def test_cli_json_output():
+    import json
+    proc = _cli("--json", os.path.join(FIX, "prng_bad.py"))
+    rows = json.loads(proc.stdout)
+    assert rows and all(r["rule"] == "prng-reuse" for r in rows)
+    assert {"rule", "path", "line", "message"} <= set(rows[0])
+
+
+# ------------------------------------------------------ the tier-1 gate ----
+def test_repo_tree_is_finding_free():
+    """`python -m repro.analysis --strict src/repro benchmarks examples`
+    must stay clean: every invariant the rules encode holds on the
+    committed tree (this is the gate that keeps the real fixes of this
+    PR — bench PRNG reuse, the trainer's per-batch float() sync, the
+    dead Decision field — from regressing)."""
+    paths = [os.path.join(ROOT, d) for d in
+             ("src/repro", "benchmarks", "examples")
+             if os.path.isdir(os.path.join(ROOT, d))]
+    found = run_analysis(paths, root=ROOT)
+    assert found == [], "\n" + "\n".join(f.format() for f in found)
+
+
+def test_bench_preflight_delegates_to_the_analyzer():
+    from benchmarks.run import _analysis_findings
+    assert _analysis_findings(ROOT) == []
