@@ -27,8 +27,8 @@
 # re-baseline a BENCH json.
 #
 # ``--quick`` runs only the perf-trajectory tier (bench_mcc + bench_kernels
-# + bench_lgr + bench_serving + bench_faults + bench_disagg, interpret
-# mode on CPU),
+# + bench_lgr + bench_serving + bench_faults + bench_disagg +
+# bench_num_env, interpret mode on CPU),
 # writes BENCH_*.json
 # artifacts so
 # future PRs have before/after numbers to diff against, and FAILS (exit 1)
@@ -181,7 +181,8 @@ def main() -> None:
         or bool(os.environ.get("BENCH_STRICT"))
     only = args[0].split(",") if args else None
     if quick and only is None:
-        only = ["mcc", "kernels", "lgr", "serving", "faults", "disagg"]
+        only = ["mcc", "kernels", "lgr", "serving", "faults", "disagg",
+                "num_env"]
         # an explicit selection wins; --quick then only adds the JSON
         # artifacts
     allow_regression = bool(os.environ.get("BENCH_ALLOW_REGRESSION"))

@@ -1,0 +1,47 @@
+"""Multi-agent shared-world rollouts on the num_env ladder.
+
+K agents drive one articulated chain world (``envs/multi_agent.py``):
+agent k owns joint block [k*J, (k+1)*J), the chain coupling links
+neighboring agents' boundary joints, and the world's done resets all K
+agents together.  Because per-agent obs/action dims match the
+single-agent family, the SAME policy network serves any K — the
+controller's num_env ladder just sees K times more envs.
+
+Run:  PYTHONPATH=src python examples/multi_agent_rollout.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.envs import make_env, make_multi_agent_env
+from repro.models.policy import init_policy
+from repro.rl.rollout import collect
+
+
+def main():
+    K = 4
+    env = make_multi_agent_env("Ant", num_agents=K)
+    num_envs = 32                       # 8 worlds x 4 agents
+    params = init_policy(jax.random.key(0), env.spec.policy_dims)
+
+    state, obs = env.reset(jax.random.PRNGKey(0), num_envs=num_envs)
+    traj, state, obs, last_value, _ = collect(
+        params, env, state, obs, jax.random.PRNGKey(1), num_steps=8)
+    print(f"{K}-agent Ant: obs {traj.obs.shape} actions "
+          f"{traj.actions.shape} rewards {traj.rewards.shape}")
+    print(f"mean reward/agent: {float(traj.rewards.mean()):+.3f}")
+
+    # world-shared done: all K agents of a world terminate together
+    d = traj.dones.reshape(8, num_envs // K, K)
+    assert bool(jnp.all(d == d[:, :, :1])), "agents of a world share done"
+
+    # the same policy serves the single-agent family — one ladder, K x
+    # the rungs
+    env1 = make_env("Ant")
+    s1, o1 = env1.reset(jax.random.PRNGKey(0), num_envs=8)
+    t1, *_ = collect(params, env1, s1, o1, jax.random.PRNGKey(1),
+                     num_steps=8)
+    print(f"same policy on single-agent Ant: obs {t1.obs.shape}")
+
+
+if __name__ == "__main__":
+    main()

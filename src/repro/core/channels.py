@@ -183,6 +183,65 @@ class ChannelRing:
         self.head = (self.head + 1) % self.slots
         self.count = min(self.count + 1, self.slots)
 
+    # ------------------------------------------- zero-copy producer slot --
+    _PRODUCED = ("obs", "actions", "rewards", "dones")
+
+    def acquire(self, T: int, N: int, obs_dim: int, act_dim: int):
+        """Hand out the ring's live producer channels plus the slot index
+        for a zero-copy producer (``rl.rollout.collect_ring``): the
+        megakernel rollout writes obs/action/reward/done for slot
+        ``head`` directly into the returned buffers — no staged payload,
+        no ``pack_channels`` re-copy.  The four arrays are DETACHED from
+        the ring until :meth:`commit` reattaches them (the producer's
+        jitted scan donates them).  Blocking rings only: a
+        double-buffered ring's pushes already stage references, so there
+        is nothing to save on its producer side."""
+        if self.double_buffered:
+            raise ValueError(
+                "acquire/commit targets blocking rings; double-buffered "
+                "rings stage payload references (use append)")
+        sig = ((T, N, obs_dim), (T, N, act_dim), (T, N), (T, N), (N,), ())
+        if self._sig is None:
+            self._sig = sig
+            self.shape = (T, N)
+        elif self._sig != sig:
+            raise ValueError(
+                f"ring expects payload shapes {self._sig}, got {sig}")
+        if self.bufs is None:
+            assert self.head == 0
+            S = self.slots
+            self.bufs = {
+                "obs": jnp.zeros((T, S * N, obs_dim), jnp.float32),
+                "actions": jnp.zeros((T, S * N, act_dim), jnp.float32),
+                "rewards": jnp.zeros((T, S * N), jnp.float32),
+                "dones": jnp.zeros((T, S * N), jnp.float32),
+                "bootstrap": jnp.zeros((S, N), jnp.float32),
+                "actor_version": jnp.zeros((S, 1), jnp.int32),
+            }
+        out = {c: self.bufs.pop(c) for c in self._PRODUCED}
+        return out, self.head
+
+    def commit(self, bufs: Dict[str, jax.Array], bootstrap,
+               actor_version) -> None:
+        """Reattach the producer-written channels from :meth:`acquire`
+        and finalize the slot: the bootstrap/actor_version rows land via
+        two small in-place row updates, then the write pointer bumps —
+        the slot becomes visible to ``snapshot`` exactly like an
+        ``append``-ed push."""
+        assert self.bufs is not None and self.shape is not None
+        missing = [c for c in self._PRODUCED if c not in bufs]
+        assert not missing, f"commit missing channels {missing}"
+        self.bufs.update({c: bufs[c] for c in self._PRODUCED})
+        s = self.head
+        boot = jnp.asarray(bootstrap).reshape(1, -1)
+        ver = jnp.asarray(actor_version, jnp.int32).reshape(1, 1)
+        self.bufs["bootstrap"] = \
+            self.bufs["bootstrap"].at[s:s + 1].set(boot)
+        self.bufs["actor_version"] = \
+            self.bufs["actor_version"].at[s:s + 1].set(ver)
+        self.head = (self.head + 1) % self.slots
+        self.count = min(self.count + 1, self.slots)
+
     def snapshot(self) -> Dict[str, jax.Array]:
         """Valid slots oldest-first as channel arrays; empties the ring.
 
@@ -400,10 +459,7 @@ class MultiChannelPipeline:
         # bandwidth calibrator; bounded so an idle consumer can't grow it
         self._transfer_samples: List[Tuple[float, int]] = []
 
-    def _ring_for(self, agent_gmi: int, exp: Experience) -> ChannelRing:
-        group = self._group_of[agent_gmi]
-        sig = tuple(tuple(getattr(exp, c).shape)
-                    for c in ("obs", "actions", "rewards"))
+    def _ring_for_sig(self, group: int, sig) -> ChannelRing:
         key = (group, sig)
         ring = self._rings.get(key)
         if ring is None:
@@ -414,6 +470,11 @@ class MultiChannelPipeline:
             self._rings[key] = ring
         return ring
 
+    def _ring_for(self, agent_gmi: int, exp: Experience) -> ChannelRing:
+        sig = tuple(tuple(getattr(exp, c).shape)
+                    for c in ("obs", "actions", "rewards"))
+        return self._ring_for_sig(self._group_of[agent_gmi], sig)
+
     def push(self, agent_gmi: int, exp: Experience):
         ring = self._ring_for(agent_gmi, exp)
         if ring.count == ring.slots:       # would evict an unread slot
@@ -421,6 +482,37 @@ class MultiChannelPipeline:
             self._pending.setdefault(group, []).append(ring.snapshot())
             self.spill_count += 1
         ring.append(exp)
+        self.occupancy_high_water = max(self.occupancy_high_water,
+                                        ring.count / ring.slots)
+
+    def produce(self, agent_gmi: int, T: int, N: int, obs_dim: int,
+                act_dim: int, producer) -> None:
+        """Zero-copy push: hand the group ring's live slot storage to the
+        producer instead of packing a staged payload.
+
+        ``producer(bufs, slot) -> (bufs, bootstrap, actor_version)``
+        receives the ring's own ``{obs, actions, rewards, dones}``
+        buffers (detached, donated into the producer's jitted scan) plus
+        the slot index, and returns the written buffers with the
+        bootstrap values and actor version for the slot — the
+        ``rl.rollout.collect_ring`` contract.  Spill-not-drop and
+        occupancy accounting match :meth:`push` exactly.  Blocking rings
+        only (overlap mode already stages references at zero producer
+        cost)."""
+        if self.overlap:
+            raise ValueError(
+                "produce targets blocking rings; overlap mode stages "
+                "payload references (push is already zero-cost on the "
+                "producer side)")
+        group = self._group_of[agent_gmi]
+        sig = ((T, N, obs_dim), (T, N, act_dim), (T, N))
+        ring = self._ring_for_sig(group, sig)
+        if ring.count == ring.slots:       # would evict an unread slot
+            self._pending.setdefault(group, []).append(ring.snapshot())
+            self.spill_count += 1
+        bufs, slot = ring.acquire(T, N, obs_dim, act_dim)
+        bufs, bootstrap, version = producer(bufs, slot)
+        ring.commit(bufs, bootstrap, version)
         self.occupancy_high_water = max(self.occupancy_high_water,
                                         ring.count / ring.slots)
 

@@ -1,2 +1,5 @@
-from repro.envs.base import EnvSpec, EnvState, VectorEnv  # noqa: F401
+from repro.envs.base import (EnvSpec, EnvState, MegaConsts,  # noqa: F401
+                             VectorEnv, derive_seeds)
+from repro.envs.multi_agent import (MultiAgentVectorEnv,  # noqa: F401
+                                    make_multi_agent_env)
 from repro.envs.suite import SPECS, all_env_names, make_env  # noqa: F401

@@ -4,13 +4,30 @@ Environments are pure functions over explicit state pytrees so thousands of
 instances run in parallel under ``vmap`` + ``jit`` — the JAX analogue of
 Isaac Gym's massively-parallel GPU simulation (the paper's workload).
 
-Env keys are legacy uint32 PRNG vectors so states stay plain-array pytrees
-(selectable with ``jnp.where`` during auto-reset).
+Env randomness is counter-based (``physics.counter_normal``): each env
+carries an int32 ``seed`` plus a ``resets`` counter instead of a threefry
+key, so a fresh post-``done`` state is a pure function of ``(seed,
+resets + 1)`` — no per-step ``jax.random.split``, and the same fresh state
+whether the reset is materialized every step (the vmap oracle path) or
+computed only under a ``done`` predicate (the fused megakernel path,
+``kernels/env_megakernel.py``).
+
+Slot-write contract (megakernel -> channel ring)
+------------------------------------------------
+``VectorEnv(megakernel=True)`` steps through one fused program and, via
+``rl.rollout.collect_ring``, produces experience directly into the
+``ChannelRing`` slot layout owned by ``kernels/channel_pack.py``: step
+``t`` of a rollout in ring slot ``s`` writes obs/action/reward/done for
+env block ``[s*N, (s+1)*N)`` at row ``t`` — the producer-side zero-copy
+path that retires the stage-a-Trajectory-then-``pack_channels`` double
+copy.  ``MegaConsts`` carries the per-env-family constants (sensor
+projection, task target, chain geometry, reward weights) the fused
+kernels need alongside the state.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +39,8 @@ class EnvState(NamedTuple):
     root: jax.Array       # (6,) x, y, z, vx, vy, vz
     prev_action: jax.Array
     t: jax.Array          # scalar int32 step counter
-    key: jax.Array        # (2,) uint32 legacy PRNG key
+    seed: jax.Array       # scalar int32 per-env PRNG stream id
+    resets: jax.Array     # scalar int32 auto-reset counter
 
 
 @dataclass(frozen=True)
@@ -38,19 +56,60 @@ class EnvSpec:
     dt: float = 1.0 / 60.0
 
 
+@dataclass(frozen=True)
+class MegaConsts:
+    """Constant operands of the fused env step (megakernel + oracle)."""
+    sensor: jax.Array     # (raw_dim, obs_dim) fixed sensor projection
+    tgt: jax.Array        # (J,) task target configuration
+    masses: jax.Array     # (J,) chain link masses
+    lengths: jax.Array    # (J,) chain link lengths
+    chain: tuple          # (damping, coupling, stiffness, max_qd, gravity,
+                          #  torque_scale, ground_k, ground_c) — static floats
+    task: tuple           # (w_forward, w_upright, w_ctrl, w_target, fall_z)
+
+
+def derive_seeds(key, num_envs: int):
+    """Per-env int32 stream ids from one PRNG key (reset-time only)."""
+    return jax.random.randint(key, (num_envs,), 0,
+                              jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+
+
 class VectorEnv:
-    """Batched env: all methods operate on (N, ...) stacked states."""
+    """Batched env: all methods operate on (N, ...) stacked states.
+
+    ``megakernel=False`` (default): the oracle baseline — per-env
+    ``step_fn`` under ``vmap`` with a *materialized* auto-reset (a fresh
+    state is computed for every env every step and selected by
+    ``jnp.where(done)``).
+
+    ``megakernel=True``: ``step`` runs the fused batched program from
+    ``kernels/env_megakernel.py`` — substep loop + reward + episode
+    bookkeeping + *predicated* auto-reset (fresh states computed only
+    when some env is done) + observation in one jitted dispatch.  Both
+    paths share the counter-based reset, so trajectories agree to fp
+    tolerance and post-``done`` states agree exactly.
+    """
 
     def __init__(self, spec: EnvSpec, reset_fn: Callable, step_fn: Callable,
-                 obs_fn: Callable):
+                 obs_fn: Callable, mega: Optional[MegaConsts] = None,
+                 megakernel: bool = False):
         self.spec = spec
+        self.mega = mega
+        self.megakernel = bool(megakernel)
+        if self.megakernel and mega is None:
+            raise ValueError("megakernel=True needs MegaConsts (mega=...); "
+                             "suite.make_env builds them")
+        self._reset_fn = reset_fn
+        self._step_fn = step_fn
+        self._obs_fn = obs_fn
         self._reset = jax.vmap(reset_fn)
         self._obs = jax.vmap(obs_fn)
 
         def step_one(state, action):
             new_state, reward, done = step_fn(state, action)
-            rkey, nkey = jax.random.split(new_state.key)
-            fresh = reset_fn(rkey)._replace(key=nkey)
+            # materialized auto-reset: the fresh state is a pure function
+            # of (seed, resets+1), computed unconditionally and selected
+            fresh = reset_fn(new_state.seed, new_state.resets + 1)
             # scalar `done` broadcasts against every leaf shape
             out = jax.tree.map(lambda a, b: jnp.where(done, b, a),
                                new_state, fresh)
@@ -58,12 +117,27 @@ class VectorEnv:
 
         self._step = jax.vmap(step_one)
 
+    def with_megakernel(self, flag: bool = True) -> "VectorEnv":
+        """The same env family on the other step path (shared fns)."""
+        return VectorEnv(self.spec, self._reset_fn, self._step_fn,
+                         self._obs_fn, mega=self.mega, megakernel=flag)
+
     def reset(self, key, num_envs: int):
-        keys = jax.random.split(key, num_envs)
-        state = self._reset(keys)
+        seeds = derive_seeds(key, num_envs)
+        state = self._reset(seeds, jnp.zeros((num_envs,), jnp.int32))
         return state, self._obs(state)
 
     def step(self, state, action):
         """-> (state, obs, reward, done)."""
+        if self.megakernel:
+            from repro.kernels.env_megakernel import mega_step
+            mc = self.mega
+            out = mega_step(*state, action, mc.sensor, mc.tgt, mc.masses,
+                            mc.lengths, chain=mc.chain, task=mc.task,
+                            substeps=self.spec.substeps, dt=self.spec.dt,
+                            max_episode_len=self.spec.max_episode_len)
+            q, qd, root, pa, t, seed, resets, obs, reward, done = out
+            return (EnvState(q, qd, root, pa, t, seed, resets), obs,
+                    reward, done)
         state, reward, done = self._step(state, action)
         return state, self._obs(state), reward, done

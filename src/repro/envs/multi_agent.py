@@ -1,0 +1,150 @@
+"""Vmapped multi-agent env family: K agents sharing one chain world.
+
+A *world* is a single articulated chain of ``K * act_dim`` joints whose
+root body every agent shares.  Agent ``k`` drives the contiguous joint
+block ``[k*J, (k+1)*J)`` — the chain's neighbor-coupling term physically
+links each agent's boundary joint to the next agent's, so actions
+propagate across agents through the shared dynamics (no broadcast, no
+message passing: it is one simulation).  Per-agent observation/reward
+slices reuse the *single-agent* feature layout: agent ``k`` observes the
+shared root plus its own joint block, so ``raw_dim`` (and therefore the
+Table-6 sensor projection and policy dims) is identical to the
+single-agent family — one policy serves both.
+
+The point for the GMI controller: ``num_envs`` counts AGENTS, so every
+single-agent num_env ladder rung ``n`` gains the rungs ``n * K`` for
+every agent count ``K`` with zero controller changes —
+``selection.explore`` and Algorithm 2 see just a bigger env count.
+World auto-reset is counter-based exactly like ``envs/base.py``: a fresh
+world is a pure function of ``(seed, resets + 1)``, and a world-level
+``done`` (episode cap or root fall) resets ALL of the world's agents
+together.
+
+This family is vmap-path only (the megakernel rides the single-agent
+family); ``with_megakernel(True)`` raises.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import EnvState, derive_seeds
+from repro.envs.physics import (counter_normal, default_params,
+                                rollout_substeps, tip_height)
+from repro.envs.suite import SPECS, _TASK, _sensor_matrix
+
+
+class MultiAgentVectorEnv:
+    """Duck-typed :class:`~repro.envs.base.VectorEnv`: same
+    ``reset``/``step`` surface over (num_envs, ...) agent-major arrays,
+    but agents come in groups of ``num_agents`` sharing a world."""
+
+    megakernel = False
+
+    def __init__(self, name: str, num_agents: int = 2):
+        assert num_agents >= 1
+        import numpy as np
+        spec = SPECS[name]
+        self.spec = spec
+        self.num_agents = K = int(num_agents)
+        J = spec.act_dim
+        Jw = K * J
+        params = default_params(Jw)
+        w_fwd, w_up, w_ctrl, w_tgt, fall_z = _TASK[name]
+        tgt = jnp.asarray(np.random.RandomState(7).uniform(
+            -0.6, 0.6, size=(J,)).astype(np.float32))
+        raw_dim = 6 + 4 * J + 3
+        sensor = _sensor_matrix(name, raw_dim, spec.obs_dim)
+
+        def reset_world(seed, resets) -> EnvState:
+            q0 = 0.1 * counter_normal(seed, resets,
+                                      jnp.arange(Jw, dtype=jnp.uint32))
+            return EnvState(
+                q=q0, qd=jnp.zeros((Jw,)),
+                root=jnp.array([0., 0., 0.6, 0., 0., 0.]),
+                prev_action=jnp.zeros((Jw,)),
+                t=jnp.zeros((), jnp.int32),
+                seed=jnp.asarray(seed, jnp.int32),
+                resets=jnp.asarray(resets, jnp.int32))
+
+        def obs_world(state: EnvState):
+            """(K, obs_dim): shared root + per-agent joint block through
+            the single-agent sensor projection."""
+            qk = state.q.reshape(K, J)
+            qdk = state.qd.reshape(K, J)
+            pak = state.prev_action.reshape(K, J)
+            tip = tip_height(state.q, state.root[2], params)
+            ones = jnp.ones((K,))
+            raw = jnp.concatenate([
+                jnp.tile(state.root, (K, 1)),
+                jnp.sin(qk), jnp.cos(qk), qdk, pak,
+                jnp.stack([tip * ones, (state.root[2] - 0.6) * ones,
+                           jnp.mean(jnp.abs(qdk), axis=1)], axis=1),
+            ], axis=1)
+            return jnp.tanh(raw @ sensor)
+
+        def step_world(state: EnvState, action):
+            """action (K*J,) -> (state, reward (K,), done scalar)."""
+            a = jnp.clip(action, -1.0, 1.0)
+            q, qd, root = rollout_substeps(state.q, state.qd, state.root,
+                                           a, params, spec.dt,
+                                           spec.substeps)
+            qk = q.reshape(K, J)
+            ak = a.reshape(K, J)
+            reward = (w_fwd * root[3]
+                      + w_up * jnp.cos(jnp.mean(qk, axis=1))
+                      - w_ctrl * jnp.sum(jnp.square(ak), axis=1)
+                      - w_tgt * jnp.mean(jnp.square(qk - tgt), axis=1)
+                      + 0.5)
+            t = state.t + 1
+            done = (t >= spec.max_episode_len) | (root[2] < fall_z)
+            new_state = EnvState(q=q, qd=qd, root=root, prev_action=a, t=t,
+                                 seed=state.seed, resets=state.resets)
+            fresh = reset_world(new_state.seed, new_state.resets + 1)
+            out = jax.tree.map(lambda x, y: jnp.where(done, y, x),
+                               new_state, fresh)
+            return out, reward, done
+
+        self._reset_world = reset_world
+        self._reset = jax.vmap(reset_world)
+        self._step = jax.vmap(step_world)
+        self._obs = jax.vmap(obs_world)
+
+    def _check(self, num_envs: int) -> int:
+        if num_envs % self.num_agents:
+            raise ValueError(
+                f"num_envs={num_envs} must be a multiple of "
+                f"num_agents={self.num_agents} (agents share worlds)")
+        return num_envs // self.num_agents
+
+    def with_megakernel(self, flag: bool = True) -> "MultiAgentVectorEnv":
+        if flag:
+            raise ValueError("the multi-agent family is vmap-only; the "
+                             "megakernel path rides the single-agent "
+                             "suite (envs.make_env(megakernel=True))")
+        return self
+
+    def reset(self, key, num_envs: int):
+        W = self._check(num_envs)
+        seeds = derive_seeds(key, W)
+        state = self._reset(seeds, jnp.zeros((W,), jnp.int32))
+        obs = self._obs(state)                         # (W, K, obs_dim)
+        return state, obs.reshape(num_envs, -1)
+
+    def step(self, state, action):
+        """action (num_envs, act_dim) agent-major -> (state, obs, reward,
+        done), the per-agent views of the shared-world transition (done
+        is the world's, broadcast to its K agents)."""
+        W = state.q.shape[0]
+        K = self.num_agents
+        state, reward, done = self._step(
+            state, action.reshape(W, K * self.spec.act_dim))
+        obs = self._obs(state).reshape(W * K, -1)
+        return (state, obs, reward.reshape(-1),
+                jnp.repeat(done, K))
+
+
+def make_multi_agent_env(name: str, num_agents: int = 2) \
+        -> MultiAgentVectorEnv:
+    """K-agent shared-world variant of ``suite.make_env(name)``."""
+    return MultiAgentVectorEnv(name, num_agents)

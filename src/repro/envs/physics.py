@@ -49,6 +49,48 @@ def tip_height(q, root_z, params: ChainParams):
     return root_z + jnp.sum(params.lengths * jnp.cos(angles))
 
 
+# --------------------------------------------------- counter-based PRNG ---
+# Auto-reset used to thread a threefry key through every env state and pay
+# a ``jax.random.split`` + ``normal`` per env per step whether or not the
+# env was done.  Fresh states are instead a pure function of a per-env
+# ``seed`` and a ``resets`` counter: an integer-hash (Murmur3 finalizer)
+# feeding Box-Muller.  Every op below (xor/shift/mul on uint32, sqrt, log,
+# cos) maps 1:1 onto Pallas-supported primitives, so the vmapped oracle
+# reset and the megakernel's in-kernel reset produce identical values.
+
+def hash_u32(x):
+    """Murmur3 fmix32: a well-mixed uint32 -> uint32 bijection."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def counter_normal(seed, counter, idx):
+    """Standard normals, one per (seed, counter, idx) triple.
+
+    ``seed``/``counter``/``idx`` broadcast together; callers supply
+    ``idx`` (e.g. ``jnp.arange(J, dtype=jnp.uint32)`` outside a kernel,
+    ``broadcasted_iota`` inside one).  Deterministic and split-free: the
+    same triple always yields the same draw, so a materialized reset and
+    a predicated in-kernel reset agree bitwise."""
+    s = jnp.asarray(seed, jnp.uint32)
+    c = jnp.asarray(counter, jnp.uint32)
+    i = jnp.asarray(idx, jnp.uint32)
+    base = hash_u32(s ^ (c * jnp.uint32(0x9E3779B9)))
+    h1 = hash_u32(base + i * jnp.uint32(2) + jnp.uint32(1))
+    h2 = hash_u32(base + i * jnp.uint32(2) + jnp.uint32(2))
+    # 24-bit mantissa uniforms; u1 offset into (0, 1] so log never sees 0
+    u1 = (h1 >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / 16777216.0) \
+        + (0.5 / 16777216.0)
+    u2 = (h2 >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / 16777216.0)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos((2.0 * jnp.pi) * u2)
+
+
 def substep(q, qd, root, tau, params: ChainParams, dt: float):
     J = q.shape[0]
     # neighbor coupling (tridiagonal spring network)

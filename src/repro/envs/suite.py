@@ -19,8 +19,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.envs.base import EnvSpec, EnvState, VectorEnv
-from repro.envs.physics import default_params, rollout_substeps, tip_height
+from repro.envs.base import EnvSpec, EnvState, MegaConsts, VectorEnv
+from repro.envs.physics import (counter_normal, default_params,
+                                rollout_substeps, tip_height)
 
 SPECS = {
     "Ant":           EnvSpec("Ant", "AT", 60, 8, "L", (60, 256, 128, 64, 8)),
@@ -53,7 +54,7 @@ def _sensor_matrix(name: str, raw_dim: int, obs_dim: int) -> jnp.ndarray:
     return jnp.asarray(out * np.sqrt(2.0))
 
 
-def make_env(name: str) -> VectorEnv:
+def make_env(name: str, megakernel: bool = False) -> VectorEnv:
     spec = SPECS[name]
     J = spec.act_dim
     params = default_params(J)
@@ -64,20 +65,19 @@ def make_env(name: str) -> VectorEnv:
     raw_dim = 6 + 4 * J + 3          # root + sinq/cosq/qd/prev_act + extras
     sensor = _sensor_matrix(name, raw_dim, spec.obs_dim)
 
-    def reset_fn(key) -> EnvState:
-        if hasattr(key, "dtype") and key.dtype == jnp.uint32:
-            k = key
-        else:
-            k = jax.random.key_data(key)
-        k1, k2 = jax.random.split(k)
-        q0 = 0.1 * jax.random.normal(k1, (J,))
+    def reset_fn(seed, resets) -> EnvState:
+        # fresh state as a pure function of (seed, resets): shared with the
+        # megakernel's predicated in-kernel reset, draw for draw
+        q0 = 0.1 * counter_normal(seed, resets,
+                                  jnp.arange(J, dtype=jnp.uint32))
         return EnvState(
             q=q0,
             qd=jnp.zeros((J,)),
             root=jnp.array([0., 0., 0.6, 0., 0., 0.]),
             prev_action=jnp.zeros((J,)),
             t=jnp.zeros((), jnp.int32),
-            key=k2)
+            seed=jnp.asarray(seed, jnp.int32),
+            resets=jnp.asarray(resets, jnp.int32))
 
     def obs_fn(state: EnvState):
         tip = tip_height(state.q, state.root[2], params)
@@ -104,10 +104,17 @@ def make_env(name: str) -> VectorEnv:
         fell = root[2] < fall_z
         done = (t >= spec.max_episode_len) | fell
         new_state = EnvState(q=q, qd=qd, root=root, prev_action=a, t=t,
-                             key=state.key)
+                             seed=state.seed, resets=state.resets)
         return new_state, reward, done
 
-    return VectorEnv(spec, reset_fn, step_fn, obs_fn)
+    mega = MegaConsts(
+        sensor=sensor, tgt=tgt, masses=params.masses, lengths=params.lengths,
+        chain=(params.damping, params.coupling, params.stiffness,
+               params.max_qd, params.gravity, params.torque_scale,
+               params.ground_k, params.ground_c),
+        task=(w_fwd, w_up, w_ctrl, w_tgt, fall_z))
+    return VectorEnv(spec, reset_fn, step_fn, obs_fn, mega=mega,
+                     megakernel=megakernel)
 
 
 def all_env_names():

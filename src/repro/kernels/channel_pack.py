@@ -44,6 +44,23 @@ kernel performs six in-place dynamic stores and never touches the
 untouched slots.  On CPU/GPU backends the identical program is lowered
 through XLA ``dynamic_update_slice`` (``pack_channels_xla``) — donated and
 jitted, so it is also an in-place pointer-bump where the runtime allows.
+
+Slot-write contract (zero-copy producers)
+-----------------------------------------
+The layout above is a public contract, not a private detail of this
+file: the env megakernel (``kernels/env_megakernel.py``, driven by
+``rl.rollout.collect_ring`` through ``ChannelRing.acquire``/``commit``)
+writes the four produced channels DIRECTLY — rollout step ``t`` into
+ring slot ``s`` over envs ``[s*N, (s+1)*N)`` stores, at row ``t`` of
+that column block, the observation the policy acted on, the RAW sampled
+action (pre-clip; the env clips internally, trainers recompute
+log-probs from what was sampled), the step reward, and ``done`` as
+float32.  ``bootstrap`` row ``s`` and ``actor_version`` row ``s`` land
+at commit time.  A producer-written slot is byte-identical to the same
+push staged through :func:`pack_channels` — ``snapshot`` and every
+consumer downstream cannot tell the two apart, which is exactly why the
+staging copy can be skipped.  Anything changing this layout must move
+producer and packer together.
 """
 from __future__ import annotations
 

@@ -1,0 +1,273 @@
+"""Fused on-device environment megakernel (WarpDrive-style, ROADMAP 3).
+
+One Pallas kernel advances a whole block of envs by one policy step:
+chain-physics substep loop x ``spec.substeps``, reward, episode
+bookkeeping, *predicated* auto-reset (fresh states are computed only when
+some env in the block is done, from the counter-based PRNG in
+``envs/physics.py`` — no per-step ``jax.random.split``), the next
+observation, AND the producer-side experience write: obs/action/reward/
+done land directly in the ``ChannelRing`` slot layout that
+``kernels/channel_pack.py`` owns, so a rollout never stages a Trajectory
+for ``pack_channels`` to re-copy.
+
+Slot-write contract: for ring buffers shaped ``(T, S*N, ...)`` and a
+rollout writing slot ``s``, the kernel invoked at step ``t`` over env
+block ``i`` (of ``N // block_envs``) writes rows
+``[t, s*N + i*BE : s*N + (i+1)*BE]`` — the obs the policy acted on, the
+raw sampled action, and the step's reward/done.  ``(t, slot, N)`` ride
+the scalar-prefetch operand so neither retraces the kernel.
+
+The grid runs over env blocks; per-env state arrays are blocked
+``(block_envs, ...)`` while the four ring buffers pass through as full
+aliased blocks updated with dynamic stores (the ``channel_pack`` idiom —
+untouched slots survive the call).  ``mega_step`` is the identically
+fused XLA program (shared ``_step_core``) used off-TPU, exactly like
+``pack_channels_xla`` backs ``pack_channels``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.envs.physics import counter_normal
+
+
+def _step_core(q, qd, root, prev_action, t, seed, resets, action, sensor,
+               tgt, masses, lengths, idx, *, chain, task, substeps, dt,
+               max_episode_len):
+    """Batched fused env step on (B, ...) arrays.
+
+    Physics follows ``envs/physics.py::substep`` op for op (neighbor
+    coupling via shifts instead of ``jnp.pad`` — same values, friendlier
+    lowering), then reward/done/predicated-reset/observation.  Returns
+    ``((q, qd, root, prev_action, t, resets), obs, reward, done)`` with
+    ``obs`` observed AFTER any auto-reset, matching the vmap oracle.
+    """
+    (damping, coupling, stiffness, max_qd, gravity, torque_scale,
+     ground_k, ground_c) = chain
+    w_fwd, w_up, w_ctrl, w_tgt, fall_z = task
+    a = jnp.clip(action, -1.0, 1.0)
+    inertia = masses * jnp.square(lengths) + 1e-3
+    h = dt / substeps
+
+    def body(_, carry):
+        q, qd, root = carry
+        left = jnp.concatenate([q[:, :1], q[:, :-1]], axis=1)
+        right = jnp.concatenate([q[:, 1:], q[:, -1:]], axis=1)
+        lap = left - 2.0 * q + right
+        grav = gravity * masses * lengths * jnp.sin(q)
+        qdd = (torque_scale * a - damping * qd - stiffness * q - grav
+               + coupling * lap) / inertia
+        qd = jnp.clip(qd + h * qdd, -max_qd, max_qd)
+        q = q + h * qd
+        tip_h = root[:, 2] + jnp.sum(
+            lengths * jnp.cos(jnp.cumsum(q, axis=1)), axis=1)
+        pen = jnp.maximum(-tip_h, 0.0)
+        contact_f = ground_k * pen - ground_c * jnp.minimum(
+            root[:, 5], 0.0) * (pen > 0)
+        thrust = jnp.stack([
+            jnp.mean(jnp.sin(q) * a, axis=1) * torque_scale,
+            0.1 * jnp.mean(jnp.cos(2 * q) * a, axis=1),
+            contact_f - gravity * 0.5,
+        ], axis=1)
+        vel = (root[:, 3:] + h * thrust) * (1.0 - 0.02)
+        pos = root[:, :3] + h * vel
+        pos = jnp.concatenate(
+            [pos[:, :2], jnp.maximum(pos[:, 2:3], 0.05)], axis=1)
+        return q, qd, jnp.concatenate([pos, vel], axis=1)
+
+    q, qd, root = jax.lax.fori_loop(0, substeps, body, (q, qd, root))
+    upright = jnp.cos(jnp.mean(q, axis=1))
+    reward = (w_fwd * root[:, 3]
+              + w_up * upright
+              - w_ctrl * jnp.sum(jnp.square(a), axis=1)
+              - w_tgt * jnp.mean(jnp.square(q - tgt), axis=1)
+              + 0.5)                                     # alive bonus
+    t = t + 1
+    done = (t >= max_episode_len) | (root[:, 2] < fall_z)
+
+    def do_reset(state):
+        q, qd, root, pa, t, resets = state
+        # fresh draws only materialize under the predicate — the whole
+        # point of counter-based reset (same values as reset_fn)
+        fresh_q = 0.1 * counter_normal(seed[:, None], (resets + 1)[:, None],
+                                       idx)
+        d = done[:, None]
+        # suite reset root pose [0, 0, 0.6, 0, 0, 0] built via iota so the
+        # kernel body captures no constant arrays
+        cidx = jax.lax.broadcasted_iota(jnp.int32, root.shape, 1)
+        root0 = jnp.where(cidx == 2, 0.6, 0.0).astype(root.dtype)
+        return (jnp.where(d, fresh_q, q),
+                jnp.where(d, 0.0, qd),
+                jnp.where(d, root0, root),
+                jnp.where(d, 0.0, pa),
+                jnp.where(done, 0, t),
+                jnp.where(done, resets + 1, resets))
+
+    q, qd, root, pa, t, resets = jax.lax.cond(
+        jnp.any(done), do_reset, lambda s: s, (q, qd, root, a, t, resets))
+
+    tip_h = root[:, 2] + jnp.sum(
+        lengths * jnp.cos(jnp.cumsum(q, axis=1)), axis=1)
+    raw = jnp.concatenate([
+        root,
+        jnp.sin(q), jnp.cos(q), qd,
+        pa,
+        jnp.stack([tip_h, root[:, 2] - 0.6,
+                   jnp.mean(jnp.abs(qd), axis=1)], axis=1),
+    ], axis=1)
+    obs = jnp.tanh(raw @ sensor)
+    return (q, qd, root, pa, t, resets), obs, reward, done
+
+
+@functools.partial(jax.jit, static_argnames=("chain", "task", "substeps",
+                                             "dt", "max_episode_len"))
+def mega_step(q, qd, root, prev_action, t, seed, resets, action, sensor,
+              tgt, masses, lengths, *, chain, task, substeps, dt,
+              max_episode_len):
+    """Fused XLA env step (no ring write): the off-TPU lowering of the
+    megakernel, one jitted dispatch for physics + reward + bookkeeping +
+    predicated reset + observation.  Returns
+    ``(q, qd, root, prev_action, t, seed, resets, obs, reward, done)``."""
+    idx = jnp.arange(q.shape[1], dtype=jnp.uint32)[None, :]
+    (q, qd, root, pa, t, resets), obs, reward, done = _step_core(
+        q, qd, root, prev_action, t, seed, resets, action, sensor, tgt,
+        masses, lengths, idx, chain=chain, task=task, substeps=substeps,
+        dt=dt, max_episode_len=max_episode_len)
+    return q, qd, root, pa, t, seed, resets, obs, reward, done
+
+
+def _mega_kernel(ts_ref, q_ref, qd_ref, root_ref, pa_ref, t_ref, seed_ref,
+                 resets_ref, act_ref, obs_ref, sensor_ref, tgt_ref, m_ref,
+                 l_ref, obuf_i, abuf_i, rbuf_i, dbuf_i,
+                 q_o, qd_o, root_o, pa_o, t_o, seed_o, resets_o, obs_o,
+                 rew_o, done_o, obuf_o, abuf_o, rbuf_o, dbuf_o, *,
+                 chain, task, substeps, dt, max_episode_len, block_envs):
+    del obuf_i, abuf_i, rbuf_i, dbuf_i        # aliased to outputs
+    i = pl.program_id(0)
+    step_t = ts_ref[0]
+    col = ts_ref[1] * ts_ref[2] + i * block_envs    # slot * N + block base
+    # experience write (the obs the policy acted on + the raw action)
+    obuf_o[pl.ds(step_t, 1), pl.ds(col, block_envs), :] = obs_ref[...][None]
+    abuf_o[pl.ds(step_t, 1), pl.ds(col, block_envs), :] = act_ref[...][None]
+    idx = jax.lax.broadcasted_iota(jnp.uint32,
+                                   (block_envs, q_ref.shape[1]), 1)
+    (q, qd, root, pa, t, resets), obs, reward, done = _step_core(
+        q_ref[...], qd_ref[...], root_ref[...], pa_ref[...], t_ref[...],
+        seed_ref[...], resets_ref[...], act_ref[...], sensor_ref[...],
+        tgt_ref[...], m_ref[...], l_ref[...], idx, chain=chain, task=task,
+        substeps=substeps, dt=dt, max_episode_len=max_episode_len)
+    done_f = done.astype(jnp.float32)
+    rbuf_o[pl.ds(step_t, 1), pl.ds(col, block_envs)] = reward[None]
+    dbuf_o[pl.ds(step_t, 1), pl.ds(col, block_envs)] = done_f[None]
+    q_o[...] = q
+    qd_o[...] = qd
+    root_o[...] = root
+    pa_o[...] = pa
+    t_o[...] = t
+    seed_o[...] = seed_ref[...]
+    resets_o[...] = resets
+    obs_o[...] = obs
+    rew_o[...] = reward
+    done_o[...] = done_f
+
+
+def env_mega_step(q, qd, root, prev_action, t, seed, resets, action, obs,
+                  bufs, step_t, slot, sensor, tgt, masses, lengths, *,
+                  chain, task, substeps, dt, max_episode_len,
+                  block_envs=None, interpret: bool = False):
+    """One fused env step over all N envs, grid over env blocks, writing
+    the experience row straight into the ring slot (see module docstring).
+
+    ``bufs`` is the ``{obs, actions, rewards, dones}`` subset of a
+    ``ChannelRing`` allocation; the four buffers are aliased input ->
+    output so untouched slots/rows survive.  Returns the ``mega_step``
+    tuple followed by the updated ring dict."""
+    N, J = q.shape
+    be = block_envs or min(N, 256)
+    assert N % be == 0, (N, be)
+    nb = N // be
+    grid = (nb,)
+    ts = jnp.stack([jnp.asarray(step_t, jnp.int32),
+                    jnp.asarray(slot, jnp.int32),
+                    jnp.int32(N)])
+
+    def blk(shape):
+        return pl.BlockSpec((be,) + shape, lambda i, ts: (i,) + (0,) * len(shape))
+
+    def full(shape):
+        return pl.BlockSpec(shape, lambda i, ts: (0,) * len(shape))
+
+    state_specs = [blk((J,)), blk((J,)), blk((6,)), blk((J,)),
+                   blk(()), blk(()), blk(())]
+    ring_keys = ("obs", "actions", "rewards", "dones")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=state_specs + [blk((J,)), blk((obs.shape[1],)),
+                                full(sensor.shape), full(tgt.shape),
+                                full(masses.shape), full(lengths.shape)]
+        + [full(bufs[c].shape) for c in ring_keys],
+        out_specs=state_specs + [blk((obs.shape[1],)), blk(()), blk(())]
+        + [full(bufs[c].shape) for c in ring_keys],
+    )
+    out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype)
+                 for x in (q, qd, root, prev_action, t, seed, resets, obs)]
+    out_shape += [jax.ShapeDtypeStruct((N,), jnp.float32),
+                  jax.ShapeDtypeStruct((N,), jnp.float32)]
+    out_shape += [jax.ShapeDtypeStruct(bufs[c].shape, bufs[c].dtype)
+                  for c in ring_keys]
+    # alias indices count the scalar-prefetch operand: ring inputs sit at
+    # 14..17 (ts + 13 arrays ahead of them), ring outputs at 10..13
+    out = pl.pallas_call(
+        functools.partial(_mega_kernel, chain=chain, task=task,
+                          substeps=substeps, dt=dt,
+                          max_episode_len=max_episode_len, block_envs=be),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases={14 + k: 10 + k for k in range(4)},
+        interpret=interpret,
+    )(ts, q, qd, root, prev_action, t, seed, resets, action, obs,
+      sensor, tgt, masses, lengths, *[bufs[c] for c in ring_keys])
+    return tuple(out[:10]) + (dict(zip(ring_keys, out[10:])),)
+
+
+def mega_step_ring(q, qd, root, prev_action, t, seed, resets, action,
+                   obs, bufs, step_t, slot, sensor, tgt, masses,
+                   lengths, *, chain, task, substeps, dt,
+                   max_episode_len):
+    """The identically fused XLA program (un-jitted, scan-composable):
+    the ``_step_core`` step + dynamic-update-slice ring writes.  Same
+    signature/contract as :func:`env_mega_step`; the off-TPU producer
+    path, called inside ``rl.rollout.collect_ring``'s jitted scan."""
+    N = q.shape[0]
+    col = jnp.asarray(slot, jnp.int32) * N
+    st = jnp.asarray(step_t, jnp.int32)
+    z = jnp.int32(0)
+    idx = jnp.arange(q.shape[1], dtype=jnp.uint32)[None, :]
+    (q2, qd2, root2, pa, t2, resets2), obs2, reward, done = _step_core(
+        q, qd, root, prev_action, t, seed, resets, action, sensor, tgt,
+        masses, lengths, idx, chain=chain, task=task, substeps=substeps,
+        dt=dt, max_episode_len=max_episode_len)
+    out = (q2, qd2, root2, pa, t2, seed, resets2, obs2)
+    bufs = {
+        "obs": jax.lax.dynamic_update_slice(bufs["obs"], obs[None],
+                                            (st, col, z)),
+        "actions": jax.lax.dynamic_update_slice(bufs["actions"],
+                                                action[None], (st, col, z)),
+        "rewards": jax.lax.dynamic_update_slice(bufs["rewards"],
+                                                reward[None], (st, col)),
+        "dones": jax.lax.dynamic_update_slice(
+            bufs["dones"], done.astype(jnp.float32)[None], (st, col)),
+    }
+    return out + (reward, done.astype(jnp.float32)) + (bufs,)
+
+
+env_mega_step_xla = functools.partial(
+    jax.jit, donate_argnums=(9,),
+    static_argnames=("chain", "task", "substeps", "dt",
+                     "max_episode_len"))(mega_step_ring)

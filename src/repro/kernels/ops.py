@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels.channel_pack import pack_channels as _pack
+from repro.kernels.env_megakernel import env_mega_step as _envmega
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.fused_policy_mlp import fused_policy_mlp as _mlp
 from repro.kernels.gae_scan import gae_scan as _gae
@@ -78,6 +79,27 @@ def nstep_returns(rewards, dones, bootstrap, *, gamma=0.99, interpret=None):
     Returns the (T, N) f32 return block."""
     interp = _interpret_default() if interpret is None else interpret
     return _nstep(rewards, dones, bootstrap, gamma=gamma, interpret=interp)
+
+
+@functools.partial(jax.jit, donate_argnums=(9,),
+                   static_argnames=("chain", "task", "substeps", "dt",
+                                    "max_episode_len", "block_envs",
+                                    "interpret"))
+def env_mega_step(q, qd, root, prev_action, t, seed, resets, action, obs,
+                  bufs, step_t, slot, sensor, tgt, masses, lengths, *,
+                  chain, task, substeps, dt, max_episode_len,
+                  block_envs=None, interpret=None):
+    """Fused env megakernel step (see env_megakernel.py): physics
+    substeps + reward + bookkeeping + predicated counter-PRNG auto-reset
+    + observation, writing obs/action/reward/done straight into the
+    donated ring-slot buffers.  Returns the new state arrays, next obs,
+    reward, done, and the updated ring dict."""
+    interp = _interpret_default() if interpret is None else interpret
+    return _envmega(q, qd, root, prev_action, t, seed, resets, action,
+                    obs, bufs, step_t, slot, sensor, tgt, masses, lengths,
+                    chain=chain, task=task, substeps=substeps, dt=dt,
+                    max_episode_len=max_episode_len, block_envs=block_envs,
+                    interpret=interp)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),

@@ -137,6 +137,65 @@ def pack_channels_ref(bufs, payloads, slot):
     }
 
 
+def env_mega_step_ref(q, qd, root, prev_action, t, seed, resets, action,
+                      obs, bufs, step_t, slot, sensor, tgt, masses,
+                      lengths, *, chain, task, substeps, dt,
+                      max_episode_len):
+    """Env-megakernel oracle: the *vmapped per-env* composition of
+    ``envs/physics.py::rollout_substeps`` + suite reward/bookkeeping with
+    a MATERIALIZED counter-based auto-reset (fresh state computed for
+    every env, selected by ``jnp.where``), plus functional ``.at[]`` ring
+    writes in the ``channel_pack`` slot layout.  ``step_t``/``slot`` are
+    concrete ints here.  Returns the ``env_mega_step`` tuple:
+    ``(q, qd, root, prev_action, t, seed, resets, obs, reward, done_f32,
+    bufs)``."""
+    from repro.envs.physics import (ChainParams, counter_normal,
+                                    rollout_substeps, tip_height)
+    params = ChainParams(masses, lengths, *chain)
+    w_fwd, w_up, w_ctrl, w_tgt, fall_z = task
+    J = q.shape[1]
+    root0 = jnp.array([0., 0., 0.6, 0., 0., 0.])
+
+    def one(q, qd, root, pa, t, seed, resets, a_raw):
+        a = jnp.clip(a_raw, -1.0, 1.0)
+        q, qd, root = rollout_substeps(q, qd, root, a, params, dt, substeps)
+        reward = (w_fwd * root[3]
+                  + w_up * jnp.cos(jnp.mean(q))
+                  - w_ctrl * jnp.sum(jnp.square(a))
+                  - w_tgt * jnp.mean(jnp.square(q - tgt))
+                  + 0.5)
+        t = t + 1
+        done = (t >= max_episode_len) | (root[2] < fall_z)
+        fresh_q = 0.1 * counter_normal(seed, resets + 1,
+                                       jnp.arange(J, dtype=jnp.uint32))
+        q = jnp.where(done, fresh_q, q)
+        qd = jnp.where(done, 0.0, qd)
+        root = jnp.where(done, root0, root)
+        pa = jnp.where(done, 0.0, a)
+        t = jnp.where(done, 0, t)
+        resets = jnp.where(done, resets + 1, resets)
+        tip = tip_height(q, root[2], params)
+        raw = jnp.concatenate([
+            root, jnp.sin(q), jnp.cos(q), qd, pa,
+            jnp.array([tip, root[2] - 0.6, jnp.mean(jnp.abs(qd))]),
+        ])
+        return q, qd, root, pa, t, resets, jnp.tanh(raw @ sensor), \
+            reward, done
+
+    q, qd, root, pa, t, resets, obs2, reward, done = jax.vmap(one)(
+        q, qd, root, prev_action, t, seed, resets, action)
+    N = q.shape[0]
+    col = slot * N
+    done_f = done.astype(jnp.float32)
+    bufs = {
+        "obs": bufs["obs"].at[step_t, col:col + N, :].set(obs),
+        "actions": bufs["actions"].at[step_t, col:col + N, :].set(action),
+        "rewards": bufs["rewards"].at[step_t, col:col + N].set(reward),
+        "dones": bufs["dones"].at[step_t, col:col + N].set(done_f),
+    }
+    return (q, qd, root, pa, t, seed, resets, obs2, reward, done_f, bufs)
+
+
 def mlstm_chunkwise_ref(q, k, v, log_i, log_f, chunk: int = 64):
     """q/k/v: (B, H, S, dh); log_i/log_f: (B, H, S).  Chunkwise-parallel
     stabilized mLSTM, zero initial state.  Returns h: (B, H, S, dh)."""

@@ -319,9 +319,15 @@ def make_online_controller(layout, num_env: int, controller_cfg=None,
 def make_async_runner(env, layout, overlap: bool = False,
                       online_controller: bool = False,
                       controller_cfg=None, communicator=None,
-                      calibrate: bool = False, **kwargs):
+                      calibrate: bool = False, megakernel: bool = False,
+                      **kwargs):
     """Async A3C driver over ``make_experience_pipeline(layout)``.
 
+    ``megakernel=True`` flips the env onto the fused megakernel step
+    path (``VectorEnv.with_megakernel``); on blocking (non-overlap)
+    pipelines the runner then produces experience straight into the
+    channel-ring slots via ``rl.rollout.collect_ring`` — the zero-copy
+    producer path.
     ``overlap=True`` runs the double-buffered serve-while-train pipeline;
     ``online_controller=True`` attaches an Algorithm-2 controller that
     re-plans the GMI layout between training epochs from live stats.
@@ -334,6 +340,8 @@ def make_async_runner(env, layout, overlap: bool = False,
     controller's strategy decisions re-score against the fitted
     bandwidths instead of the static defaults."""
     from repro.rl.a3c import AsyncRunner
+    if megakernel:
+        env = env.with_megakernel(True)
     if communicator is True or (calibrate and communicator is None):
         communicator = make_communicator(layout, calibrate=calibrate)
     elif calibrate and communicator is not None:

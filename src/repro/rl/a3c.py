@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.models.policy import entropy, log_prob, policy_apply
 from repro.optim import adam_update
-from repro.rl.rollout import collect
+from repro.rl.rollout import collect, collect_ring
 
 
 class Experience(NamedTuple):
@@ -258,6 +258,12 @@ class AsyncRunner:
         flush (the first round returns no losses)."""
         # round-duration telemetry feeds the controller's ladder
         t0 = time.perf_counter()  # repro: allow(host-sync-in-hot-path)
+        # megakernel envs on blocking rings produce experience straight
+        # into the ring slot (collect_ring): no staged Trajectory, no
+        # pack_channels re-copy.  Overlap rings stage references (zero
+        # producer-side device work already), so they keep actor_collect.
+        direct = (getattr(self.env, "megakernel", False)
+                  and not self.overlap and hasattr(self.pipe, "produce"))
         for a in self.serving_gmis:
             if self.fault_hook is not None:
                 # a kill here loses only THIS GMI's not-yet-collected
@@ -265,6 +271,22 @@ class AsyncRunner:
                 # survive into the recovery drain
                 self.fault_hook("serving", a)
             es, obs, k = self.actors[a]
+            if direct:
+                carry = {}
+
+                def producer(bufs, slot, _es=es, _obs=obs, _k=k):
+                    bufs, es2, obs2, boot, k2 = collect_ring(
+                        self.actor_params, self.env, _es, _obs, _k,
+                        self.num_steps, bufs, slot)
+                    carry["actor"] = [es2, obs2, k2]
+                    return bufs, boot, self.version
+
+                self.pipe.produce(a, self.num_steps, self.num_envs,
+                                  self.env.spec.obs_dim,
+                                  self.env.spec.act_dim, producer)
+                self.actors[a] = carry["actor"]
+                self.predictions += self.num_steps * self.num_envs
+                continue
             exp, es, obs, k = actor_collect(
                 self.actor_params, self.version, self.env, es, obs, k,
                 self.num_steps)

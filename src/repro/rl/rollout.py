@@ -4,9 +4,16 @@
 execute sequentially inside one jitted scan — the TCG (task-colocated GMI)
 template, where state/action sharing is an intra-instance memory access
 (COM = 0, Table 4).
+
+``collect_ring`` is its zero-copy producer sibling for megakernel envs:
+the same scan, but each step runs the fused env megakernel
+(``kernels/env_megakernel.py``) which writes obs/action/reward/done
+straight into the caller's ``ChannelRing`` slot buffers — no Trajectory
+is staged, nothing is re-packed by ``pack_channels``.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -46,6 +53,73 @@ def collect(policy_params, env, env_state, obs, key, num_steps: int,
     traj = Trajectory(*outs)
     _, _, last_value = policy_fn(policy_params, obs)
     return traj, env_state, obs, last_value, key
+
+
+@functools.partial(
+    jax.jit, donate_argnums=(4,),
+    static_argnames=("chain", "task", "substeps", "dt", "max_episode_len",
+                     "num_steps", "use_pallas", "interpret", "policy_fn"))
+def _collect_ring(params, state, obs, key, bufs, slot, sensor, tgt, masses,
+                  lengths, *, chain, task, substeps, dt, max_episode_len,
+                  num_steps, use_pallas, interpret, policy_fn):
+    from repro.envs.base import EnvState
+    from repro.kernels.env_megakernel import env_mega_step, mega_step_ring
+    slot_i = jnp.asarray(slot, jnp.int32)
+
+    def step(carry, step_t):
+        state, obs, key, bufs = carry
+        key, akey = jax.random.split(key)
+        mu, log_std, _ = policy_fn(params, obs)
+        action = sample_action(akey, mu, log_std)
+        if use_pallas:
+            out = env_mega_step(
+                *state, action, obs, bufs, step_t, slot_i, sensor, tgt,
+                masses, lengths, chain=chain, task=task, substeps=substeps,
+                dt=dt, max_episode_len=max_episode_len, interpret=interpret)
+        else:
+            out = mega_step_ring(
+                *state, action, obs, bufs, step_t, slot_i, sensor, tgt,
+                masses, lengths, chain=chain, task=task, substeps=substeps,
+                dt=dt, max_episode_len=max_episode_len)
+        q, qd, root, pa, t, seed, resets, next_obs = out[:8]
+        return (EnvState(q, qd, root, pa, t, seed, resets), next_obs, key,
+                out[10]), None
+
+    (state, obs, key, bufs), _ = jax.lax.scan(
+        step, (state, obs, key, bufs),
+        jnp.arange(num_steps, dtype=jnp.int32))
+    _, _, bootstrap = policy_fn(params, obs)
+    return bufs, state, obs, bootstrap, key
+
+
+def collect_ring(policy_params, env, env_state, obs, key, num_steps: int,
+                 bufs, slot, policy_fn=policy_apply, use_pallas=None):
+    """Zero-copy serving for ``VectorEnv(megakernel=True)``.
+
+    One jitted, donated scan: per step the policy acts, then the fused
+    env megakernel advances every env AND writes the experience row
+    (acted-on obs, raw action, reward, done) directly into ring slot
+    ``slot`` of the ``{obs, actions, rewards, dones}`` buffers ``bufs``
+    — the ``ChannelRing`` layout from ``kernels/channel_pack.py``.
+    ``bufs`` is donated; use the returned dict.  On TPU the step is the
+    Pallas megakernel; elsewhere the identically fused XLA program
+    (``mega_step_ring``), matching the ``pack_channels`` convention.
+
+    Returns ``(bufs, env_state, last_obs, bootstrap, key)`` where
+    ``bootstrap`` is the value of ``last_obs`` under ``policy_params``.
+    """
+    if not getattr(env, "megakernel", False):
+        raise ValueError("collect_ring needs VectorEnv(megakernel=True); "
+                         "use collect for the vmap path")
+    on_tpu = jax.default_backend() == "tpu"
+    use_pallas = on_tpu if use_pallas is None else use_pallas
+    mc = env.mega
+    return _collect_ring(
+        policy_params, env_state, obs, key, bufs, jnp.asarray(slot, jnp.int32),
+        mc.sensor, mc.tgt, mc.masses, mc.lengths, chain=mc.chain,
+        task=mc.task, substeps=env.spec.substeps, dt=env.spec.dt,
+        max_episode_len=env.spec.max_episode_len, num_steps=int(num_steps),
+        use_pallas=use_pallas, interpret=not on_tpu, policy_fn=policy_fn)
 
 
 def gae(rewards, values, dones, last_value, gamma: float = 0.99,

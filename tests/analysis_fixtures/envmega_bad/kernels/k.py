@@ -1,0 +1,22 @@
+"""Bad fixture: env-block megakernel whose index_map forgets the
+scalar-prefetch operand (arity = grid rank only), with no ref.py
+oracle anywhere."""
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def env_block_step(ts, q):
+    def body(ts_ref, q_ref, q_o):
+        q_o[...] = q_ref[...]
+
+    return pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((8,), lambda i: (i,))],  # drops ts
+            out_specs=pl.BlockSpec((8,), lambda i, ts: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+    )(ts, q)

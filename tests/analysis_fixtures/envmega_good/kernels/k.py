@@ -1,0 +1,33 @@
+"""Good fixture: env-megakernel idiom — scalar-prefetch grid over env
+blocks, ring buffers aliased input -> output, index_maps taking the
+grid index PLUS the prefetch operand."""
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def env_block_step(ts, q, ring):
+    def body(ts_ref, q_ref, ring_i, q_o, ring_o):
+        del ring_i
+        i = pl.program_id(0)
+        col = ts_ref[1] * ts_ref[2] + i * 8
+        ring_o[pl.ds(ts_ref[0], 1), pl.ds(col, 8)] = q_ref[...][None]
+        q_o[...] = q_ref[...]
+
+    def blk(i, ts):
+        return (i,)
+
+    return pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((8,), blk),
+                      pl.BlockSpec(ring.shape, lambda i, ts: (0, 0))],
+            out_specs=[pl.BlockSpec((8,), blk),
+                       pl.BlockSpec(ring.shape, lambda i, ts: (0, 0))],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype),
+                   jax.ShapeDtypeStruct(ring.shape, ring.dtype)],
+        input_output_aliases={2: 1},
+    )(ts, q, ring)

@@ -1,0 +1,7 @@
+"""Public wrapper: the parity test names this, not the kernel entry
+point — pairing resolves through the import alias."""
+from kernels.k import env_block_step as _ebs
+
+
+def env_block_step_op(ts, q, ring):
+    return _ebs(ts, q, ring)

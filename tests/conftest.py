@@ -13,3 +13,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def rng_key():
     import jax
     return jax.random.key(0)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compiled_executables_between_modules():
+    # The full suite compiles hundreds of distinct XLA programs; keeping
+    # every executable's JIT-code pages live for the whole run has
+    # segfaulted LLVM during late-suite compiles.  Modules don't share
+    # compilations, so dropping the caches at module boundaries bounds
+    # the live-code footprint at the cost of a re-trace.
+    yield
+    import jax
+    jax.clear_caches()

@@ -1,0 +1,329 @@
+"""Env megakernel: Pallas kernel vs oracle, reset-path equivalence, the
+zero-copy producer (collect_ring -> ChannelRing slot), and the
+multi-agent shared-world family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import (all_env_names, make_env, make_multi_agent_env)
+from repro.kernels import ops
+from repro.kernels.env_megakernel import mega_step_ring
+from repro.kernels.ref import env_mega_step_ref
+from repro.models.policy import init_policy, policy_apply
+from repro.rl.rollout import collect, collect_ring
+
+
+def _mega_args(env, num_envs, key=0):
+    state, obs = env.reset(jax.random.PRNGKey(key), num_envs=num_envs)
+    mc = env.mega
+    kw = dict(chain=mc.chain, task=mc.task, substeps=env.spec.substeps,
+              dt=env.spec.dt, max_episode_len=env.spec.max_episode_len)
+    return state, obs, mc, kw
+
+
+def _ring(T, S, N, spec, fill=0.0):
+    return {"obs": jnp.full((T, S * N, spec.obs_dim), fill),
+            "actions": jnp.full((T, S * N, spec.act_dim), fill),
+            "rewards": jnp.full((T, S * N), fill),
+            "dones": jnp.full((T, S * N), fill)}
+
+
+def test_env_mega_step_matches_env_mega_step_ref():
+    """Pallas megakernel (interpret) == vmapped-materialized oracle: all
+    ten step outputs AND the four ring-slot writes, with untouched ring
+    cells surviving the aliased call (slot 1 of 2, sentinel fill)."""
+    env = make_env("Ant")
+    N, T, S, slot, step_t = 8, 4, 2, 1, 2
+    state, obs, mc, kw = _mega_args(env, N)
+    # force a done inside the batch so the predicated reset runs
+    state = state._replace(
+        t=state.t.at[3].set(env.spec.max_episode_len - 1))
+    a = jax.random.uniform(jax.random.PRNGKey(5),
+                           (N, env.spec.act_dim), minval=-1.5, maxval=1.5)
+    # the ops wrapper DONATES the ring dict — two independent allocations
+    out_k = ops.env_mega_step(*state, a, obs, _ring(T, S, N, env.spec,
+                                                    fill=-7.0),
+                              step_t, slot, mc.sensor, mc.tgt, mc.masses,
+                              mc.lengths, block_envs=4, interpret=True,
+                              **kw)
+    out_r = env_mega_step_ref(*state, a, obs, _ring(T, S, N, env.spec,
+                                                    fill=-7.0),
+                              step_t, slot, mc.sensor, mc.tgt, mc.masses,
+                              mc.lengths, **kw)
+    for k, (xk, xr) in enumerate(zip(out_k[:10], out_r[:10])):
+        np.testing.assert_allclose(np.asarray(xk), np.asarray(xr),
+                                   atol=2e-5, err_msg=f"output {k}")
+    for c in ("obs", "actions", "rewards", "dones"):
+        np.testing.assert_allclose(np.asarray(out_k[10][c]),
+                                   np.asarray(out_r[10][c]),
+                                   atol=2e-5, err_msg=c)
+        # rows outside (step_t, slot) keep the sentinel: aliased ring
+        # buffers pass through, they are not re-zeroed
+        got = np.asarray(out_k[10][c])
+        assert (got[0] == -7.0).all() and (got[3] == -7.0).all()
+        assert (got[step_t, :N] == -7.0).all()
+
+
+@pytest.mark.parametrize("name", all_env_names())
+def test_mega_step_ring_matches_oracle_all_envs(name):
+    """The fused XLA sibling (shared _step_core) agrees with the oracle
+    for every suite env, including a forced auto-reset."""
+    env = make_env(name)
+    N, T = 6, 1
+    state, obs, mc, kw = _mega_args(env, N)
+    state = state._replace(
+        t=state.t.at[0].set(env.spec.max_episode_len - 1))
+    a = jax.random.uniform(jax.random.PRNGKey(3),
+                           (N, env.spec.act_dim), minval=-1, maxval=1)
+    bufs = _ring(T, 1, N, env.spec)
+    out_x = mega_step_ring(*state, a, obs, dict(bufs), 0, 0, mc.sensor,
+                           mc.tgt, mc.masses, mc.lengths, **kw)
+    out_r = env_mega_step_ref(*state, a, obs, dict(bufs), 0, 0, mc.sensor,
+                              mc.tgt, mc.masses, mc.lengths, **kw)
+    for k, (xx, xr) in enumerate(zip(out_x[:10], out_r[:10])):
+        np.testing.assert_allclose(np.asarray(xx), np.asarray(xr),
+                                   atol=2e-5, err_msg=f"{name} output {k}")
+    for c in ("obs", "actions", "rewards", "dones"):
+        np.testing.assert_allclose(np.asarray(out_x[10][c]),
+                                   np.asarray(out_r[10][c]), atol=2e-5)
+
+
+def test_vector_env_megakernel_matches_vmap():
+    """VectorEnv(megakernel=True).step tracks the vmap path step for
+    step across auto-resets (shared counter-based PRNG)."""
+    env_v = make_env("Humanoid")
+    env_m = env_v.with_megakernel(True)
+    sv, ov = env_v.reset(jax.random.PRNGKey(2), num_envs=8)
+    sm, om = env_m.reset(jax.random.PRNGKey(2), num_envs=8)
+    np.testing.assert_array_equal(np.asarray(ov), np.asarray(om))
+    key = jax.random.PRNGKey(9)
+    for _ in range(12):
+        key, k = jax.random.split(key)
+        a = jax.random.uniform(k, (8, env_v.spec.act_dim),
+                               minval=-1, maxval=1)
+        sv, ov, rv, dv = env_v.step(sv, a)
+        sm, om, rm, dm = env_m.step(sm, a)
+        np.testing.assert_allclose(np.asarray(ov), np.asarray(om),
+                                   atol=2e-5)
+        np.testing.assert_allclose(np.asarray(rv), np.asarray(rm),
+                                   atol=2e-4)
+        np.testing.assert_array_equal(np.asarray(dv) != 0,
+                                      np.asarray(dm) != 0)
+
+
+@pytest.mark.parametrize("name", all_env_names())
+@pytest.mark.parametrize("megakernel", [False, True])
+def test_post_done_state_equals_fresh_reset(name, megakernel):
+    """Property: the state an env lands in after ``done`` is EXACTLY the
+    ``reset_fn(seed, resets + 1)`` state — on both step paths, for every
+    suite env (the counter-based reset contract)."""
+    env = make_env(name, megakernel=megakernel)
+    N = 4
+    state, _ = env.reset(jax.random.PRNGKey(11), num_envs=N)
+    state = state._replace(
+        t=jnp.full((N,), env.spec.max_episode_len - 1, jnp.int32))
+    a = jax.random.uniform(jax.random.PRNGKey(4),
+                           (N, env.spec.act_dim), minval=-1, maxval=1)
+    state2, _, _, done = env.step(state, a)
+    assert bool(jnp.all(done != 0))
+    fresh = jax.vmap(env._reset_fn)(state.seed, state.resets + 1)
+    for leaf_got, leaf_want, nm in zip(
+            (state2.q, state2.qd, state2.root, state2.prev_action,
+             state2.t, state2.resets),
+            (fresh.q, fresh.qd, fresh.root, fresh.prev_action,
+             fresh.t, fresh.resets),
+            ("q", "qd", "root", "prev_action", "t", "resets")):
+        np.testing.assert_array_equal(np.asarray(leaf_got),
+                                      np.asarray(leaf_want), err_msg=nm)
+
+
+@pytest.mark.parametrize("name", all_env_names())
+def test_never_done_trajectory_invariant_to_reset_style(name):
+    """When no env ever terminates, the predicated reset (megakernel:
+    fresh state only under the done predicate) and the materialized
+    reset (vmap: fresh state computed every step, discarded by where)
+    must be observationally indistinguishable."""
+    env_v = make_env(name)
+    env_m = env_v.with_megakernel(True)
+    sv, _ = env_v.reset(jax.random.PRNGKey(0), num_envs=4)
+    sm, _ = env_m.reset(jax.random.PRNGKey(0), num_envs=4)
+    a = jnp.zeros((4, env_v.spec.act_dim))      # calm actions: no falls
+    for _ in range(5):
+        sv, ov, rv, dv = env_v.step(sv, a)
+        sm, om, rm, dm = env_m.step(sm, a)
+        assert not bool(jnp.any(dv)) and not bool(jnp.any(dm))
+        np.testing.assert_allclose(np.asarray(ov), np.asarray(om),
+                                   atol=2e-5)
+        np.testing.assert_allclose(np.asarray(rv), np.asarray(rm),
+                                   atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sv.q), np.asarray(sm.q),
+                               atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(sv.resets),
+                                  np.asarray(sm.resets))
+
+
+def test_collect_ring_matches_collect():
+    """The zero-copy producer writes exactly the Trajectory the staged
+    path stages: ring slot contents == collect's traj, bootstrap ==
+    last_value, same final state."""
+    ne, T, S, slot = 8, 6, 2, 1
+    env_v = make_env("Ant")
+    env_m = env_v.with_megakernel(True)
+    spec = env_v.spec
+    params = init_policy(jax.random.key(0), spec.policy_dims)
+    sv, ov = env_v.reset(jax.random.PRNGKey(1), num_envs=ne)
+    sm, om = env_m.reset(jax.random.PRNGKey(1), num_envs=ne)
+    key = jax.random.PRNGKey(2)
+    traj, sv, ov, last_value, _ = collect(params, env_v, sv, ov, key, T)
+    bufs = _ring(T, S, ne, spec, fill=-3.0)
+    bufs, sm, om, boot, _ = collect_ring(params, env_m, sm, om, key, T,
+                                         bufs, slot)
+    lo, hi = slot * ne, (slot + 1) * ne
+    np.testing.assert_allclose(np.asarray(bufs["obs"][:, lo:hi]),
+                               np.asarray(traj.obs), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(bufs["actions"][:, lo:hi]),
+                               np.asarray(traj.actions), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(bufs["rewards"][:, lo:hi]),
+                               np.asarray(traj.rewards), atol=2e-4)
+    np.testing.assert_array_equal(np.asarray(bufs["dones"][:, lo:hi]),
+                                  np.asarray(traj.dones))
+    # the OTHER slot keeps its sentinel: the producer wrote only its slot
+    assert (np.asarray(bufs["obs"][:, :ne]) == -3.0).all()
+    np.testing.assert_allclose(np.asarray(boot), np.asarray(last_value),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(om), np.asarray(ov), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(sm.q), np.asarray(sv.q),
+                               atol=2e-5)
+
+
+def test_collect_ring_rejects_vmap_env():
+    env = make_env("Ant")
+    with pytest.raises(ValueError, match="megakernel"):
+        collect_ring(None, env, None, None, None, 2, {}, 0)
+
+
+def test_pipeline_produce_delivers_and_spills():
+    """MultiChannelPipeline.produce: the producer writes the ring's own
+    slot storage; flush delivers it like a pushed Experience, and a full
+    ring spills (lossless) instead of dropping."""
+    from repro.core.channels import MultiChannelPipeline
+    ne, T = 4, 3
+    env = make_env("BallBalance", megakernel=True)
+    spec = env.spec
+    params = init_policy(jax.random.key(0), spec.policy_dims)
+    pipe = MultiChannelPipeline([0], [1], ring_slots=1, use_pallas=False)
+
+    state, obs = env.reset(jax.random.PRNGKey(0), num_envs=ne)
+    hold = {"s": state, "o": obs, "k": jax.random.PRNGKey(7)}
+
+    def producer(bufs, slot):
+        bufs, hold["s"], hold["o"], boot, hold["k"] = collect_ring(
+            params, env, hold["s"], hold["o"], hold["k"], T, bufs, slot)
+        return bufs, boot, 5
+
+    pipe.produce(0, T, ne, spec.obs_dim, spec.act_dim, producer)
+    pipe.produce(0, T, ne, spec.obs_dim, spec.act_dim, producer)
+    assert pipe.spill_count == 1            # slot 1 of 1 was still unread
+    out = pipe.flush()
+    exps = [e for batch in out.values() for e in batch]
+    total = sum(int(e.rewards.size) for e in exps)
+    assert total == 2 * T * ne              # both slots delivered
+    for e in exps:
+        assert e.obs.shape[-1] == spec.obs_dim
+        assert int(e.actor_version.max()) == 5
+        assert bool(jnp.all(jnp.isfinite(e.obs)))
+
+
+def test_pipeline_produce_rejects_overlap():
+    from repro.core.channels import MultiChannelPipeline
+    pipe = MultiChannelPipeline([0], [1], overlap=True)
+    with pytest.raises(ValueError, match="blocking"):
+        pipe.produce(0, 2, 2, 3, 2, lambda bufs, slot: (bufs, 0, 0))
+
+
+def test_async_runner_megakernel_matches_vmap_runner():
+    """A megakernel AsyncRunner (direct-produce rounds) trains the same
+    as the staged vmap runner: same losses, same sample accounting."""
+    from repro.rl.a3c import AsyncRunner
+    kw = dict(serving_gmis=[0], trainer_gmis=[1], num_envs=8,
+              num_steps=4, seed=3)
+    env = make_env("Ant")
+    r_v = AsyncRunner(env, **kw)
+    r_m = AsyncRunner(env.with_megakernel(True), **kw)
+    for _ in range(2):
+        ls_v, _ = r_v.round()
+        ls_m, _ = r_m.round()
+        np.testing.assert_allclose(np.asarray(ls_m), np.asarray(ls_v),
+                                   atol=1e-3)
+    assert r_m.predictions == r_v.predictions == 2 * 4 * 8
+    assert r_m.trained_samples == r_v.trained_samples
+
+
+def test_make_async_runner_megakernel_flag():
+    from repro.core.placement import plan_async
+    from repro.launch.steps import make_async_runner
+    layout = plan_async(2, 1, 2, devices=list(range(4)),
+                        devices_per_gpu=2)
+    env = make_env("Ant")
+    runner = make_async_runner(env, layout, megakernel=True, num_envs=8,
+                               num_steps=2)
+    assert runner.env.megakernel
+    runner.round()
+    assert runner.predictions == 2 * 8 * len(layout.serving_gmis)
+
+
+# ---------------------------------------------------- multi-agent family --
+def test_multi_agent_shapes_and_policy_compat():
+    K = 3
+    env = make_multi_agent_env("Anymal", num_agents=K)
+    assert env.spec.obs_dim == make_env("Anymal").spec.obs_dim
+    state, obs = env.reset(jax.random.PRNGKey(0), num_envs=2 * K)
+    assert obs.shape == (2 * K, env.spec.obs_dim)
+    params = init_policy(jax.random.key(0), env.spec.policy_dims)
+    mu, log_std, value = policy_apply(params, obs)
+    assert mu.shape == (2 * K, env.spec.act_dim)
+    a = jnp.zeros((2 * K, env.spec.act_dim))
+    state, obs, rew, done = env.step(state, a)
+    assert obs.shape == (2 * K, env.spec.obs_dim)
+    assert rew.shape == (2 * K,) and done.shape == (2 * K,)
+    assert bool(jnp.all(jnp.isfinite(obs)))
+
+
+def test_multi_agent_world_shared_done_and_reset():
+    K = 2
+    env = make_multi_agent_env("Ant", num_agents=K)
+    state, _ = env.reset(jax.random.PRNGKey(1), num_envs=4 * K)
+    state = state._replace(
+        t=jnp.full((4,), env.spec.max_episode_len - 1, jnp.int32))
+    a = jnp.zeros((4 * K, env.spec.act_dim))
+    state2, _, _, done = env.step(state, a)
+    d = np.asarray(done).reshape(4, K)
+    assert (d != 0).all()                   # every agent of every world
+    assert int(state2.t.max()) == 0         # worlds reset together
+
+
+def test_multi_agent_cross_agent_coupling():
+    """Agent 0's action reaches agent 1's observation through the shared
+    chain dynamics — one simulation, not K independent ones."""
+    K = 2
+    env = make_multi_agent_env("Ant", num_agents=K)
+    state, _ = env.reset(jax.random.PRNGKey(2), num_envs=K)
+    a0 = jnp.zeros((K, env.spec.act_dim))
+    a1 = a0.at[0].set(1.0)                  # only agent 0 acts
+    o_base = o_kick = None
+    s_b, s_k = state, state
+    for _ in range(3):                      # let coupling propagate
+        s_b, o_base, _, _ = env.step(s_b, a0)
+        s_k, o_kick, _, _ = env.step(s_k, a1)
+    diff = float(jnp.max(jnp.abs(o_kick[1] - o_base[1])))
+    assert diff > 1e-4, "agent 0's action never reached agent 1's obs"
+
+
+def test_multi_agent_divisibility_and_megakernel_guard():
+    env = make_multi_agent_env("Ant", num_agents=3)
+    with pytest.raises(ValueError, match="multiple"):
+        env.reset(jax.random.PRNGKey(0), num_envs=4)
+    with pytest.raises(ValueError, match="vmap-only"):
+        env.with_megakernel(True)
+    assert env.with_megakernel(False) is env

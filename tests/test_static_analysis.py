@@ -124,6 +124,26 @@ def test_kernel_good_pairs_through_ops_aliases():
     assert found == []
 
 
+def test_envmega_bad_fires_prefetch_arity_over_env_block_grid():
+    # the env-megakernel idiom: rank-1 env-block grid + 1 scalar-prefetch
+    # operand — an index_map that forgets the prefetch operand fires,
+    # and so does the missing ref.py oracle
+    root = os.path.join(FIX, "envmega_bad")
+    found = run_analysis([root], root=root, rules=[KernelOracleRule()])
+    msgs = [f.message for f in found]
+    assert any("no ref.py oracle" in m for m in msgs)
+    assert any("index_map takes 1 args" in m
+               and "1 scalar-prefetch" in m
+               and "expected 2" in m for m in msgs)
+    assert len(found) == 2
+
+
+def test_envmega_good_aliased_ring_kernel_stays_quiet():
+    root = os.path.join(FIX, "envmega_good")
+    found = run_analysis([root], root=root, rules=[KernelOracleRule()])
+    assert found == []
+
+
 # ----------------------------------------------------------- fault-kind ----
 def test_fault_bad_fires_for_unhandled_kind():
     root = os.path.join(FIX, "fault_bad")
